@@ -1,0 +1,55 @@
+"""Paper Figure 4.2: model predictions vs measured SpMV communication.
+
+For the audikw_1-analogue matrix, compares each strategy's *predicted* time
+(Table 6 composites on the TPU registry, byte counts from the actual
+exchange plan) against the *measured* exchange time on the 8-device host
+mesh.  The paper's validation criterion -- node-aware model predictions form
+a tight upper bound of the same order of magnitude, standard's prediction is
+loose -- is what we report (absolute CPU-host numbers differ from TPU).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_with_devices
+
+CODE = """
+import time, numpy as np
+from repro.comm.topology import PodTopology
+from repro.core import advise, Strategy, Transport
+from repro.sparse import audikw_like, build, partition_csr
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+A = audikw_like(128, rng)
+part = partition_csr(A, topo)
+adv = advise(part.pattern.to_comm_pattern(), machine="tpu_v5e_pod", include_two_step_one=False)
+pred = {
+    "standard": adv.time_for(Strategy.STANDARD, Transport.STAGED_HOST),
+    "two_step": adv.time_for(Strategy.TWO_STEP, Transport.STAGED_HOST),
+    "three_step": adv.time_for(Strategy.THREE_STEP, Transport.STAGED_HOST),
+    "split": adv.time_for(Strategy.SPLIT_MD, Transport.STAGED_HOST),
+}
+v = rng.normal(size=(A.n,)).astype(np.float32).reshape(topo.nranks, -1)
+for strat in pred:
+    sp = build(A, topo, strategy=strat, use_pallas=False)
+    sp.exchange(v).block_until_ready()
+    ts = []
+    for _ in range(10):
+        t0 = time.perf_counter(); sp.exchange(v).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    meas = ts[len(ts)//2]
+    print(f"RESULT,fig4.2/audikw_like/{strat},{meas*1e6:.1f},predicted_tpu_us={pred[strat]*1e6:.2f}")
+"""
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    out = run_with_devices(CODE, devices=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT,"):
+            print(line[len("RESULT,"):])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Figure 4.3: modeled strategy performance across scenarios.
+
+For 32/256 inter-node messages x 4/16 destination nodes x message sizes
+2^4..2^20 B, evaluates every Table 6 composite on the Lassen registry (exact
+reproduction of the paper's prediction curves) and on the TPU registry (the
+adapted machine), including the 25%-duplicate-data variants.  Emits the
+winning strategy per scenario -- the paper's headline observations are
+asserted in tests/test_perfmodel.py.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import Strategy, Transport, advise, figure43_pattern
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for machine in ("lassen", "tpu_v5e_pod"):
+        for nmsgs in (32, 256):
+            for nodes in (4, 16):
+                for dup in (0.0, 0.25):
+                    wins = {}
+                    for logs in range(4, 21):
+                        size = 2**logs
+                        pat = figure43_pattern(size, nmsgs, nodes)
+                        adv = advise(pat, machine=machine, duplicate_fraction=dup)
+                        best = adv.best
+                        emit(
+                            f"fig4.3/{machine}/m{nmsgs}/n{nodes}/dup{int(dup*100)}/s{size}",
+                            best.predicted_time * 1e6,
+                            best.key,
+                        )
+                        wins[best.key] = wins.get(best.key, 0) + 1
+                    top = max(wins, key=wins.get)
+                    emit(
+                        f"fig4.3/{machine}/m{nmsgs}/n{nodes}/dup{int(dup*100)}/winner",
+                        0.0,
+                        f"{top}({wins[top]}of17)",
+                    )
+
+
+if __name__ == "__main__":
+    main()

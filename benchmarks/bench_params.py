@@ -1,0 +1,71 @@
+"""Paper Tables 2-4: path parameter tables + the fitting machinery.
+
+Emits (a) the Lassen measured parameters verbatim (the paper's tables, used
+by every model-reproduction benchmark), (b) the TPU-adapted registry, and
+(c) a demonstration of the BenchPress-style least-squares alpha/beta fit on
+*this* host: ping-pong style buffer copies at varying sizes, fitted with the
+same estimator the paper uses -- showing the measurement pipeline works even
+though this container has no fabric to measure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import LASSEN, TPU_V5E_POD, Locality, Protocol, Space
+
+
+def fit_postal(sizes: np.ndarray, times_s: np.ndarray) -> tuple:
+    """Least-squares fit of T = alpha + beta * s (the paper's estimator)."""
+    A = np.stack([np.ones_like(sizes, dtype=np.float64), sizes.astype(np.float64)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, times_s.astype(np.float64), rcond=None)
+    return float(coef[0]), float(coef[1])
+
+
+def table_2_3_4() -> None:
+    for machine in (LASSEN, TPU_V5E_POD):
+        for (space, proto, loc), p in sorted(
+            machine.paths.items(), key=lambda kv: (kv[0][0].value, kv[0][1].value, kv[0][2].value)
+        ):
+            emit(
+                f"table2/{machine.name}/{space.value}/{proto.value}/{loc.value}",
+                p.alpha * 1e6,
+                f"beta={p.beta:.3e}s_per_B",
+            )
+        for nproc, cp in sorted(machine.copy.items()):
+            emit(f"table3/{machine.name}/copy_{nproc}proc/h2d", cp.h2d.alpha * 1e6,
+                 f"beta={cp.h2d.beta:.3e}")
+            emit(f"table3/{machine.name}/copy_{nproc}proc/d2h", cp.d2h.alpha * 1e6,
+                 f"beta={cp.d2h.beta:.3e}")
+        emit(f"table4/{machine.name}/rn_inv", machine.rn_inv * 1e6, "s_per_B*1e6")
+
+
+def host_pingpong_fit() -> None:
+    """Measure host memcpy 'ping-pong' and fit alpha/beta (demonstrates the
+    paper's parameter-measurement methodology end to end)."""
+    import jax.numpy as jnp
+    import jax
+
+    sizes = np.array([2**k for k in range(10, 22)])
+    med = []
+    for s in sizes:
+        x = jnp.zeros((int(s) // 4,), jnp.float32)
+
+        def copy():
+            jnp.array(x, copy=True).block_until_ready()
+
+        med.append(time_fn(copy, warmup=1, iters=5) * 1e-6)
+    alpha, beta = fit_postal(sizes, np.array(med))
+    emit("fit/host_copy/alpha_us", alpha * 1e6, f"beta={beta:.3e}s_per_B "
+         f"bw={1e-9/max(beta,1e-30):.2f}GB_s")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table_2_3_4()
+    host_pingpong_fit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips * 197 TF/s)
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = per-chip collective bytes / (4 links * 50 GB/s)
+
+HLO_FLOPs / HLO_bytes from ``cost_analysis()`` are whole-program totals;
+collective bytes are per-chip (summed operand sizes, trip-count weighted),
+so the collective term divides by per-chip link bandwidth directly.
+Reports the dominant term, MODEL_FLOPS/HLO_FLOPs utility ratio, and the
+roofline fraction = model-flops-time / max(term).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import ARTIFACTS, emit
+from repro.core import TPU_V5E_HBM_BW, TPU_V5E_ICI_LINK_BW, TPU_V5E_PEAK_BF16_FLOPS
+
+ICI_LINKS_PER_CHIP = 4
+
+
+def load_records(mesh: str = "single") -> List[Dict]:
+    d = os.path.join(ARTIFACTS, "dryrun")
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(f"__{mesh}.json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def terms(rec: Dict) -> Dict[str, float]:
+    chips = rec["chips"]
+    compute = rec["hlo_flops"] / (chips * TPU_V5E_PEAK_BF16_FLOPS)
+    memory = rec["hlo_bytes"] / (chips * TPU_V5E_HBM_BW)
+    collective = rec["collective_bytes_per_chip"] / (
+        ICI_LINKS_PER_CHIP * TPU_V5E_ICI_LINK_BW
+    )
+    dominant = max(("compute", compute), ("memory", memory), ("collective", collective),
+                   key=lambda kv: kv[1])
+    ideal = rec["model_flops"] / (chips * TPU_V5E_PEAK_BF16_FLOPS)
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant[0],
+        "model_flops_ratio": rec["model_flops"] / max(rec["hlo_flops"], 1.0),
+        "roofline_fraction": ideal / max(bound, 1e-30),
+    }
+
+
+def main(mesh: str = "single") -> None:
+    print("name,us_per_call,derived")
+    recs = load_records(mesh)
+    if not recs:
+        print(f"# no dry-run artifacts for mesh={mesh}; run repro.launch.dryrun first")
+        return
+    for rec in recs:
+        key = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if "skipped" in rec:
+            emit(key, 0.0, "skipped")
+            continue
+        if "error" in rec:
+            emit(key, 0.0, "ERROR")
+            continue
+        t = terms(rec)
+        emit(
+            key,
+            max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+            f"dom={t['dominant']} comp={t['compute_s']:.2e} mem={t['memory_s']:.2e} "
+            f"coll={t['collective_s']:.2e} util={t['model_flops_ratio']:.2f} "
+            f"roofline_frac={t['roofline_fraction']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,53 @@
+"""Paper Figure 5.1: SpMV communication benchmark per strategy per matrix.
+
+Runs the distributed SpMV exchange for each synthetic SuiteSparse-analogue
+matrix under every strategy on an 8-host-device mesh (2 pods x 4), timing the
+exchange and reporting wire bytes (intra/inter-pod) plus the advisor's pick.
+Absolute times are CPU-host numbers; the *ranking* and byte counts are the
+reproduction target (DESIGN.md section 10).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_with_devices
+
+CODE = """
+import time, numpy as np
+from repro.comm.topology import PodTopology
+from repro.sparse import audikw_like, thermal_like, random_block, build
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+mats = {
+    "audikw_like": audikw_like(128, rng),
+    "thermal_like": thermal_like(256, rng),
+    "random_block": random_block(128, 0.05, rng),
+}
+for name, A in mats.items():
+    v = rng.normal(size=(A.n,)).astype(np.float32)
+    vr = v.reshape(topo.nranks, -1)
+    for strat in ("standard", "two_step", "three_step", "split"):
+        sp = build(A, topo, strategy=strat, use_pallas=False)
+        out = sp(vr); out.block_until_ready()
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter(); sp.exchange(vr).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        wi, we = sp.wire_bytes
+        print(f"RESULT,fig5.1/{name}/{strat},{ts[len(ts)//2]*1e6:.1f},intra={wi}B inter={we}B")
+    adv = build(A, topo, strategy="auto", use_pallas=False)
+    print(f"RESULT,fig5.1/{name}/advisor,0.0,chose={adv.strategy}")
+"""
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    out = run_with_devices(CODE, devices=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT,"):
+            print(line[len("RESULT,"):])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run params     # one section
+
+Sections:
+  params      -- paper Tables 2/3/4 (+ least-squares fit demo)
+  modeled     -- paper Figure 4.3 (strategy predictions)
+  validation  -- paper Figure 4.2 (model vs measured SpMV exchange)
+  spmv        -- paper Figure 5.1 (SpMV strategies on 8 host devices)
+  kernels     -- Pallas kernel micro-benchmarks
+  roofline    -- deliverable (g): terms from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_kernels,
+        bench_model_validation,
+        bench_modeled_performance,
+        bench_params,
+        bench_roofline,
+        bench_spmv,
+    )
+
+    sections = {
+        "params": bench_params.main,
+        "modeled": bench_modeled_performance.main,
+        "validation": bench_model_validation.main,
+        "spmv": bench_spmv.main,
+        "kernels": bench_kernels.main,
+        "roofline": bench_roofline.main,
+    }
+    wanted = sys.argv[1:] or list(sections)
+    failures = []
+    for name in wanted:
+        print(f"\n### section: {name}")
+        try:
+            sections[name]()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"### section {name} FAILED: {e}")
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-32b --batch 4
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.launch.train import tiny
+    from repro.models import LMModel
+
+    cfg = tiny(get_config(args.arch))
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    ctx = (
+        jnp.asarray(rng.normal(size=(args.batch, model.ctx_len(), cfg.d_model)), jnp.float32)
+        if model.ctx_len()
+        else None
+    )
+    max_len = args.prompt_len + args.gen
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, prompts, ctx)
+    grown = model.init_cache(args.batch, max_len, model.dtype)
+    cache = jax.tree.map(
+        lambda dst, src: dst.at[tuple(slice(0, s) for s in src.shape)].set(src.astype(dst.dtype))
+        if dst.shape != src.shape else src.astype(dst.dtype),
+        grown, cache,
+    )
+    t1 = time.time()
+    decode = jax.jit(model.decode_step)
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    toks = [token]
+    for t in range(args.gen - 1):
+        logits, cache = decode(params, token, cache, jnp.int32(args.prompt_len + t))
+        token = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        toks.append(token)
+    jax.block_until_ready(token)
+    t2 = time.time()
+    gen = np.asarray(jnp.concatenate(toks, axis=1))
+    tput = args.batch * (args.gen - 1) / (t2 - t1)
+    print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} in {t1-t0:.2f}s; "
+          f"decode {args.gen} steps in {t2-t1:.2f}s ({tput:.1f} tok/s incl. 1st-step compile)")
+    print("sample:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

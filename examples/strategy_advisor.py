@@ -1,0 +1,42 @@
+"""Reproduce the paper's Figure 4.3 analysis as a planning tool.
+
+Given a scenario (message count, destination nodes, message sizes), print the
+per-size strategy ranking on both machine registries -- the exact exercise of
+paper §4.6, usable for planning a real deployment's exchange strategy.
+
+    PYTHONPATH=src python examples/strategy_advisor.py --messages 256 --nodes 16
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--messages", type=int, default=256)
+    ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument("--machine", default="lassen", choices=("lassen", "tpu_v5e_pod"))
+    ap.add_argument("--duplicate", type=float, default=0.0,
+                    help="fraction of duplicate data removable by node-aware schemes")
+    args = ap.parse_args()
+
+    from repro.core import advise, figure43_pattern
+
+    print(f"machine={args.machine}  inter-node messages={args.messages}  "
+          f"destination nodes={args.nodes}  duplicates={args.duplicate:.0%}\n")
+    print(f"{'msg size':>10} | best strategy             | predicted | runner-up")
+    print("-" * 78)
+    for logs in range(4, 21):
+        size = 2 ** logs
+        pat = figure43_pattern(size, args.messages, args.nodes)
+        adv = advise(pat, machine=args.machine, duplicate_fraction=args.duplicate)
+        b, r = adv.ranked[0], adv.ranked[1]
+        print(f"{size:>10} | {b.key:<25} | {b.predicted_time:.3e}s | "
+              f"{r.key} ({r.predicted_time:.2e}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Mesh-independent checkpointing with atomic commits and an async writer.
+
+Checkpoints store every leaf as a *full logical array* (npz shards keyed by
+flattened tree path) plus a JSON manifest (step, data cursor, rng, config
+fingerprint).  Restoring onto a different mesh / device count is therefore
+trivial -- the restore path re-``device_put``s each array with the new
+sharding (elastic resharding, tested in CI).  Commits are atomic
+(write to ``<dir>.tmp`` then ``os.replace``), so a crash mid-save never
+corrupts the latest checkpoint; the async writer overlaps serialization with
+the next training steps and is joined before the next save (bounded memory).
+"""
+
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "load_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,58 @@
+"""Strategy execution layer: irregular exchanges and pod-aware collectives."""
+
+from repro.comm.topology import (
+    LOCAL_AXIS,
+    POD_AXIS,
+    WORLD_AXES,
+    PodTopology,
+    make_exchange_mesh,
+)
+from repro.comm.exchange import (
+    ExchangePattern,
+    Need,
+    StagePlan,
+    plan,
+    plan_split,
+    plan_standard,
+    plan_three_step,
+    plan_two_step,
+    random_pattern,
+    simulate,
+)
+from repro.comm.strategies import STRATEGY_NAMES, IrregularExchange
+from repro.comm.hierarchical import (
+    all_gather_hierarchical,
+    all_to_all_hierarchical,
+    init_residuals,
+    psum_flat,
+    psum_hierarchical,
+    sync_grad_tree,
+)
+from repro.comm.compression import Compressor
+
+__all__ = [
+    "LOCAL_AXIS",
+    "POD_AXIS",
+    "WORLD_AXES",
+    "PodTopology",
+    "make_exchange_mesh",
+    "ExchangePattern",
+    "Need",
+    "StagePlan",
+    "plan",
+    "plan_split",
+    "plan_standard",
+    "plan_three_step",
+    "plan_two_step",
+    "random_pattern",
+    "simulate",
+    "STRATEGY_NAMES",
+    "IrregularExchange",
+    "all_gather_hierarchical",
+    "all_to_all_hierarchical",
+    "init_residuals",
+    "psum_flat",
+    "psum_hierarchical",
+    "sync_grad_tree",
+    "Compressor",
+]

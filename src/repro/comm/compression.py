@@ -1,0 +1,44 @@
+"""Gradient compression for the inter-pod (DCI) hop.
+
+int8 linear quantization with a pod-agreed scale: every pod computes the max
+magnitude of its shard, ``pmax`` over the outer axis agrees on one scale, the
+int8 payload crosses DCI (4x fewer bytes than fp32), and the sum is
+dequantized on arrival.  Error feedback (the residual returned by
+``psum_hierarchical``) carries the quantization error into the next step so
+the scheme stays convergent (Karimireddy et al., 2019 -- standard practice;
+not from the reproduced paper, recorded as a beyond-paper optimization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """int8 quantizer with a cross-pod shared scale."""
+
+    bits: int = 8
+
+    @property
+    def qmax(self) -> float:
+        return float(2 ** (self.bits - 1) - 1)
+
+    def compress(self, x: jnp.ndarray, outer_axis: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Quantize ``x`` with a scale agreed over ``outer_axis`` via pmax."""
+        amax = jnp.max(jnp.abs(x))
+        amax = jax.lax.pmax(amax, outer_axis)
+        scale = jnp.maximum(amax / self.qmax, jnp.finfo(jnp.float32).tiny)
+        q = jnp.clip(jnp.round(x / scale), -self.qmax, self.qmax).astype(jnp.int8)
+        return q, scale
+
+    def decompress(self, q_sum: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+        return q_sum.astype(jnp.float32) * scale
+
+    def wire_bytes(self, x: jnp.ndarray) -> int:
+        """Bytes this leaf puts on the DCI per hop (vs 4*size uncompressed)."""
+        return x.size * self.bits // 8

@@ -1,0 +1,710 @@
+"""Setup-time planning for irregular element exchanges.
+
+This is the executable heart of the paper on TPU: an irregular
+"who needs which elements from whom" pattern (e.g. the SpMV halo, MoE token
+routing) is compiled, at setup time, into a static **stage program** -- a
+sequence of gathers and mesh collectives -- one program per node-aware
+strategy (Standard / 3-Step / 2-Step / Split).  The stage program is then
+executed by :mod:`repro.comm.strategies` under ``shard_map``.
+
+Planning is *verified by construction*: a symbolic token simulator runs the
+same stage semantics over ``(owner, element)`` tokens, so the planner can
+resolve "where does token t live in rank r's buffer right now" exactly, and
+tests can assert every strategy delivers the canonical receive layout.
+
+Stage semantics (mirrored exactly by the JAX executor):
+
+* ``Gather(idx)``      -- per rank: ``new_buf[k] = ext[idx[k]]`` where
+  ``ext = concat(current_buf, original_local)`` and ``idx == len(ext)`` is a
+  PAD sentinel (delivers 0).
+* ``A2ALocal()``       -- ``all_to_all`` over the pod-local axis on the
+  ``[ppn, blk]`` view of the buffer.
+* ``A2APod()``         -- ``all_to_all`` over the pod axis on ``[npods, blk]``.
+* ``PermuteWorld(...)``-- rounds of world-level ``ppermute``; each round the
+  sender selects ``sel[round]`` from ``ext`` and the received blocks are
+  concatenated into the new buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.comm.topology import PodTopology
+from repro.core.patterns import CommPattern, Message
+
+Token = Tuple[int, int]  # (owner rank, element index)
+
+
+# ---------------------------------------------------------------------------
+# Pattern
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Need:
+    """Rank ``dst`` needs elements ``idx`` of rank ``src``'s local buffer."""
+
+    dst: int
+    src: int
+    idx: Tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if list(self.idx) != sorted(set(self.idx)):
+            raise ValueError("Need.idx must be sorted and unique")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePattern:
+    """Static irregular exchange pattern over a pod topology."""
+
+    topo: PodTopology
+    local_size: int
+    needs: Tuple[Need, ...]
+
+    def __post_init__(self) -> None:
+        seen = set()
+        for n in self.needs:
+            if (n.dst, n.src) in seen:
+                raise ValueError(f"duplicate need for (dst={n.dst}, src={n.src})")
+            seen.add((n.dst, n.src))
+            if n.src == n.dst:
+                raise ValueError("self-needs are not communication")
+            if n.idx and max(n.idx) >= self.local_size:
+                raise ValueError("need index out of range")
+
+    # -- canonical receive layout -------------------------------------
+    def needs_of(self, dst: int) -> List[Need]:
+        return sorted((n for n in self.needs if n.dst == dst), key=lambda n: n.src)
+
+    def recv_size(self, dst: int) -> int:
+        return sum(len(n.idx) for n in self.needs_of(dst))
+
+    def max_recv_size(self) -> int:
+        return max((self.recv_size(r) for r in range(self.topo.nranks)), default=0)
+
+    def canonical_tokens(self, dst: int) -> List[Token]:
+        out: List[Token] = []
+        for n in self.needs_of(dst):
+            out.extend((n.src, e) for e in n.idx)
+        return out
+
+    # -- derived views -------------------------------------------------
+    def dedup_for_pod(self, src: int, dst_pod: int) -> List[int]:
+        """Union of elements of ``src`` needed by any rank in ``dst_pod``
+        (the node-aware data-redundancy elimination, paper §2.3)."""
+        elems: set = set()
+        for n in self.needs:
+            if n.src == src and self.topo.pod_of(n.dst) == dst_pod:
+                elems.update(n.idx)
+        return sorted(elems)
+
+    def to_comm_pattern(self, elem_bytes: int = 4) -> CommPattern:
+        """Byte-level view for the performance models / advisor."""
+        msgs = [
+            Message(n.src, n.dst, len(n.idx) * elem_bytes)
+            for n in self.needs
+            if n.idx
+        ]
+        return CommPattern.from_messages(self.topo.nranks, self.topo.ppn, msgs)
+
+    # -- reference oracle ----------------------------------------------
+    def reference(self, local: np.ndarray) -> np.ndarray:
+        """Numpy oracle: ``local [nranks, L] -> canonical recv [nranks, H]``."""
+        nranks, H = self.topo.nranks, self.max_recv_size()
+        out = np.zeros((nranks, H), dtype=local.dtype)
+        for r in range(nranks):
+            toks = self.canonical_tokens(r)
+            for k, (owner, e) in enumerate(toks):
+                out[r, k] = local[owner, e]
+        return out
+
+
+def random_pattern(
+    rng: np.random.Generator,
+    topo: PodTopology,
+    local_size: int,
+    p_connect: float = 0.5,
+    max_elems: Optional[int] = None,
+) -> ExchangePattern:
+    """Random irregular pattern for property tests."""
+    max_elems = max_elems or local_size
+    needs = []
+    for dst in range(topo.nranks):
+        for src in range(topo.nranks):
+            if src == dst or rng.random() > p_connect:
+                continue
+            k = int(rng.integers(1, max_elems + 1))
+            idx = np.sort(rng.choice(local_size, size=min(k, local_size), replace=False))
+            needs.append(Need(dst, src, tuple(int(i) for i in idx)))
+    return ExchangePattern(topo=topo, local_size=local_size, needs=tuple(needs))
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Gather:
+    idx: np.ndarray  # [nranks, K] int32; idx == len(ext) means PAD
+
+
+@dataclasses.dataclass(frozen=True)
+class A2ALocal:
+    buflen: int  # divisible by ppn
+
+
+@dataclasses.dataclass(frozen=True)
+class A2APod:
+    buflen: int  # divisible by npods
+
+
+@dataclasses.dataclass(frozen=True)
+class PermuteWorld:
+    #: rounds[r] = tuple of (src_rank, dst_rank) pairs (a partial permutation)
+    rounds: Tuple[Tuple[Tuple[int, int], ...], ...]
+    #: per-round block length
+    blks: Tuple[int, ...]
+    #: sel[round] = [nranks, blks[round]] indices into ext (PAD = len(ext))
+    sels: Tuple[np.ndarray, ...]
+
+
+Stage = object  # union of the four dataclasses above
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """A full strategy program plus bookkeeping for benchmarks/tests."""
+
+    strategy: str
+    pattern: ExchangePattern
+    stages: Tuple[Stage, ...]
+    out_size: int
+    #: payload bytes moved (excluding padding) per fabric, per whole machine
+    intra_pod_bytes: int
+    inter_pod_bytes: int
+    #: bytes actually on the wire including padding (what XLA would move)
+    wire_intra_pod_bytes: int
+    wire_inter_pod_bytes: int
+
+
+# ---------------------------------------------------------------------------
+# Symbolic simulator (used for planning and by tests)
+# ---------------------------------------------------------------------------
+
+PAD: Optional[Token] = None
+
+
+def simulate_stage(
+    topo: PodTopology,
+    stage: Stage,
+    buf: List[List[Optional[Token]]],
+    local: List[List[Token]],
+) -> List[List[Optional[Token]]]:
+    nranks, ppn, npods = topo.nranks, topo.ppn, topo.npods
+    if isinstance(stage, Gather):
+        new = []
+        for r in range(nranks):
+            ext = buf[r] + list(local[r])
+            row = []
+            for i in stage.idx[r]:
+                row.append(PAD if i >= len(ext) else ext[int(i)])
+            new.append(row)
+        return new
+    if isinstance(stage, A2ALocal):
+        blk = stage.buflen // ppn
+        new = [[PAD] * stage.buflen for _ in range(nranks)]
+        for p in range(npods):
+            for l in range(ppn):
+                r = topo.rank_of(p, l)
+                for j in range(ppn):
+                    src = topo.rank_of(p, j)
+                    new[r][j * blk : (j + 1) * blk] = buf[src][l * blk : (l + 1) * blk]
+        return new
+    if isinstance(stage, A2APod):
+        blk = stage.buflen // npods
+        new = [[PAD] * stage.buflen for _ in range(nranks)]
+        for p in range(npods):
+            for l in range(ppn):
+                r = topo.rank_of(p, l)
+                for q in range(npods):
+                    src = topo.rank_of(q, l)
+                    new[r][q * blk : (q + 1) * blk] = buf[src][p * blk : (p + 1) * blk]
+        return new
+    if isinstance(stage, PermuteWorld):
+        new = [[] for _ in range(nranks)]
+        for rnd, (perm, blk, sel) in enumerate(zip(stage.rounds, stage.blks, stage.sels)):
+            send = []
+            for r in range(nranks):
+                ext = buf[r] + list(local[r])
+                send.append(
+                    [PAD if i >= len(ext) else ext[int(i)] for i in sel[r]]
+                )
+            got = {d: send[s] for s, d in perm}
+            for r in range(nranks):
+                new[r].extend(got.get(r, [PAD] * blk))
+        return new
+    raise TypeError(f"unknown stage {stage!r}")
+
+
+def simulate(plan: StagePlan) -> List[List[Optional[Token]]]:
+    topo = plan.pattern.topo
+    local = [
+        [(r, e) for e in range(plan.pattern.local_size)]
+        for r in range(topo.nranks)
+    ]
+    buf: List[List[Optional[Token]]] = [[] for _ in range(topo.nranks)]
+    for stage in plan.stages:
+        buf = simulate_stage(topo, stage, buf, local)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+class _Planner:
+    """Builds stages while tracking the symbolic buffer state."""
+
+    def __init__(self, pattern: ExchangePattern):
+        self.pattern = pattern
+        self.topo = pattern.topo
+        self.local = [
+            [(r, e) for e in range(pattern.local_size)]
+            for r in range(self.topo.nranks)
+        ]
+        self.buf: List[List[Optional[Token]]] = [[] for _ in range(self.topo.nranks)]
+        self.stages: List[Stage] = []
+        self.intra_payload = 0
+        self.inter_payload = 0
+        self.wire_intra = 0
+        self.wire_inter = 0
+
+    # -- position lookup ------------------------------------------------
+    def _positions(self, r: int) -> Dict[Token, int]:
+        pos: Dict[Token, int] = {}
+        ext = self.buf[r] + self.local[r]
+        for i, t in enumerate(ext):
+            if t is not None and t not in pos:
+                pos[t] = i
+        return pos
+
+    def _apply(self, stage: Stage) -> None:
+        self.stages.append(stage)
+        self.buf = simulate_stage(self.topo, stage, self.buf, self.local)
+
+    # -- stage emitters ---------------------------------------------------
+    def gather(self, select: Callable[[int], List[Optional[Token]]], width: Optional[int] = None) -> None:
+        nranks = self.topo.nranks
+        rows = [select(r) for r in range(nranks)]
+        K = width if width is not None else max((len(x) for x in rows), default=0)
+        K = max(K, 1)
+        idx = np.zeros((nranks, K), dtype=np.int32)
+        for r in range(nranks):
+            pos = self._positions(r)
+            sentinel = len(self.buf[r]) + len(self.local[r])
+            for k in range(K):
+                tok = rows[r][k] if k < len(rows[r]) else PAD
+                if tok is PAD:
+                    idx[r, k] = sentinel
+                else:
+                    if tok not in pos:
+                        raise AssertionError(
+                            f"planner bug: token {tok} not held by rank {r}"
+                        )
+                    idx[r, k] = pos[tok]
+        self._apply(Gather(idx=idx))
+
+    def a2a_local(self, elem_bytes: int) -> None:
+        buflen = len(self.buf[0])
+        assert buflen % self.topo.ppn == 0
+        blk = buflen // self.topo.ppn
+        for r in range(self.topo.nranks):
+            l = self.topo.local_of(r)
+            for j in range(self.topo.ppn):
+                if j == l:
+                    continue  # self block does not hit the wire
+                seg = self.buf[r][j * blk : (j + 1) * blk]
+                self.intra_payload += sum(t is not None for t in seg) * elem_bytes
+                self.wire_intra += blk * elem_bytes
+        self._apply(A2ALocal(buflen=buflen))
+
+    def a2a_pod(self, elem_bytes: int) -> None:
+        buflen = len(self.buf[0])
+        assert buflen % self.topo.npods == 0
+        blk = buflen // self.topo.npods
+        for r in range(self.topo.nranks):
+            p = self.topo.pod_of(r)
+            for q in range(self.topo.npods):
+                if q == p:
+                    continue
+                seg = self.buf[r][q * blk : (q + 1) * blk]
+                self.inter_payload += sum(t is not None for t in seg) * elem_bytes
+                self.wire_inter += blk * elem_bytes
+        self._apply(A2APod(buflen=buflen))
+
+    def permute_world(
+        self,
+        rounds: List[Dict[int, Tuple[int, List[Token]]]],
+        elem_bytes: int,
+    ) -> None:
+        """``rounds[i][src] = (dst, tokens)``: src sends tokens to dst."""
+        nranks = self.topo.nranks
+        perm_list, blks, sels = [], [], []
+        for rnd in rounds:
+            blk = max((len(toks) for _, toks in rnd.values()), default=0)
+            blk = max(blk, 1)
+            sel = np.zeros((nranks, blk), dtype=np.int32)
+            perm = []
+            for r in range(nranks):
+                pos = self._positions(r)
+                sentinel = len(self.buf[r]) + len(self.local[r])
+                if r in rnd:
+                    dst, toks = rnd[r]
+                    perm.append((r, dst))
+                    inter = self.topo.pod_of(r) != self.topo.pod_of(dst)
+                    payload = len(toks) * elem_bytes
+                    if inter:
+                        self.inter_payload += payload
+                        self.wire_inter += blk * elem_bytes
+                    else:
+                        self.intra_payload += payload
+                        self.wire_intra += blk * elem_bytes
+                    for k in range(blk):
+                        sel[r, k] = pos[toks[k]] if k < len(toks) else sentinel
+                else:
+                    sel[r, :] = len(self.buf[r]) + len(self.local[r])
+            perm_list.append(tuple(perm))
+            blks.append(blk)
+            sels.append(sel)
+        self._apply(
+            PermuteWorld(rounds=tuple(perm_list), blks=tuple(blks), sels=tuple(sels))
+        )
+
+    # -- shared epilogue ---------------------------------------------------
+    def redistribute_and_finish(self, elem_bytes: int, extra_local_direct: bool) -> None:
+        """Intra-pod redistribution (local_Rcomm) + canonical projection.
+
+        Block ``j`` of each rank's redistribution buffer = tokens this rank
+        holds that rank ``(mypod, j)`` needs, optionally including this
+        rank's *own* elements (the paper's ``local_comm`` merged in).
+        """
+        topo, pat = self.topo, self.pattern
+        rows: List[List[List[Optional[Token]]]] = []
+        for r in range(topo.nranks):
+            p = topo.pod_of(r)
+            pos = self._positions(r)
+            held = set(t for t in pos if extra_local_direct or t[0] != r)
+            blocks = []
+            for j in range(topo.ppn):
+                d = topo.rank_of(p, j)
+                if d == r:
+                    # self block: stays on-device (never hits the wire), but
+                    # must carry tokens this rank holds *for itself*, because
+                    # the gather replaces the buffer.  Own local elements are
+                    # always reachable via ext, so exclude them.
+                    want = [
+                        t for t in pat.canonical_tokens(d) if t in held and t[0] != r
+                    ]
+                else:
+                    want = [t for t in pat.canonical_tokens(d) if t in held]
+                blocks.append(sorted(set(want)))
+            rows.append(blocks)
+        B = max(max(len(b) for b in blocks) for blocks in rows)
+        B = max(B, 1)
+
+        def sel(r: int) -> List[Optional[Token]]:
+            out: List[Optional[Token]] = []
+            for b in rows[r]:
+                out.extend(b)
+                out.extend([PAD] * (B - len(b)))
+            return out
+
+        self.gather(sel, width=B * topo.ppn)
+        self.a2a_local(elem_bytes)
+        self.finish_canonical()
+
+    def finish_canonical(self) -> None:
+        pat = self.pattern
+        H = max(pat.max_recv_size(), 1)
+        self.gather(lambda r: list(pat.canonical_tokens(r)), width=H)
+
+    def build(self, strategy: str) -> StagePlan:
+        pat = self.pattern
+        # verify delivery
+        for r in range(self.topo.nranks):
+            want = pat.canonical_tokens(r)
+            got = self.buf[r][: len(want)]
+            if got != want:
+                raise AssertionError(
+                    f"strategy {strategy}: rank {r} canonical mismatch"
+                )
+        return StagePlan(
+            strategy=strategy,
+            pattern=pat,
+            stages=tuple(self.stages),
+            out_size=max(pat.max_recv_size(), 1),
+            intra_pod_bytes=self.intra_payload,
+            inter_pod_bytes=self.inter_payload,
+            wire_intra_pod_bytes=self.wire_intra,
+            wire_inter_pod_bytes=self.wire_inter,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Strategy planners
+# ---------------------------------------------------------------------------
+
+
+def plan_standard(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
+    """Standard communication: dense per-(src,dst) exchange.
+
+    Both redundancies of paper Fig 2.2 are present: every (src, dst) pair
+    gets its own message slot, and the same element is sent once per
+    requesting rank.
+    """
+    topo = pattern.topo
+    pl = _Planner(pattern)
+    by_pair: Dict[Tuple[int, int], List[Token]] = defaultdict(list)
+    for n in pattern.needs:
+        by_pair[(n.src, n.dst)] = [(n.src, e) for e in n.idx]
+    B = max((len(v) for v in by_pair.values()), default=0)
+    B = max(B, 1)
+
+    # layout [npods, ppn, B] by destination (pod, local)
+    def sel(r: int) -> List[Optional[Token]]:
+        out: List[Optional[Token]] = []
+        for d in range(topo.nranks):
+            toks = by_pair.get((r, d), [])
+            out.extend(toks)
+            out.extend([PAD] * (B - len(toks)))
+        return out
+
+    pl.gather(sel, width=topo.nranks * B)
+    pl.a2a_pod(elem_bytes)
+    # transpose [q, j, B] -> [j, q, B] so A2ALocal blocks are contiguous
+    buf = pl.buf
+
+    def transpose_sel(r: int) -> List[Optional[Token]]:
+        row = buf[r]
+        out: List[Optional[Token]] = []
+        for j in range(topo.ppn):
+            for q in range(topo.npods):
+                base = (q * topo.ppn + j) * B
+                out.extend(row[base : base + B])
+        return out
+
+    pl.gather(transpose_sel, width=topo.nranks * B)
+    pl.a2a_local(elem_bytes)
+    pl.finish_canonical()
+    return pl.build("standard")
+
+
+def plan_two_step(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
+    """2-Step: per-(src rank -> dst pod) fused, deduped messages to the
+    pod-rank pair, then intra-pod redistribution (paper §2.3.2)."""
+    topo = pattern.topo
+    pl = _Planner(pattern)
+    fused: Dict[Tuple[int, int], List[Token]] = {}
+    for r in range(topo.nranks):
+        for p in range(topo.npods):
+            fused[(r, p)] = [(r, e) for e in pattern.dedup_for_pod(r, p)]
+    B = max((len(v) for v in fused.values()), default=0)
+    B = max(B, 1)
+
+    def sel(r: int) -> List[Optional[Token]]:
+        out: List[Optional[Token]] = []
+        for p in range(topo.npods):
+            toks = fused[(r, p)] if p != topo.pod_of(r) else []
+            out.extend(toks)
+            out.extend([PAD] * (B - len(toks)))
+        return out
+
+    pl.gather(sel, width=topo.npods * B)
+    pl.a2a_pod(elem_bytes)
+    pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)
+    return pl.build("two_step")
+
+
+def plan_three_step(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
+    """3-Step: intra-pod gather to the pair agent, single fused inter-pod
+    message per pod pair, intra-pod redistribution (paper §2.3.1)."""
+    topo = pattern.topo
+    pl = _Planner(pattern)
+    # deduped contribution of each rank to each foreign pod
+    contrib: Dict[Tuple[int, int], List[Token]] = {}
+    for r in range(topo.nranks):
+        for p in range(topo.npods):
+            if p == topo.pod_of(r):
+                continue
+            contrib[(r, p)] = [(r, e) for e in pattern.dedup_for_pod(r, p)]
+
+    # step 1: route contributions to the (src pod, dst pod) agent
+    rows: Dict[int, List[List[Optional[Token]]]] = {}
+    for r in range(topo.nranks):
+        q = topo.pod_of(r)
+        blocks: List[List[Optional[Token]]] = [[] for _ in range(topo.ppn)]
+        for p in range(topo.npods):
+            if p == q:
+                continue
+            blocks[topo.agent_local(q, p)].extend(contrib[(r, p)])
+        rows[r] = blocks
+    B1 = max(max(len(b) for b in blocks) for blocks in rows.values())
+    B1 = max(B1, 1)
+
+    def sel1(r: int) -> List[Optional[Token]]:
+        out: List[Optional[Token]] = []
+        for b in rows[r]:
+            out.extend(b)
+            out.extend([PAD] * (B1 - len(b)))
+        return out
+
+    pl.gather(sel1, width=B1 * topo.ppn)
+    pl.a2a_local(elem_bytes)
+
+    # step 2: one fused message per pod pair, spread over shifts
+    rounds = []
+    for d in topo.pod_shift_rounds():
+        rnd: Dict[int, Tuple[int, List[Token]]] = {}
+        for q in range(topo.npods):
+            p = (q + d) % topo.npods
+            a = topo.agent_local(q, p)
+            src = topo.rank_of(q, a)
+            dst = topo.rank_of(p, a)
+            toks: List[Token] = []
+            for l in range(topo.ppn):
+                toks.extend(contrib[(topo.rank_of(q, l), p)])
+            rnd[src] = (dst, sorted(set(toks)))
+        rounds.append(rnd)
+    pl.permute_world(rounds, elem_bytes)
+    pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)
+    return pl.build("three_step")
+
+
+def _greedy_rounds(
+    chunks: List[Tuple[int, int, List[Token]]]
+) -> List[Dict[int, Tuple[int, List[Token]]]]:
+    """Edge-color the chunk multigraph into rounds where every rank sends
+    and receives at most one chunk (largest chunks first)."""
+    remaining = sorted(chunks, key=lambda c: -len(c[2]))
+    rounds = []
+    while remaining:
+        used_s, used_d = set(), set()
+        rnd: Dict[int, Tuple[int, List[Token]]] = {}
+        rest = []
+        for s, d, toks in remaining:
+            if s in used_s or d in used_d:
+                rest.append((s, d, toks))
+                continue
+            used_s.add(s)
+            used_d.add(d)
+            rnd[s] = (d, toks)
+        rounds.append(rnd)
+        remaining = rest
+    return rounds
+
+
+def plan_split(
+    pattern: ExchangePattern,
+    message_cap_bytes: int,
+    elem_bytes: int = 4,
+) -> StagePlan:
+    """Split node-aware communication (paper §2.3.3 / Algorithm 1).
+
+    Inter-pod volume is deduped and conglomerated per (origin pod -> dest
+    pod), split into chunks of at most the effective ``message_cap`` (lines
+    12-17), balanced over on-pod senders/receivers (line 18), exchanged, and
+    redistributed.
+    """
+    topo = pattern.topo
+    pl = _Planner(pattern)
+
+    # per recv pod: per origin pod: owner-major deduped token list
+    chunks: List[Tuple[int, int, List[Token]]] = []  # (sender, receiver, tokens)
+    stage0_rows: Dict[int, List[List[Optional[Token]]]] = {
+        r: [[] for _ in range(topo.ppn)] for r in range(topo.nranks)
+    }
+    for recv_pod in range(topo.npods):
+        per_origin: Dict[int, List[Token]] = {}
+        for origin in range(topo.npods):
+            if origin == recv_pod:
+                continue
+            toks: List[Token] = []
+            for l in range(topo.ppn):
+                src = topo.rank_of(origin, l)
+                toks.extend((src, e) for e in pattern.dedup_for_pod(src, recv_pod))
+            if toks:
+                per_origin[origin] = toks
+        if not per_origin:
+            continue
+        vols = {o: len(t) * elem_bytes for o, t in per_origin.items()}
+        total = sum(vols.values())
+        biggest = max(vols.values())
+        # Algorithm 1, lines 12-17
+        if biggest < message_cap_bytes:
+            cap = biggest  # conglomerate: one message per origin pod
+        elif total / message_cap_bytes > topo.ppn:
+            cap = -(-total // topo.ppn)  # ceil
+        else:
+            cap = message_cap_bytes
+        cap_elems = max(cap // elem_bytes, 1)
+
+        raw: List[Tuple[int, List[Token]]] = []  # (origin, chunk tokens)
+        for origin in sorted(per_origin):
+            toks = per_origin[origin]
+            for i in range(0, len(toks), cap_elems):
+                raw.append((origin, toks[i : i + cap_elems]))
+        # line 18: receives descending from local 0; sends from local ppn-1
+        raw.sort(key=lambda t: -len(t[1]))
+        send_counter: Dict[int, int] = defaultdict(int)
+        for i, (origin, toks) in enumerate(raw):
+            receiver = topo.rank_of(recv_pod, i % topo.ppn)
+            k = send_counter[origin]
+            sender = topo.rank_of(origin, topo.ppn - 1 - (k % topo.ppn))
+            send_counter[origin] += 1
+            chunks.append((sender, receiver, toks))
+            # stage 0 (local_Scomm): owners stage chunk bytes on the sender
+            for tok in toks:
+                owner = tok[0]
+                if owner != sender:
+                    stage0_rows[owner][topo.local_of(sender)].append(tok)
+
+    B0 = max(
+        (len(b) for blocks in stage0_rows.values() for b in blocks), default=0
+    )
+    B0 = max(B0, 1)
+
+    def sel0(r: int) -> List[Optional[Token]]:
+        out: List[Optional[Token]] = []
+        for b in stage0_rows[r]:
+            out.extend(b)
+            out.extend([PAD] * (B0 - len(b)))
+        return out
+
+    pl.gather(sel0, width=B0 * topo.ppn)
+    pl.a2a_local(elem_bytes)
+    pl.permute_world(_greedy_rounds(chunks), elem_bytes)
+    pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)
+    return pl.build("split")
+
+
+PLANNERS: Dict[str, Callable[..., StagePlan]] = {
+    "standard": plan_standard,
+    "two_step": plan_two_step,
+    "three_step": plan_three_step,
+    "split": plan_split,
+}
+
+
+def plan(strategy: str, pattern: ExchangePattern, *, message_cap_bytes: int = 16384, elem_bytes: int = 4) -> StagePlan:
+    if strategy == "split":
+        return plan_split(pattern, message_cap_bytes, elem_bytes)
+    try:
+        return PLANNERS[strategy](pattern, elem_bytes)
+    except KeyError as e:
+        raise KeyError(f"unknown strategy {strategy!r}; known: {sorted(PLANNERS)}") from e

@@ -1,0 +1,106 @@
+"""Model-driven communication strategy selection (paper §4.6 as a feature).
+
+Given an irregular :class:`~repro.core.patterns.CommPattern` (or raw Table 7
+stats) and a machine registry entry, the advisor evaluates every Table 6
+composite model and returns the ranked strategies.  This turns the paper's
+characterization into the runtime decision procedure used by the SpMV driver
+(``--strategy auto``) and the MoE dispatch layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.hardware import MachineParams, get_machine
+from repro.core.patterns import CommPattern
+from repro.core.perfmodel import (
+    PatternStats,
+    Strategy,
+    Transport,
+    predict_all,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Recommendation:
+    strategy: Strategy
+    transport: Transport
+    predicted_time: float
+
+    @property
+    def key(self) -> str:
+        return f"{self.strategy.value}/{self.transport.value}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Advice:
+    """Ranked strategy recommendations for one pattern on one machine."""
+
+    machine: str
+    stats: PatternStats
+    ranked: Tuple[Recommendation, ...]
+
+    @property
+    def best(self) -> Recommendation:
+        return self.ranked[0]
+
+    def time_for(self, strategy: Strategy, transport: Transport) -> float:
+        for r in self.ranked:
+            if r.strategy is strategy and r.transport is transport:
+                return r.predicted_time
+        raise KeyError((strategy, transport))
+
+    def table(self) -> str:
+        w = max(len(r.key) for r in self.ranked)
+        lines = [f"{'strategy':<{w}}  predicted_s"]
+        lines += [f"{r.key:<{w}}  {r.predicted_time:.3e}" for r in self.ranked]
+        return "\n".join(lines)
+
+
+def advise_stats(
+    stats: PatternStats,
+    machine: MachineParams | str = "tpu_v5e_pod",
+    include_two_step_one: bool = False,
+    duplicate_fraction: float = 0.0,
+    exclude: Sequence[Tuple[Strategy, Transport]] = (),
+) -> Advice:
+    """Rank strategies for raw Table 7 stats.
+
+    ``duplicate_fraction`` models §4.6's duplicate-data removal: node-aware
+    strategies eliminate that fraction of the standard data volume, standard
+    communication does not.
+    """
+    m = get_machine(machine) if isinstance(machine, str) else machine
+    keep = 1.0 - duplicate_fraction
+    preds = {}
+    for (strategy, transport), t in predict_all(
+        m, stats, include_two_step_one=include_two_step_one
+    ).items():
+        if (strategy, transport) in exclude:
+            continue
+        if duplicate_fraction > 0.0 and strategy is not Strategy.STANDARD:
+            t = predict_all(m, stats.scaled(keep), include_two_step_one=True)[
+                (strategy, transport)
+            ]
+        preds[(strategy, transport)] = t
+    ranked = tuple(
+        Recommendation(s, tr, t)
+        for (s, tr), t in sorted(preds.items(), key=lambda kv: kv[1])
+    )
+    return Advice(machine=m.name, stats=stats, ranked=ranked)
+
+
+def advise(
+    pattern: CommPattern,
+    machine: MachineParams | str = "tpu_v5e_pod",
+    include_two_step_one: bool = False,
+    duplicate_fraction: float = 0.0,
+) -> Advice:
+    """Rank strategies for a concrete communication pattern."""
+    return advise_stats(
+        pattern.stats(),
+        machine=machine,
+        include_two_step_one=include_two_step_one,
+        duplicate_fraction=duplicate_fraction,
+    )

@@ -1,0 +1,278 @@
+"""Performance models for node-aware irregular point-to-point communication.
+
+Implements, faithfully, the models of paper §2.2 / §4:
+
+* eq. (2.1)  postal model            ``T = alpha + beta * s``
+* eq. (2.2)  max-rate model          ``T = alpha*m + max(ppn*s/R_N, s/R_b)``
+* eq. (4.1)  T_on        -- worst-case on-node gather/redistribute (3-Step, 2-Step)
+* eq. (4.2)  T_on-split  -- on-node distribute for the Split strategies
+* eq. (4.3)  T_off       -- staged-through-host inter-node (max-rate form)
+* eq. (4.4)  T_off-DA    -- device-aware inter-node (postal form)
+* eq. (4.5)  T_copy      -- staging copies between device and host
+* Table 6    composite models for all (strategy x transport) pairs
+
+plus the Table 7 pattern statistics consumed by the composites (computed by
+:mod:`repro.core.patterns`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional, Tuple
+
+from repro.core.hardware import (
+    CopyParams,
+    Locality,
+    MachineParams,
+    Space,
+)
+
+
+class Strategy(enum.Enum):
+    """Node-aware strategies modeled by the paper (Table 5)."""
+
+    STANDARD = "standard"
+    THREE_STEP = "three_step"
+    TWO_STEP = "two_step"
+    TWO_STEP_ONE = "two_step_1"  # best-case 2-Step (single active GPU), Fig 4.3
+    SPLIT_MD = "split_md"
+    SPLIT_DD = "split_dd"
+
+
+class Transport(enum.Enum):
+    DEVICE_AWARE = "device_aware"
+    STAGED_HOST = "staged_host"
+
+
+#: (strategy, transport) pairs the paper models (Table 5). Split strategies
+#: are staged-through-host only ("device-aware communication does not apply").
+MODELED_PAIRS = [
+    (Strategy.STANDARD, Transport.STAGED_HOST),
+    (Strategy.STANDARD, Transport.DEVICE_AWARE),
+    (Strategy.THREE_STEP, Transport.STAGED_HOST),
+    (Strategy.THREE_STEP, Transport.DEVICE_AWARE),
+    (Strategy.TWO_STEP, Transport.STAGED_HOST),
+    (Strategy.TWO_STEP, Transport.DEVICE_AWARE),
+    (Strategy.SPLIT_MD, Transport.STAGED_HOST),
+    (Strategy.SPLIT_DD, Transport.STAGED_HOST),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternStats:
+    """Table 7 parameters (plus ``s_node_total`` used by the Split row).
+
+    Attributes:
+      s_proc: max bytes sent by a single process/GPU.
+      s_node: max bytes injected into the network by a single node.
+      s_node_node: max bytes sent between any two nodes.
+      m_proc_node: max number of nodes to which a single process sends.
+      m_node_node: max number of messages between any two nodes.
+      m_proc: max number of messages sent by a single process (standard).
+      num_dest_nodes: number of destination nodes for the max-injecting node.
+    """
+
+    s_proc: float
+    s_node: float
+    s_node_node: float
+    m_proc_node: int
+    m_node_node: int
+    m_proc: int
+    num_dest_nodes: int
+
+    def scaled(self, keep: float) -> "PatternStats":
+        """Scale data volumes by ``keep`` (duplicate-data removal, §4.6)."""
+        return dataclasses.replace(
+            self,
+            s_proc=self.s_proc * keep,
+            s_node=self.s_node * keep,
+            s_node_node=self.s_node_node * keep,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Primitive models
+# ---------------------------------------------------------------------------
+
+
+def postal(alpha: float, beta: float, nbytes: float, nmsgs: int = 1) -> float:
+    """Eq. (2.1): ``T = alpha + beta*s`` (per message, ``nmsgs`` messages)."""
+    return alpha * nmsgs + beta * float(nbytes)
+
+
+def max_rate(
+    alpha: float,
+    beta: float,
+    nmsgs: int,
+    s_proc: float,
+    s_node: float,
+    rn_inv: float,
+) -> float:
+    """Eq. (2.2)/(4.3): ``T = alpha*m + max(s_node/R_N, s_proc*beta)``.
+
+    ``s_node/R_N`` is the node injection-bandwidth bound; ``s_proc*beta`` is
+    the per-process transport bound.  When the node is injecting less than
+    the NIC limit this reduces to the postal model.
+    """
+    return alpha * nmsgs + max(s_node * rn_inv, s_proc * beta)
+
+
+# ---------------------------------------------------------------------------
+# Sub-models (paper §4.1-§4.4)
+# ---------------------------------------------------------------------------
+
+
+def t_on(machine: MachineParams, space: Space, s: float) -> float:
+    """Eq. (4.1): worst-case on-node gather or redistribute for 3-/2-Step.
+
+    ``(gps-1)`` on-socket messages plus ``gps`` on-node messages of size
+    ``s`` (the max contribution of a single GPU).
+    """
+    gps = machine.gpus_per_socket
+    p_sock = machine.path(space, Locality.ON_SOCKET, s)
+    p_node = machine.path(space, Locality.ON_NODE, s)
+    t = (gps - 1) * (p_sock.alpha + p_sock.beta * s)
+    if machine.sockets_per_node > 1:
+        t += gps * (p_node.alpha + p_node.beta * s)
+    return t
+
+
+def t_on_split(machine: MachineParams, s_total: float, ppg: int) -> float:
+    """Eq. (4.2): on-node distribute/redistribute for the Split strategies.
+
+    Worst case: a single GPU holds all ``s_total`` inter-node bytes, staged on
+    ``ppg`` host processes, and must spread them over all ``PPN`` on-node
+    processes in chunks of ``s_total/PPN``: each staging process sends
+    ``pps/ppg - 1`` on-socket and ``pps/ppg`` off-socket/on-node messages
+    (19 + 20 on Lassen with ppg=1).  Staging is always through host
+    processes, so CPU path parameters apply.
+    """
+    pps = machine.procs_per_socket
+    ppn = machine.procs_per_node
+    chunk = s_total / ppn
+    n_sock = pps // ppg - 1
+    n_node = pps // ppg if machine.sockets_per_node > 1 else 0
+    p_sock = machine.path(Space.CPU, Locality.ON_SOCKET, chunk)
+    t = n_sock * (p_sock.alpha + p_sock.beta * chunk)
+    if n_node:
+        p_node = machine.path(Space.CPU, Locality.ON_NODE, chunk)
+        t += n_node * (p_node.alpha + p_node.beta * chunk)
+    return t
+
+
+def t_off(
+    machine: MachineParams,
+    nmsgs: int,
+    s_proc: float,
+    s_node: float,
+    msg_size: Optional[float] = None,
+) -> float:
+    """Eq. (4.3): staged-through-host inter-node communication (max-rate).
+
+    ``msg_size`` selects the protocol class (defaults to ``s_proc``).
+    """
+    p = machine.path(Space.CPU, Locality.OFF_NODE, msg_size if msg_size is not None else s_proc)
+    return max_rate(p.alpha, p.beta, nmsgs, s_proc, s_node, machine.rn_inv)
+
+
+def t_off_da(machine: MachineParams, nmsgs: int, s: float, msg_size: Optional[float] = None) -> float:
+    """Eq. (4.4): device-aware inter-node communication (postal)."""
+    p = machine.path(Space.GPU, Locality.OFF_NODE, msg_size if msg_size is not None else s)
+    return p.alpha * nmsgs + s * p.beta
+
+
+def t_copy(copy: CopyParams, s_send: float, s_recv: float) -> float:
+    """Eq. (4.5): device<->host staging copies."""
+    return (
+        copy.h2d.alpha
+        + copy.h2d.beta * s_send
+        + copy.d2h.alpha
+        + copy.d2h.beta * s_recv
+    )
+
+
+# ---------------------------------------------------------------------------
+# Table 6 composites
+# ---------------------------------------------------------------------------
+
+
+def predict(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+) -> float:
+    """Predicted time for one (strategy, transport) pair -- paper Table 6."""
+    ppn = machine.procs_per_node
+
+    if strategy is Strategy.STANDARD:
+        if transport is Transport.STAGED_HOST:
+            # Max-rate model (2.2), staged through host: CPU off-node params.
+            msg = stats.s_proc / max(stats.m_proc, 1)
+            p = machine.path(Space.CPU, Locality.OFF_NODE, msg)
+            return max_rate(p.alpha, p.beta, stats.m_proc, stats.s_proc, stats.s_node, machine.rn_inv)
+        # Postal model (2.1), device-aware: GPU off-node params.
+        msg = stats.s_proc / max(stats.m_proc, 1)
+        p = machine.path(Space.GPU, Locality.OFF_NODE, msg)
+        return p.alpha * stats.m_proc + p.beta * stats.s_proc
+
+    if strategy is Strategy.THREE_STEP:
+        if transport is Transport.STAGED_HOST:
+            return (
+                t_off(machine, stats.m_node_node, stats.s_node_node, stats.s_node,
+                      msg_size=stats.s_node_node)
+                + 2.0 * t_on(machine, Space.CPU, stats.s_node_node)
+                + t_copy(machine.copy[1], stats.s_proc, stats.s_node_node)
+            )
+        return (
+            t_off_da(machine, stats.m_node_node, stats.s_node_node)
+            + 2.0 * t_on(machine, Space.GPU, stats.s_node_node)
+        )
+
+    if strategy in (Strategy.TWO_STEP, Strategy.TWO_STEP_ONE):
+        # 2-Step All: every GPU sends to its pair on each destination node.
+        # 2-Step 1 (best case): all inter-node data originates on one GPU that
+        # is already paired with the destination -- on-node phase vanishes.
+        if transport is Transport.STAGED_HOST:
+            t = t_off(machine, stats.m_proc_node, stats.s_proc, stats.s_node,
+                      msg_size=stats.s_proc / max(stats.m_proc_node, 1))
+            if strategy is Strategy.TWO_STEP:
+                t += t_on(machine, Space.CPU, stats.s_proc)
+            return t + t_copy(machine.copy[1], stats.s_proc, stats.s_node_node)
+        t = t_off_da(machine, stats.m_proc_node, stats.s_proc,
+                     msg_size=stats.s_proc / max(stats.m_proc_node, 1))
+        if strategy is Strategy.TWO_STEP:
+            t += t_on(machine, Space.GPU, stats.s_proc)
+        return t
+
+    if strategy in (Strategy.SPLIT_MD, Strategy.SPLIT_DD):
+        if transport is not Transport.STAGED_HOST:
+            raise ValueError("device-aware transport does not apply to Split (paper Table 5)")
+        ppg = 1 if strategy is Strategy.SPLIT_MD else 4
+        s_split = stats.s_node / ppn
+        return (
+            t_off(machine, stats.m_proc_node, s_split, stats.s_node, msg_size=s_split)
+            + 2.0 * t_on_split(machine, stats.s_node, ppg)
+            + t_copy(machine.copy[ppg], stats.s_proc, stats.s_node_node)
+        )
+
+    raise ValueError(f"unknown strategy {strategy}")
+
+
+def predict_all(
+    machine: MachineParams,
+    stats: PatternStats,
+    include_two_step_one: bool = False,
+) -> Dict[Tuple[Strategy, Transport], float]:
+    """Evaluate every modeled (strategy, transport) pair for one pattern."""
+    out: Dict[Tuple[Strategy, Transport], float] = {}
+    pairs = list(MODELED_PAIRS)
+    if include_two_step_one:
+        pairs += [
+            (Strategy.TWO_STEP_ONE, Transport.STAGED_HOST),
+            (Strategy.TWO_STEP_ONE, Transport.DEVICE_AWARE),
+        ]
+    for strategy, transport in pairs:
+        out[(strategy, transport)] = predict(machine, strategy, transport, stats)
+    return out

@@ -1,0 +1,38 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Selects interpret mode automatically on non-TPU backends so the same call
+sites run in this CPU container (correctness) and on real TPUs (performance).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.spmv_ell import spmv_ell as _spmv_ell
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmv_ell(data, cols, x):
+    """Blocked-ELL SpMV: ``w[i] = sum_k data[i,k] * x[cols[i,k]]``."""
+    return _spmv_ell(data, cols, x, interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None):
+    """Blocked online-softmax attention; q [B,Sq,H,D], k/v [B,Sk,KV,D]."""
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, scale=scale, interpret=_interpret()
+    )
+
+
+def ssd_chunked(xdt, loga, b, c, chunk: int = 128):
+    """Mamba-2 SSD over chunks (matches repro.models.ssd.ssd_chunked)."""
+    return ssd_scan_kernel(xdt, loga, b, c, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition the kernel must match; the
+per-kernel tests sweep shapes/dtypes and ``assert_allclose`` kernel output
+against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ell(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """``w[i] = sum_k data[i,k] * x[cols[i,k]]``."""
+    return (data * x[cols]).sum(axis=-1)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Softmax attention. q: [Sq, H, D]; k/v: [Sk, Hkv, D] (GQA by repeat).
+
+    ``window`` limits attention to the last ``window`` positions (sliding
+    window); ``None`` is full attention.  Query position ``i`` is aligned to
+    key position ``i + Sk - Sq`` (decode-friendly).
+    """
+    Sq, H, D = q.shape
+    Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("qhd,khd->hqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def ssd_scan(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+) -> jnp.ndarray:
+    """Mamba-2 SSD (state-space duality) sequential reference.
+
+    x: [S, H, P]  inputs (heads x head_dim)
+    a: [S, H]     per-step log-decay (a_t = exp(a_log_t) in (0, 1])
+    b: [S, N]     input projection onto state dim N
+    c: [S, N]     output projection
+    returns y: [S, H, P] with state h_t = a_t * h_{t-1} + b_t^T x_t
+    (h: [N, H, P]), y_t = c_t @ h_t.
+    """
+    S, H, P = x.shape
+    N = b.shape[1]
+
+    def step(h, inp):
+        xt, at, bt, ct = inp
+        h = at[None, :, None] * h + bt[:, None, None] * xt[None]
+        y = jnp.einsum("n,nhp->hp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((N, H, P), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.astype(jnp.float32), a.astype(jnp.float32),
+                                    b.astype(jnp.float32), c.astype(jnp.float32)))
+    return ys.astype(x.dtype)

@@ -1,0 +1,300 @@
+"""Trip-count-aware analysis of compiled HLO (roofline inputs).
+
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop body
+once, but our models scan over layers (and SSD chunks / attention blocks), so
+FLOPs, HBM bytes and collective bytes must be weighted by each loop's
+``known_trip_count``.  This module parses the post-optimization HLO text and
+computes, per chip (HLO shapes are per-device after SPMD partitioning):
+
+* ``flops``            -- 2*M*N*K summed over every ``dot`` (matmul FLOPs
+  dominate all our models; elementwise FLOPs are not counted, documented).
+* ``mem_bytes``        -- operand + result bytes of every instruction at
+  fusion *boundaries* (fusion-internal values never touch HBM).
+* ``collective bytes`` -- summed operand sizes of every all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute, by kind.
+
+Ops inside ``while`` bodies are multiplied by the loop trip count,
+recursively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+_SKIP_MEM_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shapes_bytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    mem_bytes: float
+    collective_by_kind: Dict[str, float]
+    collective_ops: int
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_by_kind.values())
+
+
+# kept for backward compatibility with earlier callers
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind: Dict[str, float]
+    op_count: int
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def analyze(hlo_text: str) -> HloStats:
+    # ---- split into computations --------------------------------------
+    lines = hlo_text.splitlines()
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for ln in lines:
+        stripped = ln.strip()
+        if stripped.endswith("{") and "->" in stripped and not stripped.startswith("%param"):
+            toks = stripped.split()
+            name = (toks[1] if toks[0] == "ENTRY" else toks[0]).lstrip("%")
+            cur = name
+            comps[cur] = []
+            if toks[0] == "ENTRY":
+                entry = cur
+            continue
+        if cur is not None:
+            comps[cur].append(ln)
+
+    inst_re = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+    call_re = re.compile(r"(?:body=|calls=)%?([\w\.\-]+)")
+    trip_re = re.compile(r'known_trip_count[\\"]*:\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+    operand_re = re.compile(r"%([\w\.\-]+)")
+    op_re = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+    cdims_re = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+    comp_flops: Dict[str, float] = defaultdict(float)
+    comp_mem: Dict[str, float] = defaultdict(float)
+    comp_coll: Dict[str, Dict[str, float]] = {}
+    comp_calls: Dict[str, List[Tuple[str, float]]] = {}
+    comp_ops: Dict[str, int] = {}
+    fusion_bodies: set = set()
+
+    for name, body in comps.items():
+        shapes: Dict[str, List[Tuple[str, List[int]]]] = {}
+        colls: Dict[str, float] = defaultdict(float)
+        calls: List[Tuple[str, float]] = []
+        nops = 0
+        for ln in body:
+            m = inst_re.match(ln)
+            if not m:
+                continue
+            iname, rest = m.groups()
+            opm = op_re.search(rest)
+            opname = opm.group(1) if opm else None
+            head = rest[: opm.start()] if opm else rest
+            res_shapes = _parse_shapes(head)
+            shapes[iname] = res_shapes
+            args = ""
+            if "(" in rest:
+                args = rest.split("(", 1)[1].split(")", 1)[0]
+            operands = [om.group(1) for om in operand_re.finditer(args)]
+
+            # calls / loops
+            if opname == "while":
+                cm = call_re.search(rest)
+                tm = trip_re.search(ln)
+                trips = float(tm.group(1)) if tm else 1.0
+                if cm:
+                    calls.append((cm.group(1), trips))
+            elif opname in ("call", "conditional", "async-start", "custom-call"):
+                for cm in call_re.finditer(rest):
+                    calls.append((cm.group(1), 1.0))
+            elif opname == "fusion":
+                for cm in call_re.finditer(rest):
+                    calls.append((cm.group(1), 1.0))
+                    fusion_bodies.add(cm.group(1))
+
+            # dot FLOPs: 2 * result_elems * contracted_elems
+            if opname == "dot":
+                cm = cdims_re.search(rest)
+                if cm and operands:
+                    lhs_shapes = shapes.get(operands[0], [])
+                    if lhs_shapes:
+                        lhs_dims = lhs_shapes[0][1]
+                        cdims = [int(x) for x in cm.group(1).split(",") if x]
+                        contract = 1
+                        for ci in cdims:
+                            if ci < len(lhs_dims):
+                                contract *= lhs_dims[ci]
+                        res_elems = 1
+                        for _, dims in res_shapes[:1]:
+                            for d in dims:
+                                res_elems *= d
+                        comp_flops[name] += 2.0 * res_elems * contract
+
+            # memory traffic at fusion boundaries: each produced tensor is
+            # written once and (amortized) read once downstream -> 2x result
+            # bytes.  Counting operand reads per-consumer would double-count
+            # every producer/consumer edge and overstate HBM traffic badly on
+            # the CPU backend, whose fusion is much weaker than TPU's.
+            if opname and opname not in _SKIP_MEM_OPS:
+                comp_mem[name] += 2.0 * _shapes_bytes(res_shapes)
+
+            # collectives
+            if opname and any(opname.startswith(c) for c in _COLLECTIVES):
+                if opname.endswith("-done"):
+                    continue
+                nops += 1
+                kind = next(c for c in _COLLECTIVES if opname.startswith(c))
+                b = 0
+                for op in operands:
+                    b += _shapes_bytes(shapes.get(op, []))
+                if b == 0:
+                    b = _shapes_bytes(res_shapes)
+                colls[kind] += float(b)
+        comp_coll[name] = dict(colls)
+        comp_calls[name] = calls
+        comp_ops[name] = nops
+
+    # ---- bottom-up totals from ENTRY -----------------------------------
+    memo: Dict[str, Tuple[float, float, Dict[str, float], int]] = {}
+
+    def total(name: str, seen=()) -> Tuple[float, float, Dict[str, float], int]:
+        if name in memo:
+            return memo[name]
+        if name not in comp_coll or name in seen:
+            return 0.0, 0.0, {}, 0
+        flops = comp_flops[name]
+        mem = 0.0 if name in fusion_bodies else comp_mem[name]
+        agg = defaultdict(float, comp_coll[name])
+        nops = comp_ops[name]
+        for callee, mult in comp_calls.get(name, []):
+            f, mm, sub, sub_ops = total(callee, seen + (name,))
+            flops += f * mult
+            mem += mm * mult
+            for k, v in sub.items():
+                agg[k] += v * mult
+            nops += sub_ops
+        memo[name] = (flops, mem, dict(agg), nops)
+        return memo[name]
+
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return HloStats(0.0, 0.0, {}, 0)
+    flops, mem, agg, nops = total(entry)
+    return HloStats(flops=flops, mem_bytes=mem, collective_by_kind=agg, collective_ops=nops)
+
+
+def analyze_collectives(hlo_text: str) -> CollectiveStats:
+    st = analyze(hlo_text)
+    return CollectiveStats(by_kind=st.collective_by_kind, op_count=st.collective_ops)
+
+
+def top_contributors(hlo_text: str, k: int = 12) -> List[Tuple[float, float, str, str]]:
+    """Top trip-weighted memory contributors: (bytes, trips, op, shape)."""
+    lines = hlo_text.splitlines()
+    comps: Dict[str, List[str]] = {}
+    entry = cur = None
+    for ln in lines:
+        s = ln.strip()
+        if s.endswith("{") and "->" in s and not s.startswith("%param"):
+            t = s.split()
+            name = (t[1] if t[0] == "ENTRY" else t[0]).lstrip("%")
+            cur = name
+            comps[cur] = []
+            if t[0] == "ENTRY":
+                entry = cur
+            continue
+        if cur is not None:
+            comps[cur].append(ln)
+
+    call_re = re.compile(r"(?:body=|calls=)%?([\w\.\-]+)")
+    trip_re = re.compile(r'known_trip_count[\\"]*:\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+    inst_re = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+    op_re = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    i = 0
+    fusion_bodies = set()
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for ln in comps.get(c, []):
+            if " while(" in ln:
+                m = call_re.search(ln)
+                t = trip_re.search(ln)
+                if m:
+                    mult[m.group(1)] += mult[c] * (float(t.group(1)) if t else 1.0)
+                    order.append(m.group(1))
+            elif "calls=" in ln:
+                for m in call_re.finditer(ln):
+                    mult[m.group(1)] += mult[c]
+                    order.append(m.group(1))
+                    if "fusion(" in ln:
+                        fusion_bodies.add(m.group(1))
+    out = []
+    for c, body in comps.items():
+        if c in fusion_bodies:
+            continue
+        for ln in body:
+            m = inst_re.match(ln)
+            if not m:
+                continue
+            iname, rest = m.groups()
+            opm = op_re.search(rest)
+            opname = opm.group(1) if opm else None
+            if not opname or opname in _SKIP_MEM_OPS:
+                continue
+            head = rest[: opm.start()]
+            b = 2.0 * _shapes_bytes(_parse_shapes(head)) * mult.get(c, 0.0)
+            if b > 0:
+                out.append((b, mult.get(c, 0.0), opname, head.strip()[:70]))
+    out.sort(reverse=True)
+    return out[:k]

@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches JAX device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` *before* any JAX import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod mesh, or 2 pods x 16 x 16 = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests/examples (requires enough host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

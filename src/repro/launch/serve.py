@@ -1,0 +1,77 @@
+"""Batched serving launcher: prefill a prompt batch, then greedy-decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --preset tiny \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import PRESETS
+from repro.models import LMModel
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--preset", choices=list(PRESETS), default="tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args()
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_host_mesh(d, m)
+    cfg = PRESETS[args.preset](get_config(args.arch))
+    model = LMModel(cfg, tp=m)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    ctx = (
+        jnp.asarray(rng.normal(size=(args.batch, model.ctx_len(), cfg.d_model)), jnp.float32)
+        if model.ctx_len()
+        else None
+    )
+    max_len = args.prompt_len + args.gen
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, prompts, ctx, mesh=mesh)
+    # re-home the prefill cache into max_len-deep buffers
+    full = model.init_cache(args.batch, max_len, model.dtype)
+
+    def blend(dst, src):
+        if dst.shape != src.shape:
+            return dst.at[tuple(slice(0, s) for s in src.shape)].set(src.astype(dst.dtype))
+        return src.astype(dst.dtype)
+
+    cache = jax.tree.map(blend, full, cache)
+    t1 = time.time()
+
+    decode = jax.jit(model.decode_step, static_argnames=())
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    outs = [token]
+    for t in range(args.gen - 1):
+        logits, cache = decode(params, token, cache, jnp.int32(args.prompt_len + t))
+        token = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        outs.append(token)
+    gen = jnp.concatenate(outs, axis=1)
+    t2 = time.time()
+    print(f"prefill {args.batch}x{args.prompt_len} in {t1-t0:.2f}s; "
+          f"decoded {args.gen} tokens/seq in {t2-t1:.2f}s")
+    print("generated:", np.asarray(gen)[:, :10])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Model zoo: composable transformer/SSM stacks for the assigned archs."""
+
+from repro.models.lm import LMModel
+from repro.models.sharding import (
+    DEFAULT_RULES,
+    ParamSpec,
+    constrain,
+    init_params,
+    named_sharding,
+    param_count,
+    param_shardings,
+    rules_for_mesh,
+    spec_for,
+)
+from repro.models.transformer import Block, Segment
+
+__all__ = [
+    "LMModel",
+    "DEFAULT_RULES",
+    "ParamSpec",
+    "constrain",
+    "init_params",
+    "named_sharding",
+    "param_count",
+    "param_shardings",
+    "rules_for_mesh",
+    "spec_for",
+    "Block",
+    "Segment",
+]

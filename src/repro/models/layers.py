@@ -1,0 +1,291 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLP.
+
+All layers are pure functions over (params dict, inputs); parameter
+declaration returns a matching tree of :class:`repro.models.sharding.ParamSpec`.
+
+Attention ships two interchangeable implementations:
+
+* ``dot``     -- materialized scores (smoke tests, short sequences)
+* ``chunked`` -- online-softmax over key blocks via ``lax.scan`` (flash
+  attention in pure XLA ops; O(S * block) memory, used for the 32k dry-run
+  shapes and as the CPU-runnable stand-in for the Pallas kernel)
+
+plus the Pallas flash kernel in :mod:`repro.kernels.flash_attention` for the
+real TPU target (selected by ``impl="pallas"``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float = 1e4,
+    fraction: float = 1.0,
+) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S].
+
+    ``fraction < 1`` rotates only the leading ``fraction * D`` dims
+    (ChatGLM's 2D/partial RoPE).
+    """
+    D = x.shape[-1]
+    rot = int(D * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores (batched; q: [B, Sq, H, D], k/v: [B, Sk, Hkv, D])
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jnp.ndarray, h: int) -> jnp.ndarray:
+    rep = h // k.shape[-2]
+    return jnp.repeat(k, rep, axis=-2) if rep > 1 else k
+
+
+def attend_dot(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Materialized-scores attention."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attend_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax (flash) attention over key blocks, pure XLA.
+
+    Memory is O(Sq * block) per head instead of O(Sq * Sk): the 32k-sequence
+    shapes would need ~4 GiB of scores *per head* with ``attend_dot``.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]  # may differ from D (MLA)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, H, Dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq) + (Sk - Sq)  # absolute query positions
+    qf = q.astype(jnp.float32)
+
+    def step(carry, blk):
+        acc, m, denom, b_idx = carry
+        kblk, vblk = blk
+        kpos = b_idx * block + jnp.arange(block)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32)) * scale
+        mask = jnp.ones((Sq, block), dtype=bool)
+        mask &= kpos[None, :] < Sk  # padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        denom = denom * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+        )
+        return (acc, m_new, denom, b_idx + 1), None
+
+    acc0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, _, denom, _), _ = jax.lax.scan(step, (acc0, m0, d0, 0), (kb, vb))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attend_fused_stub(q, k, v) -> jnp.ndarray:
+    """Shape/dependency-correct surrogate for the Pallas flash kernel.
+
+    Used ONLY by the dry-run's fused-attention variant: the Pallas kernel
+    cannot be compiled by the CPU backend, so the graph carries this cheap
+    stand-in and the dry-run adds the kernel's FLOPs/HBM-bytes analytically
+    (see ``repro.launch.dryrun.attention_kernel_terms``).  On real TPU,
+    ``impl="pallas"`` runs the actual kernel.
+    """
+    H = q.shape[-2]
+    Dv = v.shape[-1]  # MLA: value head dim < qk head dim
+    km = _repeat_kv(k.mean(axis=1, keepdims=True), H)
+    vm = _repeat_kv(v.mean(axis=1, keepdims=True), H)
+    return q[..., :Dv] * km[..., :Dv] + vm
+
+
+def attend(
+    q, k, v, *, impl: str = "dot", causal: bool = True, window=None, scale=None
+) -> jnp.ndarray:
+    if impl == "dot":
+        return attend_dot(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "chunked":
+        return attend_chunked(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "fused":
+        return attend_fused_stub(q, k, v)
+    if impl == "pallas":
+        from repro.kernels.ops import flash_attention
+
+        return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionLayer:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0
+    window: Optional[int] = None
+    cross: bool = False  # cross-attention (kv from encoder/image context)
+
+    def params(self) -> dict:
+        H, KV, D, M = self.n_heads, self.n_kv_heads, self.head_dim, self.d_model
+        p = {
+            "wq": ParamSpec((M, H, D), ("fsdp", "heads", None)),
+            "wk": ParamSpec((M, KV, D), ("fsdp", "kv_heads", None)),
+            "wv": ParamSpec((M, KV, D), ("fsdp", "kv_heads", None)),
+            "wo": ParamSpec((H, D, M), ("heads", None, "fsdp")),
+        }
+        if self.qk_norm:
+            p["q_norm"] = rmsnorm_params(D)
+            p["k_norm"] = rmsnorm_params(D)
+        return p
+
+    # -- projections ---------------------------------------------------
+    def qkv(self, params, x, positions, kv_x=None):
+        """x: [B, S, M] -> q [B,S,H,D], k/v [B,Skv,KV,D] (rotated, normed)."""
+        kv_x = x if kv_x is None else kv_x
+        q = jnp.einsum("bsm,mhd->bshd", x, params["wq"].astype(x.dtype))
+        k = jnp.einsum("bsm,mhd->bshd", kv_x, params["wk"].astype(x.dtype))
+        v = jnp.einsum("bsm,mhd->bshd", kv_x, params["wv"].astype(x.dtype))
+        if self.qk_norm:
+            q = rmsnorm(params["q_norm"], q)
+            k = rmsnorm(params["k_norm"], k)
+        if not self.cross:
+            q = rope(q, positions, self.rope_theta, self.rope_fraction)
+            k = rope(
+                k,
+                positions[..., -k.shape[1] :] if k.shape[1] != q.shape[1] else positions,
+                self.rope_theta,
+                self.rope_fraction,
+            )
+        return q, k, v
+
+    def out(self, params, attn_out):
+        return jnp.einsum("bshd,hdm->bsm", attn_out, params["wo"].astype(attn_out.dtype))
+
+    def __call__(self, params, x, positions, impl="dot", kv_x=None, causal=None):
+        q, k, v = self.qkv(params, x, positions, kv_x=kv_x)
+        causal = (not self.cross) if causal is None else causal
+        o = attend(q, k, v, impl=impl, causal=causal, window=self.window)
+        return self.out(params, o)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    d_model: int
+    d_ff: int
+    act: str = "silu"  # silu (-> SwiGLU) | gelu
+
+    def params(self) -> dict:
+        p = {
+            "w_in": ParamSpec((self.d_model, self.d_ff), ("fsdp", "mlp")),
+            "w_out": ParamSpec((self.d_ff, self.d_model), ("mlp", "fsdp")),
+        }
+        if self.act == "silu":
+            p["w_gate"] = ParamSpec((self.d_model, self.d_ff), ("fsdp", "mlp"))
+        return p
+
+    def __call__(self, params, x):
+        h = jnp.einsum("bsm,mf->bsf", x, params["w_in"].astype(x.dtype))
+        if self.act == "silu":
+            g = jnp.einsum("bsm,mf->bsf", x, params["w_gate"].astype(x.dtype))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        return jnp.einsum("bsf,fm->bsm", h, params["w_out"].astype(x.dtype))

@@ -1,0 +1,203 @@
+"""LMModel: the unified train/serve interface over all assigned architectures.
+
+Responsibilities: token/frontend embeddings, segment construction per family
+(dense / moe / ssm / hybrid / vlm / enc_dec), final norm + LM head, loss,
+prefill and single-token decode with a cache pytree, and ParamSpec trees for
+sharded initialization.
+
+Modality frontends are STUBS per the assignment: ``[audio]`` / ``[vlm]``
+inputs arrive as precomputed frame/patch embeddings (see ``input_specs`` in
+:mod:`repro.launch.dryrun`) and pass through a linear adapter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import (
+    ParamSpec,
+    constrain,
+    init_params,
+    param_count as _pc,
+    rules_for_mesh,
+)
+from repro.models.transformer import Block, Segment
+
+
+@dataclasses.dataclass
+class LMModel:
+    cfg: ModelConfig
+    tp: int = 1  # tensor-parallel size (for head padding); 1 = exact arch
+
+    def __post_init__(self) -> None:
+        cfg = self.cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.vocab = cfg.padded_vocab(max(self.tp, 16))
+        self.segments: List[Segment] = self._build_segments()
+        self.enc_segments: List[Segment] = self._build_encoder()
+
+    # ------------------------------------------------------------------
+    def _build_segments(self) -> List[Segment]:
+        cfg, tp = self.cfg, self.tp
+        segs: List[Segment] = []
+        if cfg.family in ("dense",):
+            segs.append(Segment("dec", Block.make(cfg, "dense", tp), cfg.n_layers))
+        elif cfg.family == "moe":
+            fd = cfg.moe.first_dense_layers
+            if fd:
+                segs.append(Segment("dense0", Block.make(cfg, "dense", tp), fd))
+            segs.append(
+                Segment("moe", Block.make(cfg, "dense", tp, use_moe=True), cfg.n_layers - fd)
+            )
+        elif cfg.family == "ssm":
+            segs.append(Segment("ssm", Block.make(cfg, "ssm", tp), cfg.n_layers))
+        elif cfg.family == "hybrid":
+            segs.append(Segment("hyb", Block.make(cfg, "hybrid", tp), cfg.n_layers))
+        elif cfg.family == "vlm":
+            every = cfg.cross_attn_every
+            n_groups = cfg.n_layers // every
+            segs.append(Segment("self", Block.make(cfg, "dense", tp), cfg.n_layers - n_groups))
+            # cross layers are hoisted into their own scanned segment; the
+            # interleaving is approximated as [selfs..., crosses...] per scan
+            # friendliness (same op mix and comm pattern; DESIGN.md §5)
+            segs.append(Segment("cross", Block.make(cfg, "cross", tp), n_groups))
+        elif cfg.family == "enc_dec":
+            segs.append(Segment("dec", Block.make(cfg, "decoder", tp), cfg.n_layers))
+        else:
+            raise ValueError(f"unknown family {cfg.family}")
+        return segs
+
+    def _build_encoder(self) -> List[Segment]:
+        cfg = self.cfg
+        if cfg.family != "enc_dec" or cfg.encoder is None:
+            return []
+        return [Segment("enc", Block.make(cfg, "encoder", self.tp), cfg.encoder.n_layers)]
+
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        p: Dict[str, Any] = {
+            "embed": ParamSpec((self.vocab, cfg.d_model), ("vocab", "fsdp")),
+            "final_norm": L.rmsnorm_params(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = ParamSpec((cfg.d_model, self.vocab), ("fsdp", "vocab"))
+        for s in self.segments:
+            p[f"seg_{s.name}"] = s.params()
+        for s in self.enc_segments:
+            p[f"enc_{s.name}"] = s.params()
+        if cfg.frontend or cfg.family == "enc_dec":
+            p["adapter"] = ParamSpec((cfg.d_model, cfg.d_model), ("fsdp", None))
+        return p
+
+    def init(self, rng: jax.Array, dtype=None) -> dict:
+        return init_params(self.param_specs(), rng, dtype or jnp.float32)
+
+    def param_count(self) -> int:
+        return _pc(self.param_specs())
+
+    # ------------------------------------------------------------------
+    def _c(self, x, mesh, logical):
+        """Anchor GSPMD propagation at activation boundaries: without these,
+        the partitioner may prefer parameter-side shardings (replicated
+        batch, d_model split over 'data') through the layer scan."""
+        if mesh is None:
+            return x
+        return constrain(x, mesh, rules_for_mesh(mesh), logical)
+
+    def _embed(self, params, tokens: jnp.ndarray) -> jnp.ndarray:
+        return params["embed"].astype(self.dtype)[tokens]
+
+    def _context(self, params, ctx_emb, positions, impl, mesh) -> Optional[jnp.ndarray]:
+        """Run frontend adapter (+ encoder for enc_dec) on stub embeddings."""
+        if ctx_emb is None:
+            return None
+        ctx = jnp.einsum(
+            "bsm,mn->bsn", ctx_emb.astype(self.dtype), params["adapter"].astype(self.dtype)
+        )
+        if self.enc_segments:
+            epos = jnp.arange(ctx.shape[1])[None, :]
+            for s in self.enc_segments:
+                ctx = s.apply(params[f"enc_{s.name}"], ctx, epos, impl=impl, mesh=mesh)
+        return ctx
+
+    def _head(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        x = L.rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        w = (
+            params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        ).astype(self.dtype)
+        return jnp.einsum("bsm,mv->bsv", x, w)
+
+    # ------------------------------------------------------------------
+    def apply(self, params, tokens, ctx_emb=None, impl="dot", mesh=None, remat=True):
+        """Full-sequence logits (training / eval)."""
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self._c(self._embed(params, tokens), mesh, ("batch", "seq_sp", "embed"))
+        ctx = self._context(params, ctx_emb, positions, impl, mesh)
+        for s in self.segments:
+            x = s.apply(params[f"seg_{s.name}"], x, positions, impl=impl, ctx=ctx,
+                        mesh=mesh, remat=remat)
+            x = self._c(x, mesh, ("batch", "seq_sp", "embed"))
+        return self._c(self._head(params, x), mesh, ("batch", None, "vocab"))
+
+    def loss(self, params, batch: dict, impl="dot", mesh=None, remat=True):
+        """Mean next-token cross-entropy. batch: tokens/labels [B,S] (+ctx)."""
+        logits = self.apply(
+            params, batch["tokens"], batch.get("ctx"), impl=impl, mesh=mesh, remat=remat
+        ).astype(jnp.float32)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return (logz - gold).mean()
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, ctx_emb=None, impl="chunked", mesh=None):
+        """Returns (last-position logits, cache pytree)."""
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self._c(self._embed(params, tokens), mesh, ("batch", "seq_sp", "embed"))
+        ctx = self._context(params, ctx_emb, positions, impl, mesh)
+        caches = {}
+        for s in self.segments:
+            x, caches[f"seg_{s.name}"] = s.prefill(
+                params[f"seg_{s.name}"], x, positions, impl=impl, ctx=ctx, mesh=mesh
+            )
+            x = self._c(x, mesh, ("batch", "seq_sp", "embed"))
+        return self._head(params, x[:, -1:]), caches
+
+    def decode_step(self, params, token, caches, pos, ctx_emb=None, mesh=None):
+        """One token for every sequence. token: [B, 1] int32; pos: scalar."""
+        positions = jnp.full((token.shape[0], 1), pos, dtype=jnp.int32)
+        x = self._c(self._embed(params, token), mesh, ("batch", None, "embed"))
+        ctx = None  # cross-attention reads cached K/V from the prefill
+        new_caches = {}
+        for s in self.segments:
+            x, new_caches[f"seg_{s.name}"] = s.decode(
+                params[f"seg_{s.name}"], x, positions, caches[f"seg_{s.name}"], pos,
+                ctx=ctx, mesh=mesh,
+            )
+            x = self._c(x, mesh, ("batch", "seq_sp", "embed"))
+        return self._head(params, x), new_caches
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        dtype = dtype or self.dtype
+        ctx_len = self.ctx_len()
+        return {
+            f"seg_{s.name}": s.init_cache(batch, max_len, dtype, ctx_len)
+            for s in self.segments
+        }
+
+    def ctx_len(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "enc_dec" and cfg.encoder:
+            return cfg.encoder.context
+        return cfg.cross_context or 0

@@ -1,0 +1,129 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like math
+*within* chunks of length Q, a linear recurrence *across* chunks -- O(S*Q)
+instead of O(S^2), and the intra-chunk part is a dense matmul (MXU-friendly;
+the Pallas kernel in :mod:`repro.kernels.ssd_scan` implements that hot loop).
+Decode keeps a constant-size state ``[B, H, N, P]`` -- why the SSM archs run
+the 500k-token shape.
+
+Simplifications vs. the reference implementation (documented in DESIGN.md):
+single B/C group, depthwise conv applied to x only, no learned D skip scaling
+beyond a per-head scalar.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import rmsnorm, rmsnorm_params
+from repro.models.sharding import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Mixer:
+    d_model: int
+    cfg: SSMConfig
+
+    @property
+    def d_inner(self) -> int:
+        return self.cfg.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.cfg.head_dim
+
+    def params(self) -> dict:
+        M, H, P, N = self.d_model, self.n_heads, self.cfg.head_dim, self.cfg.state_dim
+        return {
+            "w_x": ParamSpec((M, H, P), ("fsdp", "ssm_heads", None)),
+            "w_z": ParamSpec((M, H, P), ("fsdp", "ssm_heads", None)),
+            "w_b": ParamSpec((M, N), ("fsdp", None)),
+            "w_c": ParamSpec((M, N), ("fsdp", None)),
+            "w_dt": ParamSpec((M, H), ("fsdp", "ssm_heads")),
+            "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+            "a_log": ParamSpec((H,), ("ssm_heads",), init="ones"),
+            "d_skip": ParamSpec((H,), ("ssm_heads",), init="ones"),
+            "conv_w": ParamSpec(
+                (self.cfg.conv_width, H, P), (None, "ssm_heads", None), scale=0.5
+            ),
+            "norm": rmsnorm_params(H * P),
+            "w_out": ParamSpec((H, P, M), ("ssm_heads", None, "fsdp")),
+        }
+
+    # ------------------------------------------------------------------
+    def _project(self, params, x):
+        """x [B,S,M] -> (xh [B,S,H,P], z, b [B,S,N], c [B,S,N], dt [B,S,H])."""
+        xh = jnp.einsum("bsm,mhp->bshp", x, params["w_x"].astype(x.dtype))
+        z = jnp.einsum("bsm,mhp->bshp", x, params["w_z"].astype(x.dtype))
+        b = jnp.einsum("bsm,mn->bsn", x, params["w_b"].astype(x.dtype))
+        c = jnp.einsum("bsm,mn->bsn", x, params["w_c"].astype(x.dtype))
+        dt = jax.nn.softplus(
+            jnp.einsum("bsm,mh->bsh", x, params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+            + params["dt_bias"].astype(jnp.float32)
+        )
+        return xh, z, b, c, dt
+
+    def _conv(self, params, xh, conv_state=None):
+        """Depthwise causal conv over sequence. xh: [B,S,H,P]."""
+        W = self.cfg.conv_width
+        if conv_state is None:
+            pad = jnp.zeros((xh.shape[0], W - 1, *xh.shape[2:]), xh.dtype)
+        else:
+            pad = conv_state
+        xp = jnp.concatenate([pad, xh], axis=1)
+        out = jnp.zeros_like(xh)
+        for i in range(W):
+            out = out + xp[:, i : i + xh.shape[1]] * params["conv_w"][i].astype(xh.dtype)
+        new_state = xp[:, -(W - 1) :] if W > 1 else pad
+        return jax.nn.silu(out), new_state
+
+    def _gate_out(self, params, y, z):
+        B, S, H, P = y.shape
+        y = y * jax.nn.silu(z)
+        y = rmsnorm(params["norm"], y.reshape(B, S, H * P)).reshape(B, S, H, P)
+        return jnp.einsum("bshp,hpm->bsm", y, params["w_out"].astype(y.dtype))
+
+    # ------------------------------------------------------------------
+    def __call__(self, params, x, impl: str = "chunked"):
+        """Full-sequence forward (train/prefill)."""
+        xh, z, b, c, dt = self._project(params, x)
+        xh, _ = self._conv(params, xh)
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))  # [H], negative
+        loga = a[None, None, :] * dt  # [B,S,H]  log decay
+        xdt = xh.astype(jnp.float32) * dt[..., None]
+        if impl == "pallas":
+            from repro.kernels.ops import ssd_chunked as ssd_fn
+        else:
+            from repro.models.ssd import ssd_chunked as ssd_fn
+        y = ssd_fn(xdt, loga, b.astype(jnp.float32), c.astype(jnp.float32), self.cfg.chunk)
+        y = y + xh.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+        return self._gate_out(params, y.astype(x.dtype), z)
+
+    # ------------------------------------------------------------------
+    def decode(self, params, x, cache) -> Tuple[jnp.ndarray, dict]:
+        """Single-token step. cache: {ssm [B,H,N,P] f32, conv [B,W-1,H,P]}."""
+        xh, z, b, c, dt = self._project(params, x)  # S == 1
+        xh, conv_state = self._conv(params, xh, cache["conv"])
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        decay = jnp.exp(a[None, :] * dt[:, 0])  # [B,H]
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]  # [B,H,P]
+        h = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b[:, 0].astype(jnp.float32), xdt
+        )
+        y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), h)
+        y = y + xh[:, 0].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, :, None]
+        out = self._gate_out(params, y[:, None].astype(x.dtype), z)
+        return out, {"ssm": h, "conv": conv_state}
+
+    def init_cache(self, batch: int, dtype) -> dict:
+        H, P, N, W = self.n_heads, self.cfg.head_dim, self.cfg.state_dim, self.cfg.conv_width
+        return {
+            "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((batch, max(W - 1, 1), H, P), dtype),
+        }

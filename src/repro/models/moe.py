@@ -1,0 +1,200 @@
+"""Mixture-of-Experts with expert-parallel all-to-all dispatch.
+
+Token -> expert routing is the modern LM incarnation of the paper's irregular
+point-to-point pattern: per-step, every data shard sends a data-dependent
+subset of its tokens to the shards owning their experts.  Placement follows
+the paper's pod-aware guidance (DESIGN.md section 4):
+
+* experts are sharded over the **data** axis (expert parallelism), so the
+  dispatch/return all-to-alls run entirely over intra-pod ICI;
+* across **pods** experts are replicated -- the DCI carries only gradient
+  reduction, never token traffic;
+* each expert's FFN dim is sharded over **model** (TP within the expert).
+
+Dispatch is capacity-based (tokens beyond ``capacity_factor`` per
+(src shard, dst shard) slot are dropped, standard GShard/Switch practice) and
+runs inside ``shard_map`` so the all-to-all is explicit -- the dry-run HLO
+shows it, and the hierarchical variant can replace it on multi-pod meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import MLP
+from repro.models.sharding import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoELayer:
+    d_model: int
+    cfg: MoEConfig
+    act: str = "silu"
+    ep_axis: str = "data"  # expert-parallel mesh axis (intra-pod!)
+
+    def params(self) -> dict:
+        E, M, F = self.cfg.n_experts, self.d_model, self.cfg.d_ff_expert
+        p = {
+            "router": ParamSpec((M, E), ("fsdp", None)),
+            "w_in": ParamSpec((E, M, F), ("experts", None, "mlp")),
+            "w_gate": ParamSpec((E, M, F), ("experts", None, "mlp")),
+            "w_out": ParamSpec((E, F, M), ("experts", "mlp", None)),
+        }
+        if self.cfg.n_shared:
+            shared = MLP(self.d_model, self.cfg.d_ff_expert * self.cfg.n_shared, self.act)
+            p["shared"] = shared.params()
+        return p
+
+    # ------------------------------------------------------------------
+    def __call__(self, params, x: jnp.ndarray, mesh=None) -> jnp.ndarray:
+        """x: [B, S, M].  Routed experts + optional shared experts."""
+        cfg = self.cfg
+        B, S, M = x.shape
+        logits = jnp.einsum("bsm,me->bse", x, params["router"].astype(x.dtype))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, cfg.top_k)  # [B,S,k]
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        if mesh is not None and self.ep_axis in mesh.axis_names and mesh.shape[self.ep_axis] > 1:
+            routed = self._dispatch_shard_map(params, x, top_p, top_e, mesh)
+        else:
+            routed = self._dispatch_local(params, x, top_p, top_e)
+
+        if cfg.n_shared:
+            shared = MLP(self.d_model, cfg.d_ff_expert * cfg.n_shared, self.act)
+            routed = routed + shared(params["shared"], x)
+        return routed
+
+    # ------------------------------------------------------------------
+    def _expert_ffn(self, w_in, w_gate, w_out, xe: jnp.ndarray) -> jnp.ndarray:
+        """Batched per-expert FFN. xe: [E, C, M] -> [E, C, M]."""
+        h = jnp.einsum("ecm,emf->ecf", xe, w_in.astype(xe.dtype))
+        g = jnp.einsum("ecm,emf->ecf", xe, w_gate.astype(xe.dtype))
+        h = jax.nn.silu(g) * h
+        return jnp.einsum("ecf,efm->ecm", h, w_out.astype(xe.dtype))
+
+    @staticmethod
+    def _fill_capacity(eid: jnp.ndarray, n_bins: int, cap: int):
+        """Position of each assignment within its bin; >= cap means dropped.
+
+        eid: [T] bin ids. Returns (pos_in_bin [T], keep mask [T]).
+        """
+        onehot = jax.nn.one_hot(eid, n_bins, dtype=jnp.int32)  # [T, E]
+        pos = jnp.cumsum(onehot, axis=0) - 1  # position within bin
+        pos = jnp.take_along_axis(pos, eid[:, None], axis=1)[:, 0]
+        return pos, pos < cap
+
+    # -- single-device / replicated fallback ----------------------------
+    def _dispatch_local(self, params, x, top_p, top_e) -> jnp.ndarray:
+        cfg = self.cfg
+        B, S, M = x.shape
+        T = B * S * cfg.top_k
+        xt = jnp.repeat(x.reshape(B * S, M), cfg.top_k, axis=0)  # [T, M]
+        eid = top_e.reshape(T)
+        w = top_p.reshape(T).astype(x.dtype)
+        cap = max(int(T / cfg.n_experts * cfg.capacity_factor), 1)
+        pos, keep = self._fill_capacity(eid, cfg.n_experts, cap)
+        slot = jnp.where(keep, eid * cap + pos, cfg.n_experts * cap)  # drop slot
+        buf = jnp.zeros((cfg.n_experts * cap + 1, M), x.dtype).at[slot].set(xt)
+        ye = self._expert_ffn(
+            params["w_in"], params["w_gate"], params["w_out"],
+            buf[:-1].reshape(cfg.n_experts, cap, M),
+        ).reshape(cfg.n_experts * cap, M)
+        yt = jnp.concatenate([ye, jnp.zeros((1, M), x.dtype)])[slot] * w[:, None]
+        return yt.reshape(B * S, cfg.top_k, M).sum(1).reshape(B, S, M)
+
+    # -- expert-parallel all-to-all over the data axis -------------------
+    def _dispatch_shard_map(self, params, x, top_p, top_e, mesh) -> jnp.ndarray:
+        cfg = self.cfg
+        B, S, M = x.shape
+        ep = self.ep_axis
+        nd = mesh.shape[ep]
+        if cfg.n_experts % nd:
+            return self._dispatch_local(params, x, top_p, top_e)
+        e_local = cfg.n_experts // nd
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+        def body(xl, pl, el, w_in, w_gate, w_out):
+            # xl: [b, S, M] local batch; experts local: [e_local, M, F_shard].
+            #
+            # (A bf16 pin of this whole path was tried and refuted in
+            # EXPERIMENTS.md §Perf iter 3: the f32 buffers come from XLA's
+            # scatter-add backward, not from a castable leaf here.)
+            in_dtype = xl.dtype
+            #
+            # Routing is GATHER-based: the only scatters are 1-D int32
+            # inverse-permutation builds.  A 2-D `.at[slot].set(tokens)`
+            # scatter materializes several full-width [slots, M] index/temp
+            # buffers (measured: ~12 x 4 GiB per layer on deepseek-v2-lite,
+            # dominating the memory roofline -- EXPERIMENTS.md §Perf iter 2).
+            b = xl.shape[0]
+            t = b * S * cfg.top_k
+            xt = jnp.repeat(xl.reshape(b * S, M), cfg.top_k, axis=0)
+            eid = el.reshape(t)
+            w = pl.reshape(t).astype(xl.dtype)
+            dst = eid // e_local  # destination data-shard
+            # capacity per (src shard -> dst shard) slot; floor of 8 keeps
+            # decode-time (tiny t) routing essentially drop-free
+            cap = max(int(t / nd * cfg.capacity_factor), 8)
+            pos, keep = self._fill_capacity(dst, nd, cap)
+            slot = jnp.where(keep, dst * cap + pos, nd * cap)
+            # inverse permutation: which token fills each send slot (1-D)
+            inv = jnp.full((nd * cap + 1,), t, jnp.int32).at[slot].set(
+                jnp.arange(t, dtype=jnp.int32)
+            )[:-1]
+            xt_pad = jnp.concatenate([xt, jnp.zeros((1, M), xl.dtype)])
+            send = xt_pad[inv]  # [nd*cap, M] gather, no wide scatter
+            send_e = jnp.concatenate([eid % e_local, jnp.full((1,), e_local, jnp.int32)])[inv]
+            # all-to-all over the EP axis (intra-pod ICI by construction)
+            recv = jax.lax.all_to_all(
+                send.reshape(nd, cap, M), ep, 0, 0, tiled=True
+            ).reshape(nd * cap, M)
+            recv_e = jax.lax.all_to_all(
+                send_e.reshape(nd, cap), ep, 0, 0, tiled=True
+            ).reshape(nd * cap)
+            # bin received tokens into local experts (second capacity stage)
+            cap2 = max(int(nd * cap / e_local), 1)
+            bin_id = jnp.minimum(recv_e, e_local)  # dead slots -> drop bin
+            pos2, keep2 = self._fill_capacity(bin_id, e_local + 1, cap2)
+            keep2 &= recv_e < e_local
+            slot2 = jnp.where(keep2, bin_id * cap2 + pos2, e_local * cap2)
+            inv2 = jnp.full((e_local * cap2 + 1,), nd * cap, jnp.int32).at[slot2].set(
+                jnp.arange(nd * cap, dtype=jnp.int32)
+            )[:-1]
+            recv_pad = jnp.concatenate([recv, jnp.zeros((1, M), xl.dtype)])
+            buf = recv_pad[inv2]
+            ye = self._expert_ffn(
+                w_in, w_gate, w_out, buf.reshape(e_local, cap2, M)
+            ).reshape(e_local * cap2, M)
+            # NOTE: with F sharded over "model", ye is a partial sum.  The
+            # psum is deferred to the *combined* [b, S, M] output (7.5x fewer
+            # bytes than psumming the dispatch-width buffer); every routing
+            # op in between is linear, so the result is identical.
+            back = jnp.concatenate([ye, jnp.zeros((1, M), ye.dtype)])[slot2]
+            ret = jax.lax.all_to_all(
+                back.reshape(nd, cap, M), ep, 0, 0, tiled=True
+            ).reshape(nd * cap, M)
+            yt = jnp.concatenate([ret, jnp.zeros((1, M), ret.dtype)])[slot]
+            yt = yt * w[:, None]
+            out = yt.reshape(b * S, cfg.top_k, M).sum(1).reshape(b, S, M)
+            if "model" in mesh.axis_names and mesh.shape["model"] > 1:
+                out = jax.lax.psum(out, "model")
+            return out.astype(in_dtype)
+
+        x_spec = P(batch_axes or None, None, None)
+        r_spec = P(batch_axes or None, None, None)
+        w_spec = P(ep, None, "model" if "model" in mesh.axis_names else None)
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(x_spec, r_spec, r_spec, w_spec, w_spec,
+                      P(ep, "model" if "model" in mesh.axis_names else None, None)),
+            out_specs=x_spec,
+            check_vma=False,
+        )(x, top_p, top_e, params["w_in"], params["w_gate"], params["w_out"])

@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Every parameter and boundary activation carries a tuple of *logical* axis
+names; :func:`spec_for` resolves them to mesh axes through a rules table.
+The same model code therefore runs on the single-pod ``("data", "model")``
+mesh, the multi-pod ``("pod", "data", "model")`` mesh, or a 1-device CPU
+mesh (where every rule resolves to None).
+
+Default placement (see DESIGN.md section 6):
+
+* tensor-parallel dims (heads / mlp / vocab / experts / state) -> ``model``
+* weight-FSDP dim (the non-TP dim of each matrix)              -> ``data``
+* parameters are *replicated* across ``pod`` (keeps steady-state DCI traffic
+  to gradient reduction only -- the paper-guided choice); optimizer state
+  follows the parameters.
+* activation batch -> ``("pod", "data")`` (falls back to fewer axes when the
+  batch is too small to split).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+#: logical axis -> mesh axes (tuple) or None (replicated)
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    # experts ride the *data* axis (EP inside the pod; pods replicate experts
+    # so token all-to-alls never cross DCI -- DESIGN.md section 4)
+    "experts": ("data",),
+    "ssm_heads": ("model",),
+    # decode-cache sharding: sequence dim over `model` (context parallelism).
+    # head_dim sharding ("cache_dim") made XLA all-gather the full K cache in
+    # f32 per layer instead of partial-dotting (§Perf vision-90b iter 5);
+    # sequence sharding keeps all cache reads local -- scores are s-sharded,
+    # and only the tiny softmax reduction + output psum cross chips.
+    "cache_seq": ("model",),
+    "cache_dim": ("model",),
+    # sequence-parallel residual/norm regions (Megatron-SP): activations
+    # between blocks are sharded over `model` on the *sequence* dim, cutting
+    # per-chip activation memory by the TP degree.  Falls back to replicated
+    # when seq is too short (decode) via spec_for's divisibility check.
+    "seq_sp": ("model",),
+    "embed": None,
+    "seq": None,
+    "layers": None,
+    "state": None,
+    "head_dim": None,
+    None: None,
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Optional[Rules] = None) -> Rules:
+    """Drop mesh axes that do not exist (e.g. no ``pod`` on single-pod)."""
+    import os
+
+    present = set(mesh.axis_names)
+    out: Rules = {}
+    base = dict(DEFAULT_RULES)
+    # §Perf knob: sharding the activations' d_model dim over `data` aligns it
+    # with the weights' FSDP dim, so projections become partial-dots + tiny
+    # activation all-reduces instead of per-layer weight all-gathers
+    # (weight-stationary decode).
+    if os.environ.get("REPRO_EMBED_SHARD") == "data":
+        base["embed"] = ("data",)
+    if overrides:
+        base.update(overrides)
+    for logical, axes in base.items():
+        if axes is None:
+            out[logical] = None
+        else:
+            kept = tuple(a for a in axes if a in present)
+            out[logical] = kept or None
+    return out
+
+
+def _axis_size(mesh: Mesh, axes: Optional[Tuple[str, ...]]) -> int:
+    if not axes:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(
+    mesh: Mesh,
+    rules: Rules,
+    logical: LogicalAxes,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping non-divisible dims.
+
+    If ``shape`` is given, a dim whose size is not divisible by the resolved
+    axis-product falls back to replication (e.g. 25 heads on a 16-way
+    ``model`` axis -- hymba/whisper/llama4 attention).  For the ``batch``
+    logical axis, a *prefix* of the mesh axes that divides the dim is kept
+    (batch 32 on pod x data = 2 x 16 keeps both; batch 1 keeps none).
+    """
+    parts = []
+    for d, name in enumerate(logical):
+        axes = rules.get(name) if name is not None else None
+        if not axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            dim = shape[d]
+            if name == "batch":
+                kept = []
+                prod = 1
+                for a in axes:
+                    if dim % (prod * mesh.shape[a]) == 0:
+                        kept.append(a)
+                        prod *= mesh.shape[a]
+                    else:
+                        break
+                parts.append(tuple(kept) if kept else None)
+                continue
+            if dim % _axis_size(mesh, axes) != 0:
+                parts.append(None)
+                continue
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def named_sharding(mesh: Mesh, rules: Rules, logical: LogicalAxes, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, rules, logical, shape))
+
+
+def constrain(x: jax.Array, mesh: Mesh, rules: Rules, logical: LogicalAxes) -> jax.Array:
+    """``with_sharding_constraint`` from logical axes (no-op off-mesh)."""
+    if mesh.empty or math.prod(mesh.devices.shape) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(mesh, rules, logical, x.shape)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declared parameter: shape + logical axes + initializer family."""
+
+    shape: Tuple[int, ...]
+    logical: LogicalAxes
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0
+
+    def initialize(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jax.numpy.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jax.numpy.ones(self.shape, dtype)
+        # fan-in from the first non-stacked dim ("layers" is a batch of
+        # independent layer weights, not an input dimension)
+        start = 1 if (self.logical and self.logical[0] == "layers") else 0
+        dims = self.shape[start:]
+        fan_in = dims[0] if len(dims) > 1 else max(dims[0] if dims else 1, 1)
+        std = self.scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+def init_params(tree, key: jax.Array, dtype) -> dict:
+    """Initialize a (nested dict) tree of ParamSpec into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrs = [l.initialize(k, dtype) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_shardings(tree, mesh: Mesh, rules: Rules):
+    """NamedSharding tree matching a ParamSpec tree."""
+    return jax.tree.map(
+        lambda ps: named_sharding(mesh, rules, ps.logical, ps.shape),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(l.shape)) for l in leaves)

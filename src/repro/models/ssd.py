@@ -1,0 +1,67 @@
+"""Chunked SSD algorithm (Mamba-2) in pure XLA ops.
+
+Sequential-scan over chunks keeps the quadratic intra-chunk tensors bounded
+to one chunk at a time (O(B*Q^2*H) live memory), while the cross-chunk state
+``h [B,H,N,P]`` carries the recurrence.  This is the CPU-runnable twin of the
+Pallas kernel in :mod:`repro.kernels.ssd_scan` and the implementation the
+dry-run shapes compile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(
+    xdt: jnp.ndarray,  # [B, S, H, P] dt-scaled inputs (float32)
+    loga: jnp.ndarray,  # [B, S, H]   log decay per step (<= 0)
+    b: jnp.ndarray,  # [B, S, N]
+    c: jnp.ndarray,  # [B, S, N]
+    chunk: int = 128,
+) -> jnp.ndarray:
+    """Returns y [B, S, H, P] with h_t = exp(loga_t) h_{t-1} + b_t (x)xdt_t,
+    y_t = c_t . h_t  (all per head)."""
+    B, S, H, P = xdt.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    # chunk-major for scan: [nc, B, Q, ...]
+    xc = xdt.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    lc = loga.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    bc = b.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    cc = c.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+
+    def step(h, inp):
+        xq, lq, bq, cq = inp  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        la = jnp.cumsum(lq, axis=1)  # inclusive log-decay prefix [B,Q,H]
+        # intra-chunk (attention-like, masked).  The mask is applied to the
+        # *exponent*: masked (j > i) entries have positive log-decay sums that
+        # overflow exp, and inf * 0 poisons the backward pass.
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)
+        diff = la[:, :, None, :] - la[:, None, :, :]  # [B,Q,Q,H]
+        diff = jnp.where(mask[None, :, :, None], diff, -jnp.inf)
+        decay = jnp.exp(diff)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, xq)
+        # inter-chunk: state entering the chunk, decayed through position i
+        y = y + jnp.einsum("bin,bhnp->bihp", cq, h) * jnp.exp(la)[..., None]
+        # state at chunk end
+        la_end = la[:, -1]  # [B,H]
+        w = jnp.exp(la_end[:, None, :] - la)  # [B,Q,H] decay from j to end
+        s_end = jnp.einsum("bjn,bjh,bjhp->bhnp", bq, w, xq)
+        h = h * jnp.exp(la_end)[:, :, None, None] + s_end
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xc, lc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P)
+    return y[:, :S]

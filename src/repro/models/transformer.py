@@ -1,0 +1,489 @@
+"""Composable transformer blocks and scanned segments.
+
+A model is a sequence of **segments**; each segment is ``count`` copies of one
+homogeneous **block**, executed under ``jax.lax.scan`` with per-segment
+stacked parameters ``[count, ...]`` (MaxText-style: keeps the HLO small and
+compile times bounded at 100-layer scale) and rematerialization.
+
+Block kinds (built from :mod:`repro.models.layers` / :mod:`moe` / :mod:`mla` /
+:mod:`mamba2`):
+
+* ``dense``   -- self-attention (GQA or MLA) + MLP or MoE
+* ``ssm``     -- Mamba-2 mixer only
+* ``hybrid``  -- parallel attention + SSM heads (Hymba), then MLP
+* ``cross``   -- cross-attention to a fixed context (VLM image layers,
+  encoder-decoder), optionally fused with self-attention
+* ``encoder`` -- bidirectional self-attention + MLP
+
+Every block implements ``apply`` (full sequence, no cache), ``prefill``
+(full sequence, returns its cache slice) and ``decode`` (single token +
+cache).  Head counts are padded per DESIGN.md section 6 when the
+tensor-parallel size does not divide them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba2 import Mamba2Mixer
+from repro.models.mla import MLAttention
+from repro.models.moe import MoELayer
+from repro.models.sharding import ParamSpec
+
+
+def pad_heads(n_heads: int, n_kv: int, tp: int) -> Tuple[int, int]:
+    """Pad (q heads, kv heads) so q % tp == 0 and q % kv == 0 (DESIGN §6)."""
+    hp = -(-n_heads // tp) * tp
+    kv = n_kv
+    while hp % kv:
+        kv += 1
+    return hp, kv
+
+
+def kv_store_heads(kv: int, tp: int) -> int:
+    """KV heads as stored in the decode cache.
+
+    We store the *true* (grouping-padded) KV head count and shard the cache
+    on ``head_dim`` over the ``model`` axis instead (rule ``cache_dim`` in
+    :mod:`repro.models.sharding`): repeating KV heads up to the TP size would
+    double the 32k cache (llama-3.2-vision-90b would not fit a single pod),
+    while head_dim (64/128) always divides the 16-way model axis and the
+    decode-time partial-dot psum is tiny (Sq == 1).
+    """
+    del tp
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Attention with cache (shared by all attention-bearing blocks)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedAttention:
+    """GQA attention + ring/linear KV cache."""
+
+    attn: L.AttentionLayer
+    kv_store: int  # stored (possibly repeated) kv heads
+    window: Optional[int] = None
+
+    def params(self) -> dict:
+        return self.attn.params()
+
+    def _store(self, k: jnp.ndarray) -> jnp.ndarray:
+        rep = self.kv_store // k.shape[-2]
+        return jnp.repeat(k, rep, axis=-2) if rep > 1 else k
+
+    def apply(self, params, x, positions, impl):
+        return self.attn(params, x, positions, impl=impl)
+
+    def prefill(self, params, x, positions, impl):
+        q, k, v = self.attn.qkv(params, x, positions)
+        o = L.attend(q, k, v, impl=impl, causal=True, window=self.window)
+        out = self.attn.out(params, o)
+        ks, vs = self._store(k), self._store(v)
+        if self.window is not None:
+            W = self.window
+            S = ks.shape[1]
+            if S >= W:
+                # ring holds the last W keys at slot = pos % W
+                idx = (jnp.arange(S - W, S)) % W
+                ks = jnp.zeros((ks.shape[0], W, *ks.shape[2:]), ks.dtype).at[:, idx].set(ks[:, -W:])
+                vs = jnp.zeros((vs.shape[0], W, *vs.shape[2:]), vs.dtype).at[:, idx].set(vs[:, -W:])
+            else:
+                pad = W - S
+                ks = jnp.pad(ks, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vs = jnp.pad(vs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return out, {"k": ks, "v": vs}
+
+    def decode(self, params, x, positions, cache, pos, impl):
+        """Single-token decode WITHOUT touching the cache tensors.
+
+        Attention runs over the *existing* cache entries (masked to
+        ``< pos``) plus the current token's K/V as an explicit extra term;
+        the cache append happens once per step *outside* the layer scan
+        (:meth:`Segment.decode`).  Carrying the updated cache through the
+        scan instead forced a full stacked-cache copy per layer iteration
+        and a replicated->sharded resharding gather -- together these
+        dominated the decode memory roofline (EXPERIMENTS.md §Perf,
+        vision-90b iterations 2-3).
+        """
+        q, k, v = self.attn.qkv(params, x, positions)  # S == 1
+        k, v = self._store(k), self._store(v)
+        ks, vs = cache["k"], cache["v"]
+        if self.window is not None:
+            W = self.window
+            slots = jnp.arange(W)
+            # ring slots hold positions pos-W..pos-1 except the slot about to
+            # be overwritten; all written slots are < pos by construction
+            valid = jnp.where(pos >= W, slots != pos % W, slots < pos)
+        else:
+            valid = jnp.arange(ks.shape[1]) < pos
+        o = self._decode_attend(q, k, v, ks, vs, valid)
+        return self.attn.out(params, o), {"k_new": k, "v_new": v}
+
+    def _decode_attend(self, q, k_new, v_new, ks, vs, valid):
+        """Grouped-GQA single-query attention over cache + current token.
+
+        The grouped einsum avoids materializing KV heads repeated to the
+        query head count (up to 8x the whole cache per layer -- §Perf,
+        vision-90b iteration 1); dots run in the cache dtype, softmax in f32.
+        """
+        B, _, H, D = q.shape
+        KV = ks.shape[-2]
+        rep = H // KV
+        q5 = q.reshape(B, 1, KV, rep, D).transpose(0, 2, 3, 1, 4)  # [B,KV,rep,1,D]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+        lc = jnp.einsum("bkrqd,bskd->bkrqs", q5, ks.astype(q.dtype)).astype(jnp.float32) * scale
+        lc = jnp.where(valid[None, None, None, None, :], lc, L.NEG_INF)
+        lnew = jnp.einsum("bkrqd,bskd->bkrqs", q5, k_new.astype(q.dtype)).astype(jnp.float32) * scale
+        # online-softmax composition of the (seq-sharded) cache term and the
+        # current-token term: concatenating along the sharded seq dim made
+        # the partitioner gather the whole cache (§Perf vision-90b iter 5)
+        m = jnp.maximum(lc.max(axis=-1, keepdims=True), lnew)
+        pc = jnp.exp(lc - m)
+        pn = jnp.exp(lnew - m)
+        denom = pc.sum(axis=-1, keepdims=True) + pn
+        o = jnp.einsum("bkrqs,bskd->bkrqd", pc.astype(vs.dtype), vs) + pn.astype(
+            v_new.dtype
+        ) * v_new.transpose(0, 2, 1, 3)[:, :, None]
+        o = o / denom.astype(o.dtype)
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(q.dtype)
+
+    def init_cache(self, batch, max_len, dtype):
+        S = self.window if self.window is not None else max_len
+        D = self.attn.head_dim
+        return {
+            "k": jnp.zeros((batch, S, self.kv_store, D), dtype),
+            "v": jnp.zeros((batch, S, self.kv_store, D), dtype),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One transformer block; which sub-layers exist depends on the config."""
+
+    cfg: ModelConfig
+    tp: int = 1
+    self_attn: Optional[CachedAttention] = None
+    mla: Optional[MLAttention] = None
+    ssm: Optional[Mamba2Mixer] = None
+    cross: Optional[L.AttentionLayer] = None
+    mlp: Optional[L.MLP] = None
+    moe: Optional[MoELayer] = None
+    causal: bool = True
+
+    # -- construction ----------------------------------------------------
+    @staticmethod
+    def make(cfg: ModelConfig, kind: str, tp: int = 1, use_moe: bool = False) -> "Block":
+        hp, kvp = pad_heads(cfg.n_heads, cfg.n_kv_heads, tp)
+        d = cfg.resolved_head_dim
+        attn = L.AttentionLayer(
+            d_model=cfg.d_model, n_heads=hp, n_kv_heads=kvp, head_dim=d,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction, window=cfg.window,
+        )
+        cached = CachedAttention(attn, kv_store_heads(kvp, tp), window=cfg.window)
+        mlp = L.MLP(cfg.d_model, cfg.d_ff, cfg.act) if cfg.d_ff else None
+        moe = MoELayer(cfg.d_model, cfg.moe, cfg.act) if (use_moe and cfg.moe) else None
+        kw: Dict[str, Any] = dict(cfg=cfg, tp=tp, mlp=None if moe else mlp, moe=moe)
+        if kind == "dense":
+            if cfg.mla is not None:
+                return Block(self_attn=None, mla=MLAttention(cfg.d_model, hp, cfg.mla, cfg.rope_theta), **kw)
+            return Block(self_attn=cached, **kw)
+        if kind == "ssm":
+            return Block(ssm=Mamba2Mixer(cfg.d_model, cfg.ssm), mlp=None, moe=None,
+                         cfg=cfg, tp=tp)
+        if kind == "hybrid":
+            return Block(self_attn=cached, ssm=Mamba2Mixer(cfg.d_model, cfg.ssm), **kw)
+        if kind == "cross":
+            xattn = L.AttentionLayer(
+                d_model=cfg.d_model, n_heads=hp, n_kv_heads=kvp, head_dim=d,
+                cross=True,
+            )
+            return Block(cross=xattn, **kw)
+        if kind == "decoder":  # enc-dec decoder layer: self + cross + mlp
+            xattn = L.AttentionLayer(
+                d_model=cfg.d_model, n_heads=hp, n_kv_heads=kvp, head_dim=d, cross=True,
+            )
+            return Block(self_attn=cached, cross=xattn, **kw)
+        if kind == "encoder":
+            return Block(self_attn=cached, causal=False, **kw)
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    # -- params ----------------------------------------------------------
+    def params(self) -> dict:
+        p: Dict[str, Any] = {}
+        eps = self.cfg.norm_eps
+        if self.self_attn is not None:
+            p["attn"] = self.self_attn.params()
+            p["attn_norm"] = L.rmsnorm_params(self.cfg.d_model)
+        if self.mla is not None:
+            p["attn"] = self.mla.params()
+            p["attn_norm"] = L.rmsnorm_params(self.cfg.d_model)
+        if self.ssm is not None:
+            p["ssm"] = self.ssm.params()
+            if self.self_attn is None:
+                p["ssm_norm"] = L.rmsnorm_params(self.cfg.d_model)
+        if self.cross is not None:
+            p["cross"] = self.cross.params()
+            p["cross_norm"] = L.rmsnorm_params(self.cfg.d_model)
+        if self.mlp is not None:
+            p["mlp"] = self.mlp.params()
+            p["mlp_norm"] = L.rmsnorm_params(self.cfg.d_model)
+        if self.moe is not None:
+            p["moe"] = self.moe.params()
+            p["mlp_norm"] = L.rmsnorm_params(self.cfg.d_model)
+        return p
+
+    # -- mixing sub-layer (attention and/or SSM), full sequence -----------
+    def _mix(self, p, x, positions, impl, mode, cache=None, pos=None):
+        """Returns (delta, new_cache_pieces)."""
+        new_cache: Dict[str, Any] = {}
+        parts = []
+        eps = self.cfg.norm_eps
+        if self.self_attn is not None or self.mla is not None:
+            h = L.rmsnorm(p["attn_norm"], x, eps)
+            if self.mla is not None:
+                if mode == "decode":
+                    o, new_cache["mla"] = self.mla.decode(p["attn"], h, positions, cache["mla"], pos)
+                else:
+                    o = self.mla(p["attn"], h, positions, impl=impl)
+                    if mode == "prefill":
+                        # cache the latent directly (absorbed decode reads it)
+                        c_kv, k_rope = self.mla.latent(p["attn"], h, positions)
+                        new_cache["mla"] = {"c_kv": c_kv, "k_rope": k_rope}
+            else:
+                if mode == "apply":
+                    q, k, v = self.self_attn.attn.qkv(p["attn"], h, positions)
+                    o = L.attend(q, k, v, impl=impl, causal=self.causal, window=self.self_attn.window)
+                    o = self.self_attn.attn.out(p["attn"], o)
+                elif mode == "prefill":
+                    o, new_cache["attn"] = self.self_attn.prefill(p["attn"], h, positions, impl)
+                else:
+                    o, new_cache["attn"] = self.self_attn.decode(
+                        p["attn"], h, positions, cache["attn"], pos, impl
+                    )
+            parts.append(o)
+        if self.ssm is not None:
+            hs = L.rmsnorm(p.get("ssm_norm", p.get("attn_norm")), x, eps)
+            if mode == "decode":
+                o, new_cache["ssm"] = self.ssm.decode(p["ssm"], hs, cache["ssm"])
+            else:
+                o = self.ssm(p["ssm"], hs, impl="chunked" if impl != "dot" else "chunked")
+                if mode == "prefill":
+                    new_cache["ssm"] = self._ssm_prefill_state(p, hs)
+            parts.append(o)
+        delta = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+        return delta, new_cache
+
+    def _ssm_prefill_state(self, p, hs):
+        """Final SSM state after a prefill (recompute via chunked scan end)."""
+        # run the mixer's projections and fold the sequence into the state
+        m = self.ssm
+        xh, z, b, c, dt = m._project(p["ssm"], hs)
+        xh, conv_state = m._conv(p["ssm"], xh)
+        a = -jnp.exp(p["ssm"]["a_log"].astype(jnp.float32))
+        loga = a[None, None, :] * dt
+        xdt = xh.astype(jnp.float32) * dt[..., None]
+        # state = sum_j exp(sum_{k>j} loga_k) b_j xdt_j
+        la = jnp.cumsum(loga, axis=1)
+        w = jnp.exp(la[:, -1:, :] - la)  # [B,S,H]
+        h = jnp.einsum("bsn,bsh,bshp->bhnp", b.astype(jnp.float32), w, xdt)
+        return {"ssm": h, "conv": conv_state[:, -(m.cfg.conv_width - 1):]}
+
+    # -- full block ------------------------------------------------------
+    def run(self, p, x, positions, *, impl, mode, cache=None, pos=None,
+            ctx=None, ctx_cache=None, mesh=None):
+        """mode: apply | prefill | decode. Returns (x, new_cache)."""
+        new_cache: Dict[str, Any] = {}
+        if self.self_attn is not None or self.mla is not None or self.ssm is not None:
+            delta, nc = self._mix(p, x, positions, impl, mode, cache, pos)
+            x = x + delta
+            new_cache.update(nc)
+        if self.cross is not None:
+            h = L.rmsnorm(p["cross_norm"], x, self.cfg.norm_eps)
+            if mode == "decode":
+                # cross K/V are immutable after prefill: read, never re-emit
+                # (returning them as scan ys copied the full context cache
+                # once per decode step)
+                kc, vc = cache["cross_k"], cache["cross_v"]
+                q = jnp.einsum("bsm,mhd->bshd", h, p["cross"]["wq"].astype(h.dtype))
+                o = L.attend(q, kc, vc, impl="dot", causal=False)
+                o = self.cross.out(p["cross"], o)
+            else:
+                q, k, v = self.cross.qkv(p["cross"], h, positions, kv_x=ctx)
+                o = L.attend(q, k, v, impl=impl, causal=False)
+                o = self.cross.out(p["cross"], o)
+                if mode == "prefill":
+                    new_cache["cross_k"], new_cache["cross_v"] = k, v
+            x = x + o
+        if self.mlp is not None or self.moe is not None:
+            h = L.rmsnorm(p["mlp_norm"], x, self.cfg.norm_eps)
+            if self.moe is not None:
+                x = x + self.moe(p["moe"], h, mesh=mesh)
+            else:
+                x = x + self.mlp(p["mlp"], h)
+        return x, new_cache
+
+    # -- cache template ----------------------------------------------------
+    def init_cache(self, batch, max_len, dtype, ctx_len: int = 0):
+        c: Dict[str, Any] = {}
+        if self.self_attn is not None:
+            c["attn"] = self.self_attn.init_cache(batch, max_len, dtype)
+        if self.mla is not None:
+            c["mla"] = self.mla.init_cache(batch, max_len, dtype)
+        if self.ssm is not None:
+            c["ssm"] = self.ssm.init_cache(batch, dtype)
+        if self.cross is not None:
+            D = self.cross.head_dim
+            c["cross_k"] = jnp.zeros((batch, ctx_len, self.cross.n_kv_heads, D), dtype)
+            c["cross_v"] = jnp.zeros((batch, ctx_len, self.cross.n_kv_heads, D), dtype)
+        return c
+
+
+# ---------------------------------------------------------------------------
+# Segments: scan over stacked homogeneous blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    block: Block
+    count: int
+
+    def params(self) -> dict:
+        """Stacked ParamSpec tree: every leaf gains a leading 'layers' dim."""
+        tree = self.block.params()
+
+        def stack(ps: ParamSpec) -> ParamSpec:
+            return ParamSpec(
+                (self.count, *ps.shape), ("layers", *ps.logical), ps.init, ps.scale
+            )
+
+        return jax.tree.map(stack, tree, is_leaf=lambda v: isinstance(v, ParamSpec))
+
+    @staticmethod
+    def _checkpoint(body):
+        """Remat policy knob (read at trace time): REPRO_REMAT_POLICY in
+        {"full" (default: save only the carry), "dots" (save matmul outputs,
+        trading memory for recompute FLOPs), "none" (no remat)}."""
+        import os
+
+        policy = os.environ.get("REPRO_REMAT_POLICY", "full")
+        if policy == "none":
+            return body
+        if policy == "dots":
+            return jax.checkpoint(
+                body,
+                prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        return jax.checkpoint(body, prevent_cse=False)
+
+    @staticmethod
+    def _anchor(x, mesh):
+        """Constrain the scan carry to the canonical activation sharding so
+        GSPMD cannot flip to parameter-side layouts inside the loop."""
+        if mesh is None:
+            return x
+        from repro.models.sharding import constrain, rules_for_mesh
+
+        return constrain(x, mesh, rules_for_mesh(mesh), ("batch", "seq_sp", "embed"))
+
+    # ------------------------------------------------------------------
+    def apply(self, params, x, positions, *, impl, ctx=None, mesh=None, remat=True):
+        block = self.block
+
+        def body(carry, layer_p):
+            carry = Segment._anchor(carry, mesh)
+            y, _ = block.run(layer_p, carry, positions, impl=impl, mode="apply",
+                             ctx=ctx, mesh=mesh)
+            return y, None
+
+        if remat:
+            body = Segment._checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params)
+        return x
+
+    def prefill(self, params, x, positions, *, impl, ctx=None, mesh=None, remat=True):
+        block = self.block
+
+        def body(carry, layer_p):
+            carry = Segment._anchor(carry, mesh)
+            y, cache = block.run(layer_p, carry, positions, impl=impl,
+                                 mode="prefill", ctx=ctx, mesh=mesh)
+            return y, cache
+
+        if remat:
+            body = Segment._checkpoint(body)
+        x, caches = jax.lax.scan(body, x, params)
+        return x, caches  # cache leaves stacked [count, ...]
+
+    def decode(self, params, x, positions, caches, pos, *, ctx=None, mesh=None):
+        """One decode step for all layers of this segment.
+
+        Blocks never return updated cache tensors: the scan emits only the
+        per-layer *new entries* ([count, B, 1, ...]), which are appended with
+        a single dynamic_update_slice per tensor after the scan.  Carrying
+        the caches through the scan ys copied the full stacked cache once per
+        layer iteration and forced a replicated->sharded resharding of every
+        update (EXPERIMENTS.md §Perf, vision-90b decode iterations 2-3).
+        """
+        block = self.block
+
+        def body(carry, inp):
+            layer_p, cache = inp
+            carry = Segment._anchor(carry, mesh)
+            y, upd = block.run(layer_p, carry, positions, impl="dot",
+                               mode="decode", cache=cache, pos=pos,
+                               ctx=ctx, mesh=mesh)
+            return y, upd
+
+        x, updates = jax.lax.scan(body, x, (params, caches))
+        new_caches = dict(caches)
+
+        def _append(old, new, slot):
+            # old: [count, B, S, ...]; new: [count, B, 1, ...]
+            if mesh is not None:
+                from repro.models.sharding import constrain, rules_for_mesh
+
+                logical = ("layers", "batch") + (None,) * (old.ndim - 2)
+                new = constrain(new, mesh, rules_for_mesh(mesh), logical)
+            start = (0, 0, slot) + (0,) * (old.ndim - 3)
+            return jax.lax.dynamic_update_slice(old, new.astype(old.dtype), start)
+
+        if "attn" in updates:
+            W = block.self_attn.window
+            slot = pos % W if W is not None else pos
+            new_caches["attn"] = {
+                "k": _append(caches["attn"]["k"], updates["attn"]["k_new"], slot),
+                "v": _append(caches["attn"]["v"], updates["attn"]["v_new"], slot),
+            }
+        if "mla" in updates:
+            new_caches["mla"] = {
+                "c_kv": _append(caches["mla"]["c_kv"], updates["mla"]["c_kv_new"], pos),
+                "k_rope": _append(caches["mla"]["k_rope"], updates["mla"]["k_rope_new"], pos),
+            }
+        if "ssm" in updates:
+            new_caches["ssm"] = updates["ssm"]  # full replacement (O(1) state)
+        return x, new_caches
+
+    def init_cache(self, batch, max_len, dtype, ctx_len=0):
+        one = self.block.init_cache(batch, max_len, dtype, ctx_len)
+        return jax.tree.map(
+            lambda a: jnp.zeros((self.count, *a.shape), a.dtype), one
+        )

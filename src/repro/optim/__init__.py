@@ -1,0 +1,28 @@
+"""Sharded AdamW with warmup-cosine schedule and global-norm clipping.
+
+Self-contained (no optax).  Optimizer state mirrors the parameter tree leaf
+for leaf, so the parameter ``NamedSharding`` tree shards the moments
+identically (ZeRO-style: every chip owns the states of its own parameter
+shards; the update is elementwise, so no extra communication is introduced
+by the optimizer itself).
+"""
+
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "warmup_cosine",
+]

@@ -1,0 +1,6 @@
+"""Training/serving runtime: jitted steps, fault tolerance, elasticity."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig, build_train_step
+from repro.runtime.watchdog import StragglerWatchdog
+
+__all__ = ["Trainer", "TrainerConfig", "build_train_step", "StragglerWatchdog"]

@@ -1,0 +1,194 @@
+"""Trainer: jitted sharded train step + fault-tolerant step loop.
+
+* GSPMD-sharded ``train_step`` (params/opt-state shardings from the logical
+  rules table, batch over the DP axes, donated state).
+* checkpoint/restart via :mod:`repro.checkpoint` -- checkpoints are
+  mesh-independent, so a restart may use a different mesh (elastic scaling).
+* straggler watchdog -- escalates to checkpoint + restart-request.
+* optional simulated failure injection (``fail_at_step``) used by the
+  fault-tolerance tests: the process raises mid-run, and a fresh Trainer
+  resumes losslessly from the last checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticTokens
+from repro.models import LMModel, param_shardings, rules_for_mesh, spec_for
+from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.runtime.watchdog import StragglerWatchdog
+
+log = logging.getLogger(__name__)
+
+
+def batch_sharding(mesh: Mesh, rules, batch: int, seq: int) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, rules, ("batch", "seq"), (batch, seq)))
+
+
+def build_train_step(
+    model: LMModel,
+    mesh: Mesh,
+    opt_cfg: AdamWConfig,
+    impl: str = "dot",
+    remat: bool = True,
+) -> Callable:
+    """jit'd (state, batch) -> (state, metrics) with explicit shardings."""
+    rules = rules_for_mesh(mesh)
+    specs = model.param_specs()
+    p_shard = param_shardings(specs, mesh, rules)
+    opt_shard = OptState(
+        step=NamedSharding(mesh, P()),
+        mu=p_shard,
+        nu=p_shard,
+    )
+    state_shard = {"params": p_shard, "opt": opt_shard}
+    metric_shard = NamedSharding(mesh, P())
+
+    def step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, impl=impl, mesh=mesh, remat=remat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        new_p, new_opt, metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        metrics["loss"] = loss
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    return jax.jit(
+        step,
+        in_shardings=(state_shard, None),
+        out_shardings=(state_shard, metric_shard),
+        donate_argnums=(0,),
+    )
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    impl: str = "dot"
+    remat: bool = True
+    fail_at_step: Optional[int] = None  # fault-injection for tests
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        mesh: Mesh,
+        cfg: TrainerConfig,
+        opt_cfg: Optional[AdamWConfig] = None,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = LMModel(model_cfg, tp=mesh.shape.get("model", 1))
+        self.opt_cfg = opt_cfg or AdamWConfig(total_steps=cfg.steps)
+        self.rules = rules_for_mesh(mesh)
+        self.step_fn = build_train_step(
+            self.model, mesh, self.opt_cfg, impl=cfg.impl, remat=cfg.remat
+        )
+        self.data = SyntheticTokens(
+            vocab_size=model_cfg.vocab_size,
+            batch=cfg.batch,
+            seq_len=cfg.seq_len,
+            seed=cfg.seed,
+            mesh=mesh,
+            batch_spec=spec_for(mesh, self.rules, ("batch", "seq"), (cfg.batch, cfg.seq_len)),
+        )
+        self.ckpt = (
+            CheckpointManager(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
+        )
+        self.watchdog = StragglerWatchdog()
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, rng_seed: int = 0) -> Dict[str, Any]:
+        specs = self.model.param_specs()
+        p_shard = param_shardings(specs, self.mesh, self.rules)
+
+        @jax.jit
+        def _init(key):
+            params = self.model.init(key)
+            return {"params": params, "opt": adamw_init(params)}
+
+        with jax.sharding.use_mesh(self.mesh) if hasattr(jax.sharding, "use_mesh") else _null():
+            state = _init(jax.random.PRNGKey(rng_seed))
+        # place on mesh
+        shard_tree = {"params": p_shard, "opt": OptState(
+            step=NamedSharding(self.mesh, P()), mu=p_shard, nu=p_shard)}
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shard_tree
+        )
+
+    def state_shardings(self):
+        p_shard = param_shardings(self.model.param_specs(), self.mesh, self.rules)
+        return {
+            "params": p_shard,
+            "opt": OptState(step=NamedSharding(self.mesh, P()), mu=p_shard, nu=p_shard),
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, resume: bool = True) -> Dict[str, Any]:
+        start = 0
+        state = None
+        if resume and self.ckpt and latest_step(self.ckpt.directory) is not None:
+            template = jax.eval_shape(lambda: self.init_state())
+            state, manifest = self.ckpt.restore(
+                template, shardings=self.state_shardings()
+            )
+            start = manifest["step"]
+            log.info("resumed from step %d", start)
+        if state is None:
+            state = self.init_state()
+
+        for step in range(start, self.cfg.steps):
+            if self.cfg.fail_at_step is not None and step == self.cfg.fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            self.watchdog.start_step()
+            batch = self.data.batch_at(step)
+            state, metrics = self.step_fn(state, batch)
+            escalate = self.watchdog.end_step(step)
+            if (step + 1) % self.cfg.log_every == 0 or step == start:
+                loss = float(metrics["loss"])
+                self.history.append({"step": step + 1, "loss": loss})
+                log.info("step %d loss %.4f", step + 1, loss)
+            if self.ckpt and (step + 1) % self.cfg.checkpoint_every == 0:
+                self.ckpt.save_async(step + 1, state, extra={"seed": self.cfg.seed})
+            if escalate:
+                log.warning("straggler budget exhausted at step %d: checkpoint + restart", step)
+                if self.ckpt:
+                    self.ckpt.save_async(step + 1, state, extra={"straggler": True})
+                self.watchdog.consecutive = 0
+        if self.ckpt:
+            self.ckpt.save_async(self.cfg.steps, state)
+            self.ckpt.wait()
+        return {"state": state, "history": self.history, "straggler_events": self.watchdog.events}
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

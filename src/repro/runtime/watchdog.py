@@ -1,0 +1,46 @@
+"""Straggler detection for the step loop.
+
+XLA SPMD steps are globally synchronous, so a slow host shows up as a slow
+*step*.  The watchdog keeps an EMA of step wall-time and flags steps beyond
+``factor x EMA`` as straggler events; the trainer's policy (see DESIGN.md
+section 8) is control-plane: log, and after ``budget`` consecutive events
+checkpoint + request an elastic restart (possibly on a smaller mesh), which
+:class:`repro.runtime.trainer.Trainer` implements via its mesh-independent
+checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    factor: float = 3.0
+    budget: int = 3  # consecutive straggler steps before escalation
+    decay: float = 0.9
+
+    ema: Optional[float] = None
+    consecutive: int = 0
+    events: List[dict] = dataclasses.field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start_step(self) -> None:
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int) -> bool:
+        """Returns True if the escalation budget is exhausted."""
+        dt = time.monotonic() - self._t0
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = dt > self.factor * self.ema
+        if is_straggler:
+            self.consecutive += 1
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        else:
+            self.consecutive = 0
+            self.ema = self.decay * self.ema + (1 - self.decay) * dt
+        return self.consecutive >= self.budget

@@ -1,0 +1,27 @@
+"""Distributed sparse matrix substrate (the paper's SpMV case study)."""
+
+from repro.sparse.matrices import (
+    GENERATORS,
+    CSRMatrix,
+    audikw_like,
+    banded,
+    random_block,
+    thermal_like,
+)
+from repro.sparse.partition import EllBlock, SpmvPartition, partition_csr
+from repro.sparse.spmv import DistributedSpMV, build, reference
+
+__all__ = [
+    "GENERATORS",
+    "CSRMatrix",
+    "audikw_like",
+    "banded",
+    "random_block",
+    "thermal_like",
+    "EllBlock",
+    "SpmvPartition",
+    "partition_csr",
+    "DistributedSpMV",
+    "build",
+    "reference",
+]

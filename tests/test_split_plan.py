@@ -1,0 +1,97 @@
+"""Property tests for Algorithm 1 (Split setup)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CommPattern, Message, build_split_plan
+
+
+def random_pattern(rng, ppn, nnodes, max_msgs=30, max_bytes=5000):
+    n = ppn * nnodes
+    msgs = []
+    for _ in range(rng.integers(1, max_msgs)):
+        s, d = rng.integers(0, n, 2)
+        if s != d:
+            msgs.append(Message(int(s), int(d), int(rng.integers(1, max_bytes))))
+    return CommPattern.from_messages(n, ppn, msgs)
+
+
+@given(
+    ppn=st.integers(1, 6),
+    nnodes=st.integers(2, 5),
+    cap=st.integers(1, 8192),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=80, deadline=None)
+def test_algorithm1_invariants(ppn, nnodes, cap, seed):
+    rng = np.random.default_rng(seed)
+    pat = random_pattern(rng, ppn, nnodes)
+    plan = build_split_plan(pat, message_cap=cap)
+
+    inter = pat.inter_node_messages()
+    total_inter = sum(m.nbytes for m in inter)
+
+    # 1. byte conservation: every inter-node byte is carried by exactly one chunk
+    assert plan.total_inter_node_bytes() == total_inter
+    covered = {}
+    for c in plan.chunks:
+        for msg, off, length in c.parts:
+            covered.setdefault(id(msg), 0)
+            covered[id(msg)] += length
+    for m in inter:
+        assert covered.get(id(m), 0) == m.nbytes
+
+    # 2. chunk sizes respect the effective cap (lines 12-17)
+    for c in plan.chunks:
+        eff = plan.effective_cap[c.dest_node]
+        assert c.nbytes <= eff
+
+    # 3. locality: sender on origin node, receiver on destination node
+    for c in plan.chunks:
+        assert pat.node_of(c.sender) == c.origin_node
+        assert pat.node_of(c.receiver) == c.dest_node
+        assert c.origin_node != c.dest_node
+
+    # 4. line 18 balance: receive counts per node differ by at most 1
+    from collections import Counter
+
+    per_node = {}
+    for c in plan.chunks:
+        per_node.setdefault(c.dest_node, Counter())[c.receiver] += 1
+    for node, counts in per_node.items():
+        n_chunks = sum(counts.values())
+        expected_max = -(-n_chunks // ppn)
+        assert max(counts.values()) <= expected_max
+
+    # 5. on-node messages are untouched (handled by local_comm)
+    assert sum(m.nbytes for m in plan.local_messages) == sum(
+        m.nbytes for m in pat.messages
+    ) - total_inter
+
+
+def test_conglomeration_when_below_cap():
+    """Lines 12-13: if max node->node volume < cap, one chunk per origin."""
+    pat = CommPattern.from_messages(
+        8, 4, [(0, 4, 10), (1, 5, 20), (2, 6, 30)]
+    )
+    plan = build_split_plan(pat, message_cap=1000)
+    assert len(plan.chunks) == 1  # all three messages fused: same origin/dest node
+    assert plan.chunks[0].nbytes == 60
+
+
+def test_cap_raised_when_exceeding_ppn_chunks():
+    """Lines 14-17: cap rises to ceil(total/PPN) when too many chunks."""
+    ppn = 2
+    msgs = [(0, 2 + (i % 2), 100) for i in range(10)]  # 1000B node0 -> node1
+    pat = CommPattern.from_messages(4, ppn, msgs)
+    plan = build_split_plan(pat, message_cap=10)  # would need 100 chunks > ppn
+    assert plan.effective_cap[1] == 500  # ceil(1000/2)
+    assert len(plan.chunks) == 2
+
+
+def test_invalid_cap_rejected():
+    pat = CommPattern.from_messages(4, 2, [(0, 2, 10)])
+    with pytest.raises(ValueError):
+        build_split_plan(pat, message_cap=0)
