@@ -1,0 +1,76 @@
+"""Planner setup-time benchmark: vectorized vs legacy pure-Python planner.
+
+The paper's node-aware strategies pay a *setup* cost to restructure the
+exchange (communicator construction, Algorithm 1).  This benchmark measures
+that setup cost for every strategy as a function of world size, comparing
+the vectorized token-code planner (:mod:`repro.comm.exchange`) against the
+pre-vectorization token-list baseline
+(:mod:`repro.comm._legacy_planner`), which is retained verbatim for this
+purpose.  Both planners emit byte-identical stage programs, so the ratio is
+pure implementation speedup.
+
+Runs in-process (planning needs no devices).  CSV columns:
+
+    name,us_per_call,derived
+    planning/<nranks>r/<strategy>,<vectorized us>,legacy_us=... speedup=...
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.comm import _legacy_planner as legacy
+from repro.comm import exchange
+from repro.comm.topology import PodTopology
+
+#: (npods, ppn) sweeps; 32 ranks (4x8) is the acceptance configuration
+TOPOLOGIES = [(2, 4), (2, 8), (4, 8), (8, 8)]
+LOCAL_SIZE = 32
+CAP_BYTES = 2048
+STRATEGIES = ("standard", "two_step", "three_step", "split")
+
+
+def _time(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for npods, ppn in TOPOLOGIES:
+        topo = PodTopology(npods=npods, ppn=ppn)
+        rng = np.random.default_rng(1)
+        pat = exchange.random_pattern(
+            rng, topo, local_size=LOCAL_SIZE, p_connect=0.5, max_elems=LOCAL_SIZE // 2
+        )
+        total_new = total_old = 0.0
+        for strat in STRATEGIES:
+            t_new = _time(
+                lambda: exchange.plan(strat, pat, message_cap_bytes=CAP_BYTES), 3
+            )
+            t_old = _time(
+                lambda: legacy.plan(strat, pat, message_cap_bytes=CAP_BYTES), 1
+            )
+            total_new += t_new
+            total_old += t_old
+            emit(
+                f"planning/{topo.nranks}r/{strat}",
+                t_new * 1e6,
+                f"legacy_us={t_old * 1e6:.1f} speedup={t_old / t_new:.1f}x",
+            )
+        emit(
+            f"planning/{topo.nranks}r/all",
+            total_new * 1e6,
+            f"legacy_us={total_old * 1e6:.1f} speedup={total_old / total_new:.1f}x",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,13 @@ matrix under every strategy on an 8-host-device mesh (2 pods x 4), timing the
 exchange and reporting wire bytes (intra/inter-pod) plus the advisor's pick.
 Absolute times are CPU-host numbers; the *ranking* and byte counts are the
 reproduction target (DESIGN.md section 10).
+
+Per strategy the CSV also reports the setup path this PR optimizes:
+
+* ``plan_ms``      -- cold planning+fusion wall time (plan cache cleared),
+* ``replan_ms``    -- the same construction again (plan/compile cache hit),
+* ``fused_us`` / ``unfused_us`` -- median exchange time with and without
+  the stage-fusion rewrites.
 """
 
 from __future__ import annotations
@@ -13,8 +20,18 @@ from benchmarks.common import emit, run_with_devices
 
 CODE = """
 import time, numpy as np
+from repro.comm import strategies as comm_strategies
 from repro.comm.topology import PodTopology
 from repro.sparse import audikw_like, thermal_like, random_block, build
+
+def med_us(fn, iters=10):
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter(); fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts)//2] * 1e6
 
 rng = np.random.default_rng(0)
 topo = PodTopology(npods=2, ppn=4)
@@ -27,15 +44,25 @@ for name, A in mats.items():
     v = rng.normal(size=(A.n,)).astype(np.float32)
     vr = v.reshape(topo.nranks, -1)
     for strat in ("standard", "two_step", "three_step", "split"):
+        comm_strategies.clear_caches()
+        t0 = time.perf_counter()
         sp = build(A, topo, strategy=strat, use_pallas=False)
+        plan_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        build(A, topo, strategy=strat, use_pallas=False)
+        replan_ms = (time.perf_counter() - t0) * 1e3
         out = sp(vr); out.block_until_ready()
-        ts = []
-        for _ in range(10):
-            t0 = time.perf_counter(); sp.exchange(vr).block_until_ready()
-            ts.append(time.perf_counter() - t0)
-        ts.sort()
+        fused_us = med_us(lambda: sp.exchange(vr).block_until_ready())
+        spu = build(A, topo, strategy=strat, use_pallas=False, fuse_program=False)
+        spu(vr).block_until_ready()
+        unfused_us = med_us(lambda: spu.exchange(vr).block_until_ready())
         wi, we = sp.wire_bytes
-        print(f"RESULT,fig5.1/{name}/{strat},{ts[len(ts)//2]*1e6:.1f},intra={wi}B inter={we}B")
+        print(
+            f"RESULT,fig5.1/{name}/{strat},{fused_us:.1f},"
+            f"intra={wi}B inter={we}B plan_ms={plan_ms:.1f} "
+            f"replan_ms={replan_ms:.1f} fused_us={fused_us:.1f} "
+            f"unfused_us={unfused_us:.1f}"
+        )
     adv = build(A, topo, strategy="auto", use_pallas=False)
     print(f"RESULT,fig5.1/{name}/advisor,0.0,chose={adv.strategy}")
 """

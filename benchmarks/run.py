@@ -8,6 +8,7 @@ Sections:
   modeled     -- paper Figure 4.3 (strategy predictions)
   validation  -- paper Figure 4.2 (model vs measured SpMV exchange)
   spmv        -- paper Figure 5.1 (SpMV strategies on 8 host devices)
+  planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
 """
@@ -24,6 +25,7 @@ def main() -> None:
         bench_model_validation,
         bench_modeled_performance,
         bench_params,
+        bench_planning,
         bench_roofline,
         bench_spmv,
     )
@@ -33,6 +35,7 @@ def main() -> None:
         "modeled": bench_modeled_performance.main,
         "validation": bench_model_validation.main,
         "spmv": bench_spmv.main,
+        "planning": bench_planning.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
     }

@@ -9,9 +9,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.compat import tree_flatten_with_path
+
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -20,7 +22,7 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def _unflatten_into(template, arrays: Dict[str, np.ndarray], shardings=None):
-    flat, treedef = jax.tree.flatten_with_path(template)
+    flat, treedef = tree_flatten_with_path(template)
     shard_flat = (
         jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat)
     )

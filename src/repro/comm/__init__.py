@@ -11,6 +11,7 @@ from repro.comm.exchange import (
     ExchangePattern,
     Need,
     StagePlan,
+    execute_numpy,
     plan,
     plan_split,
     plan_standard,
@@ -18,8 +19,17 @@ from repro.comm.exchange import (
     plan_two_step,
     random_pattern,
     simulate,
+    simulate_codes,
 )
-from repro.comm.strategies import STRATEGY_NAMES, IrregularExchange
+from repro.comm.fusion import fuse, stage_summary
+from repro.comm.strategies import (
+    STRATEGY_NAMES,
+    CacheStats,
+    IrregularExchange,
+    cache_stats,
+    clear_caches,
+    planned,
+)
 from repro.comm.hierarchical import (
     all_gather_hierarchical,
     all_to_all_hierarchical,
@@ -39,6 +49,7 @@ __all__ = [
     "ExchangePattern",
     "Need",
     "StagePlan",
+    "execute_numpy",
     "plan",
     "plan_split",
     "plan_standard",
@@ -46,8 +57,15 @@ __all__ = [
     "plan_two_step",
     "random_pattern",
     "simulate",
+    "simulate_codes",
+    "fuse",
+    "stage_summary",
     "STRATEGY_NAMES",
+    "CacheStats",
     "IrregularExchange",
+    "cache_stats",
+    "clear_caches",
+    "planned",
     "all_gather_hierarchical",
     "all_to_all_hierarchical",
     "init_residuals",

@@ -5,12 +5,20 @@ This is the executable heart of the paper on TPU: an irregular
 routing) is compiled, at setup time, into a static **stage program** -- a
 sequence of gathers and mesh collectives -- one program per node-aware
 strategy (Standard / 3-Step / 2-Step / Split).  The stage program is then
-executed by :mod:`repro.comm.strategies` under ``shard_map``.
+executed by :mod:`repro.comm.strategies` under ``shard_map``, optionally
+after the rewrites in :mod:`repro.comm.fusion`.
 
 Planning is *verified by construction*: a symbolic token simulator runs the
 same stage semantics over ``(owner, element)`` tokens, so the planner can
 resolve "where does token t live in rank r's buffer right now" exactly, and
 tests can assert every strategy delivers the canonical receive layout.
+
+The planner's symbolic state is **vectorized**: tokens are encoded as int64
+codes ``owner * local_size + elem`` (``PAD_CODE = -1``), buffers are dense
+``[nranks, buflen]`` arrays, and every stage transition / position lookup /
+byte-accounting sweep is a numpy array op.  The original pure-Python
+token-list planner survives in :mod:`repro.comm._legacy_planner` as a
+benchmark baseline; the token-list simulator below stays as the oracle.
 
 Stage semantics (mirrored exactly by the JAX executor):
 
@@ -18,8 +26,10 @@ Stage semantics (mirrored exactly by the JAX executor):
   ``ext = concat(current_buf, original_local)`` and ``idx == len(ext)`` is a
   PAD sentinel (delivers 0).
 * ``A2ALocal()``       -- ``all_to_all`` over the pod-local axis on the
-  ``[ppn, blk]`` view of the buffer.
-* ``A2APod()``         -- ``all_to_all`` over the pod axis on ``[npods, blk]``.
+  ``[ppn, blk]`` view of the buffer.  An optional fused ``idx`` (installed
+  by the fusion pass) applies a Gather to ``ext`` first.
+* ``A2APod()``         -- ``all_to_all`` over the pod axis on ``[npods, blk]``,
+  with the same optional fused input ``idx``.
 * ``PermuteWorld(...)``-- rounds of world-level ``ppermute``; each round the
   sender selects ``sel[round]`` from ``ext`` and the received blocks are
   concatenated into the new buffer.
@@ -28,6 +38,7 @@ Stage semantics (mirrored exactly by the JAX executor):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import defaultdict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -37,6 +48,11 @@ from repro.comm.topology import PodTopology
 from repro.core.patterns import CommPattern, Message
 
 Token = Tuple[int, int]  # (owner rank, element index)
+
+#: PAD marker in token-code arrays (token codes are ``owner * L + elem``).
+PAD_CODE = -1
+
+_EMPTY = np.zeros((0,), dtype=np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +108,31 @@ class ExchangePattern:
             out.extend((n.src, e) for e in n.idx)
         return out
 
+    def canonical_code_rows(self) -> List[np.ndarray]:
+        """``canonical_codes`` for every rank, in one pass over ``needs``."""
+        acc: List[List[Need]] = [[] for _ in range(self.topo.nranks)]
+        for n in self.needs:
+            acc[n.dst].append(n)
+        out = []
+        for row in acc:
+            row.sort(key=lambda n: n.src)
+            parts = [
+                n.src * self.local_size + np.asarray(n.idx, dtype=np.int64)
+                for n in row
+            ]
+            out.append(np.concatenate(parts) if parts else _EMPTY)
+        return out
+
+    def fingerprint(self) -> str:
+        """Stable content hash: cache / CSV key for this exact pattern."""
+        h = hashlib.sha1()
+        h.update(
+            f"{self.topo.npods},{self.topo.ppn},{self.local_size};".encode()
+        )
+        for n in sorted(self.needs, key=lambda x: (x.dst, x.src)):
+            h.update(f"{n.dst}<{n.src}:{','.join(map(str, n.idx))};".encode())
+        return h.hexdigest()
+
     # -- derived views -------------------------------------------------
     def dedup_for_pod(self, src: int, dst_pod: int) -> List[int]:
         """Union of elements of ``src`` needed by any rank in ``dst_pod``
@@ -115,7 +156,7 @@ class ExchangePattern:
     def reference(self, local: np.ndarray) -> np.ndarray:
         """Numpy oracle: ``local [nranks, L] -> canonical recv [nranks, H]``."""
         nranks, H = self.topo.nranks, self.max_recv_size()
-        out = np.zeros((nranks, H), dtype=local.dtype)
+        out = np.zeros((nranks, H) + local.shape[2:], dtype=local.dtype)
         for r in range(nranks):
             toks = self.canonical_tokens(r)
             for k, (owner, e) in enumerate(toks):
@@ -156,11 +197,14 @@ class Gather:
 @dataclasses.dataclass(frozen=True)
 class A2ALocal:
     buflen: int  # divisible by ppn
+    #: optional fused input layout (a Gather folded in by repro.comm.fusion)
+    idx: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class A2APod:
     buflen: int  # divisible by npods
+    idx: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,13 +234,26 @@ class StagePlan:
     #: bytes actually on the wire including padding (what XLA would move)
     wire_intra_pod_bytes: int
     wire_inter_pod_bytes: int
+    #: True once repro.comm.fusion rewrote the stage program
+    fused: bool = False
 
 
 # ---------------------------------------------------------------------------
-# Symbolic simulator (used for planning and by tests)
+# Symbolic simulator, token-list flavor (oracle for tests and planning)
 # ---------------------------------------------------------------------------
 
 PAD: Optional[Token] = None
+
+
+def _token_gather(stage_idx, buf, local):
+    new = []
+    for r in range(len(buf)):
+        ext = buf[r] + list(local[r])
+        row = []
+        for i in stage_idx[r]:
+            row.append(PAD if i >= len(ext) else ext[int(i)])
+        new.append(row)
+    return new
 
 
 def simulate_stage(
@@ -207,15 +264,10 @@ def simulate_stage(
 ) -> List[List[Optional[Token]]]:
     nranks, ppn, npods = topo.nranks, topo.ppn, topo.npods
     if isinstance(stage, Gather):
-        new = []
-        for r in range(nranks):
-            ext = buf[r] + list(local[r])
-            row = []
-            for i in stage.idx[r]:
-                row.append(PAD if i >= len(ext) else ext[int(i)])
-            new.append(row)
-        return new
+        return _token_gather(stage.idx, buf, local)
     if isinstance(stage, A2ALocal):
+        if stage.idx is not None:
+            buf = _token_gather(stage.idx, buf, local)
         blk = stage.buflen // ppn
         new = [[PAD] * stage.buflen for _ in range(nranks)]
         for p in range(npods):
@@ -226,6 +278,8 @@ def simulate_stage(
                     new[r][j * blk : (j + 1) * blk] = buf[src][l * blk : (l + 1) * blk]
         return new
     if isinstance(stage, A2APod):
+        if stage.idx is not None:
+            buf = _token_gather(stage.idx, buf, local)
         blk = stage.buflen // npods
         new = [[PAD] * stage.buflen for _ in range(nranks)]
         for p in range(npods):
@@ -264,124 +318,293 @@ def simulate(plan: StagePlan) -> List[List[Optional[Token]]]:
 
 
 # ---------------------------------------------------------------------------
-# Planner
+# Symbolic simulator, vectorized token-code flavor (used by the planner)
 # ---------------------------------------------------------------------------
 
 
+def _gather_codes(ext: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """``out[r, k] = ext[r, idx[r, k]]`` with ``idx >= E`` -> PAD_CODE."""
+    n, E = ext.shape
+    if E == 0:
+        return np.full(idx.shape, PAD_CODE, dtype=np.int64)
+    safe = np.minimum(idx, E - 1)
+    out = ext[np.arange(n)[:, None], safe]
+    return np.where(idx >= E, PAD_CODE, out)
+
+
+def simulate_stage_codes(
+    topo: PodTopology,
+    stage: Stage,
+    buf: np.ndarray,  # [nranks, W] int64 token codes, PAD_CODE = -1
+    local: np.ndarray,  # [nranks, L]
+) -> np.ndarray:
+    nranks, ppn, npods = topo.nranks, topo.ppn, topo.npods
+    if isinstance(stage, Gather):
+        return _gather_codes(np.concatenate([buf, local], axis=1), np.asarray(stage.idx))
+    if isinstance(stage, (A2ALocal, A2APod)):
+        if stage.idx is not None:
+            buf = _gather_codes(
+                np.concatenate([buf, local], axis=1), np.asarray(stage.idx)
+            )
+        if isinstance(stage, A2ALocal):
+            blk = stage.buflen // ppn
+            b = buf.reshape(npods, ppn, ppn, blk)
+            return b.transpose(0, 2, 1, 3).reshape(nranks, stage.buflen)
+        blk = stage.buflen // npods
+        b = buf.reshape(npods, ppn, npods, blk)
+        return b.transpose(2, 1, 0, 3).reshape(nranks, stage.buflen)
+    if isinstance(stage, PermuteWorld):
+        ext = np.concatenate([buf, local], axis=1)
+        parts = []
+        for perm, blk, sel in zip(stage.rounds, stage.blks, stage.sels):
+            send = _gather_codes(ext, np.asarray(sel))
+            out = np.full((nranks, blk), PAD_CODE, dtype=np.int64)
+            if perm:
+                srcs = [s for s, _ in perm]
+                dsts = [d for _, d in perm]
+                out[dsts] = send[srcs]
+            parts.append(out)
+        if not parts:
+            return np.zeros((nranks, 0), dtype=np.int64)
+        return np.concatenate(parts, axis=1)
+    raise TypeError(f"unknown stage {stage!r}")
+
+
+def local_codes(pattern: ExchangePattern) -> np.ndarray:
+    """``[nranks, L]`` token codes of every rank's own elements."""
+    n, L = pattern.topo.nranks, pattern.local_size
+    return (np.arange(n, dtype=np.int64)[:, None] * L + np.arange(L)[None, :]).reshape(
+        n, L
+    )
+
+
+def simulate_codes(plan: StagePlan) -> np.ndarray:
+    """Run the whole stage program over token codes; final ``[nranks, W]``."""
+    topo = plan.pattern.topo
+    local = local_codes(plan.pattern)
+    buf = np.zeros((topo.nranks, 0), dtype=np.int64)
+    for stage in plan.stages:
+        buf = simulate_stage_codes(topo, stage, buf, local)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Numpy value executor (jax-free oracle for the fused/unfused programs)
+# ---------------------------------------------------------------------------
+
+
+def _take_fill(ext: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Value gather with 0-fill for PAD; ``ext [n, E, *feat]``."""
+    n, E = ext.shape[:2]
+    if E == 0:
+        return np.zeros((n,) + idx.shape[1:] + ext.shape[2:], dtype=ext.dtype)
+    safe = np.minimum(idx, E - 1)
+    out = ext[np.arange(n)[:, None], safe]
+    out[idx >= E] = 0
+    return out
+
+
+def execute_numpy(plan: StagePlan, local: np.ndarray) -> np.ndarray:
+    """Execute a stage program in numpy: ``local [n, L, *feat] -> [n, H, *feat]``.
+
+    Exact (bit-identical) data movement; no jax required.  Used to verify
+    that fused and unfused programs deliver identical values.
+    """
+    topo = plan.pattern.topo
+    nranks, ppn, npods = topo.nranks, topo.ppn, topo.npods
+    local = np.asarray(local)
+    feat = local.shape[2:]
+    buf = np.zeros((nranks, 0) + feat, dtype=local.dtype)
+    for stage in plan.stages:
+        if isinstance(stage, Gather):
+            buf = _take_fill(np.concatenate([buf, local], axis=1), np.asarray(stage.idx))
+        elif isinstance(stage, (A2ALocal, A2APod)):
+            if stage.idx is not None:
+                buf = _take_fill(
+                    np.concatenate([buf, local], axis=1), np.asarray(stage.idx)
+                )
+            if isinstance(stage, A2ALocal):
+                blk = stage.buflen // ppn
+                b = buf.reshape((npods, ppn, ppn, blk) + feat)
+                buf = b.transpose((0, 2, 1, 3) + tuple(range(4, 4 + len(feat)))).reshape(
+                    (nranks, stage.buflen) + feat
+                )
+            else:
+                blk = stage.buflen // npods
+                b = buf.reshape((npods, ppn, npods, blk) + feat)
+                buf = b.transpose((2, 1, 0, 3) + tuple(range(4, 4 + len(feat)))).reshape(
+                    (nranks, stage.buflen) + feat
+                )
+        elif isinstance(stage, PermuteWorld):
+            ext = np.concatenate([buf, local], axis=1)
+            parts = []
+            for perm, blk, sel in zip(stage.rounds, stage.blks, stage.sels):
+                send = _take_fill(ext, np.asarray(sel))
+                out = np.zeros((nranks, blk) + feat, dtype=local.dtype)
+                if perm:
+                    srcs = [s for s, _ in perm]
+                    dsts = [d for _, d in perm]
+                    out[dsts] = send[srcs]
+                parts.append(out)
+            buf = (
+                np.concatenate(parts, axis=1)
+                if parts
+                else np.zeros((nranks, 0) + feat, dtype=local.dtype)
+            )
+        else:
+            raise TypeError(f"unknown stage {stage!r}")
+    return buf[:, : plan.out_size]
+
+
+# ---------------------------------------------------------------------------
+# Vectorized planner
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(rows: Sequence[np.ndarray], width: Optional[int] = None) -> np.ndarray:
+    """Stack ragged code rows into ``[len(rows), W]`` with PAD_CODE fill."""
+    n = len(rows)
+    lens = np.fromiter((len(x) for x in rows), dtype=np.int64, count=n)
+    W = int(lens.max()) if n else 0
+    if width is not None:
+        W = width
+    W = max(W, 1)
+    out = np.full((n, W), PAD_CODE, dtype=np.int64)
+    if n and lens.sum():
+        mask = np.arange(W)[None, :] < lens[:, None]
+        out[mask] = np.concatenate([np.asarray(r, dtype=np.int64) for r in rows if len(r)])
+    return out
+
+
+def _dedup_codes(pattern: ExchangePattern) -> Dict[Tuple[int, int], np.ndarray]:
+    """All (src rank, dst pod) deduped element unions in one pass over needs."""
+    topo = pattern.topo
+    acc: Dict[Tuple[int, int], set] = defaultdict(set)
+    for n in pattern.needs:
+        acc[(n.src, topo.pod_of(n.dst))].update(n.idx)
+    return {
+        k: np.fromiter(sorted(v), dtype=np.int64, count=len(v))
+        for k, v in acc.items()
+    }
+
+
 class _Planner:
-    """Builds stages while tracking the symbolic buffer state."""
+    """Builds stages while tracking the symbolic buffer state (token codes)."""
 
     def __init__(self, pattern: ExchangePattern):
         self.pattern = pattern
         self.topo = pattern.topo
-        self.local = [
-            [(r, e) for e in range(pattern.local_size)]
-            for r in range(self.topo.nranks)
-        ]
-        self.buf: List[List[Optional[Token]]] = [[] for _ in range(self.topo.nranks)]
+        self.L = pattern.local_size
+        n = self.topo.nranks
+        self.ntok = n * self.L
+        self.local = local_codes(pattern)
+        self.buf = np.zeros((n, 0), dtype=np.int64)
+        self.canon = pattern.canonical_code_rows()
+        self.max_recv = max((len(c) for c in self.canon), default=0)
         self.stages: List[Stage] = []
         self.intra_payload = 0
         self.inter_payload = 0
         self.wire_intra = 0
         self.wire_inter = 0
+        self._lut: Optional[np.ndarray] = None
 
-    # -- position lookup ------------------------------------------------
-    def _positions(self, r: int) -> Dict[Token, int]:
-        pos: Dict[Token, int] = {}
-        ext = self.buf[r] + self.local[r]
-        for i, t in enumerate(ext):
-            if t is not None and t not in pos:
-                pos[t] = i
-        return pos
+    # -- symbolic state ------------------------------------------------
+    @property
+    def ext_len(self) -> int:
+        return self.buf.shape[1] + self.L
 
     def _apply(self, stage: Stage) -> None:
         self.stages.append(stage)
-        self.buf = simulate_stage(self.topo, stage, self.buf, self.local)
+        self.buf = simulate_stage_codes(self.topo, stage, self.buf, self.local)
+        self._lut = None
+
+    def _pos_lut(self) -> np.ndarray:
+        """``lut[r, code]`` = first position of token ``code`` in rank ``r``'s
+        ext buffer, or ``ext_len`` (the PAD sentinel) when not held."""
+        if self._lut is not None:
+            return self._lut
+        ext = np.concatenate([self.buf, self.local], axis=1)
+        n, E = ext.shape
+        lut = np.full((n, max(self.ntok, 1)), E, dtype=np.int64)
+        if E and self.ntok:
+            rows = np.repeat(np.arange(n), E)
+            cols = np.tile(np.arange(E), n)
+            codes = ext.reshape(-1)
+            valid = codes >= 0
+            # min over duplicate writes = first occurrence
+            np.minimum.at(lut, (rows[valid], codes[valid]), cols[valid])
+        self._lut = lut
+        return lut
+
+    def _map_codes(self, want: np.ndarray) -> np.ndarray:
+        """Token codes ``[n, K]`` (PAD_CODE allowed) -> Gather/sel indices."""
+        n = want.shape[0]
+        E = self.ext_len
+        lut = self._pos_lut()
+        idx = lut[np.arange(n)[:, None], np.maximum(want, 0)]
+        missing = (want >= 0) & (idx >= E)
+        if missing.any():
+            r, k = map(int, np.argwhere(missing)[0])
+            code = int(want[r, k])
+            tok = (code // self.L, code % self.L) if self.L else code
+            raise AssertionError(f"planner bug: token {tok} not held by rank {r}")
+        idx = np.where(want < 0, E, idx)
+        return idx.astype(np.int32)
 
     # -- stage emitters ---------------------------------------------------
-    def gather(self, select: Callable[[int], List[Optional[Token]]], width: Optional[int] = None) -> None:
-        nranks = self.topo.nranks
-        rows = [select(r) for r in range(nranks)]
-        K = width if width is not None else max((len(x) for x in rows), default=0)
-        K = max(K, 1)
-        idx = np.zeros((nranks, K), dtype=np.int32)
-        for r in range(nranks):
-            pos = self._positions(r)
-            sentinel = len(self.buf[r]) + len(self.local[r])
-            for k in range(K):
-                tok = rows[r][k] if k < len(rows[r]) else PAD
-                if tok is PAD:
-                    idx[r, k] = sentinel
-                else:
-                    if tok not in pos:
-                        raise AssertionError(
-                            f"planner bug: token {tok} not held by rank {r}"
-                        )
-                    idx[r, k] = pos[tok]
-        self._apply(Gather(idx=idx))
+    def gather_codes(self, want: np.ndarray) -> None:
+        self._apply(Gather(idx=self._map_codes(want)))
 
     def a2a_local(self, elem_bytes: int) -> None:
-        buflen = len(self.buf[0])
-        assert buflen % self.topo.ppn == 0
-        blk = buflen // self.topo.ppn
-        for r in range(self.topo.nranks):
-            l = self.topo.local_of(r)
-            for j in range(self.topo.ppn):
-                if j == l:
-                    continue  # self block does not hit the wire
-                seg = self.buf[r][j * blk : (j + 1) * blk]
-                self.intra_payload += sum(t is not None for t in seg) * elem_bytes
-                self.wire_intra += blk * elem_bytes
-        self._apply(A2ALocal(buflen=buflen))
+        n, W = self.buf.shape
+        ppn, npods = self.topo.ppn, self.topo.npods
+        assert W % ppn == 0
+        blk = W // ppn
+        nonpad = (self.buf.reshape(npods, ppn, ppn, blk) >= 0).sum(axis=3)
+        # self block (j == l) does not hit the wire
+        diag = int(np.einsum("pll->", nonpad))
+        self.intra_payload += (int(nonpad.sum()) - diag) * elem_bytes
+        self.wire_intra += n * (ppn - 1) * blk * elem_bytes
+        self._apply(A2ALocal(buflen=W))
 
     def a2a_pod(self, elem_bytes: int) -> None:
-        buflen = len(self.buf[0])
-        assert buflen % self.topo.npods == 0
-        blk = buflen // self.topo.npods
-        for r in range(self.topo.nranks):
-            p = self.topo.pod_of(r)
-            for q in range(self.topo.npods):
-                if q == p:
-                    continue
-                seg = self.buf[r][q * blk : (q + 1) * blk]
-                self.inter_payload += sum(t is not None for t in seg) * elem_bytes
-                self.wire_inter += blk * elem_bytes
-        self._apply(A2APod(buflen=buflen))
+        n, W = self.buf.shape
+        ppn, npods = self.topo.ppn, self.topo.npods
+        assert W % npods == 0
+        blk = W // npods
+        nonpad = (self.buf.reshape(npods, ppn, npods, blk) >= 0).sum(axis=3)
+        diag = int(np.einsum("qlq->", nonpad))
+        self.inter_payload += (int(nonpad.sum()) - diag) * elem_bytes
+        self.wire_inter += n * (npods - 1) * blk * elem_bytes
+        self._apply(A2APod(buflen=W))
 
     def permute_world(
         self,
-        rounds: List[Dict[int, Tuple[int, List[Token]]]],
+        rounds: List[Dict[int, Tuple[int, np.ndarray]]],
         elem_bytes: int,
     ) -> None:
-        """``rounds[i][src] = (dst, tokens)``: src sends tokens to dst."""
-        nranks = self.topo.nranks
+        """``rounds[i][src] = (dst, codes)``: src sends those tokens to dst."""
+        n = self.topo.nranks
         perm_list, blks, sels = [], [], []
         for rnd in rounds:
-            blk = max((len(toks) for _, toks in rnd.values()), default=0)
+            blk = max((len(c) for _, c in rnd.values()), default=0)
             blk = max(blk, 1)
-            sel = np.zeros((nranks, blk), dtype=np.int32)
+            want = np.full((n, blk), PAD_CODE, dtype=np.int64)
             perm = []
-            for r in range(nranks):
-                pos = self._positions(r)
-                sentinel = len(self.buf[r]) + len(self.local[r])
-                if r in rnd:
-                    dst, toks = rnd[r]
-                    perm.append((r, dst))
-                    inter = self.topo.pod_of(r) != self.topo.pod_of(dst)
-                    payload = len(toks) * elem_bytes
-                    if inter:
-                        self.inter_payload += payload
-                        self.wire_inter += blk * elem_bytes
-                    else:
-                        self.intra_payload += payload
-                        self.wire_intra += blk * elem_bytes
-                    for k in range(blk):
-                        sel[r, k] = pos[toks[k]] if k < len(toks) else sentinel
+            for s in sorted(rnd):
+                dst, codes = rnd[s]
+                perm.append((s, dst))
+                want[s, : len(codes)] = codes
+                payload = len(codes) * elem_bytes
+                if self.topo.pod_of(s) != self.topo.pod_of(dst):
+                    self.inter_payload += payload
+                    self.wire_inter += blk * elem_bytes
                 else:
-                    sel[r, :] = len(self.buf[r]) + len(self.local[r])
+                    self.intra_payload += payload
+                    self.wire_intra += blk * elem_bytes
             perm_list.append(tuple(perm))
             blks.append(blk)
-            sels.append(sel)
+            sels.append(self._map_codes(want))
         self._apply(
             PermuteWorld(rounds=tuple(perm_list), blks=tuple(blks), sels=tuple(sels))
         )
@@ -394,61 +617,51 @@ class _Planner:
         holds that rank ``(mypod, j)`` needs, optionally including this
         rank's *own* elements (the paper's ``local_comm`` merged in).
         """
-        topo, pat = self.topo, self.pattern
-        rows: List[List[List[Optional[Token]]]] = []
-        for r in range(topo.nranks):
+        topo = self.topo
+        n, L = topo.nranks, self.L
+        lut = self._pos_lut()
+        E = self.ext_len
+        held = lut < E  # [n, ntok]
+        blocks: List[np.ndarray] = []
+        for r in range(n):
             p = topo.pod_of(r)
-            pos = self._positions(r)
-            held = set(t for t in pos if extra_local_direct or t[0] != r)
-            blocks = []
+            hr = held[r]
+            if not extra_local_direct and L:
+                hr = hr.copy()
+                hr[r * L : (r + 1) * L] = False
             for j in range(topo.ppn):
                 d = topo.rank_of(p, j)
-                if d == r:
-                    # self block: stays on-device (never hits the wire), but
-                    # must carry tokens this rank holds *for itself*, because
-                    # the gather replaces the buffer.  Own local elements are
+                c = self.canon[d]
+                m = hr[c] if len(c) else np.zeros((0,), dtype=bool)
+                if d == r and L:
+                    # self block stays on-device; own local elements are
                     # always reachable via ext, so exclude them.
-                    want = [
-                        t for t in pat.canonical_tokens(d) if t in held and t[0] != r
-                    ]
-                else:
-                    want = [t for t in pat.canonical_tokens(d) if t in held]
-                blocks.append(sorted(set(want)))
-            rows.append(blocks)
-        B = max(max(len(b) for b in blocks) for blocks in rows)
-        B = max(B, 1)
-
-        def sel(r: int) -> List[Optional[Token]]:
-            out: List[Optional[Token]] = []
-            for b in rows[r]:
-                out.extend(b)
-                out.extend([PAD] * (B - len(b)))
-            return out
-
-        self.gather(sel, width=B * topo.ppn)
+                    m = m & (c // L != r)
+                blocks.append(c[m])
+        want = _pad_rows(blocks).reshape(n, -1)
+        self.gather_codes(want)
         self.a2a_local(elem_bytes)
         self.finish_canonical()
 
     def finish_canonical(self) -> None:
-        pat = self.pattern
-        H = max(pat.max_recv_size(), 1)
-        self.gather(lambda r: list(pat.canonical_tokens(r)), width=H)
+        self.gather_codes(_pad_rows(self.canon, width=max(self.max_recv, 1)))
 
     def build(self, strategy: str) -> StagePlan:
         pat = self.pattern
-        # verify delivery
-        for r in range(self.topo.nranks):
-            want = pat.canonical_tokens(r)
-            got = self.buf[r][: len(want)]
-            if got != want:
-                raise AssertionError(
-                    f"strategy {strategy}: rank {r} canonical mismatch"
-                )
+        # verify delivery: every rank's canonical prefix must be in place
+        n, H = self.buf.shape
+        want = _pad_rows(self.canon, width=H)
+        lens = np.fromiter((len(c) for c in self.canon), dtype=np.int64, count=n)
+        mask = np.arange(H)[None, :] < lens[:, None]
+        ok = (self.buf == want) | ~mask
+        if not ok.all():
+            r = int(np.argwhere(~ok)[0, 0])
+            raise AssertionError(f"strategy {strategy}: rank {r} canonical mismatch")
         return StagePlan(
             strategy=strategy,
             pattern=pat,
             stages=tuple(self.stages),
-            out_size=max(pat.max_recv_size(), 1),
+            out_size=max(self.max_recv, 1),
             intra_pod_bytes=self.intra_payload,
             inter_pod_bytes=self.inter_payload,
             wire_intra_pod_bytes=self.wire_intra,
@@ -470,36 +683,24 @@ def plan_standard(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
     """
     topo = pattern.topo
     pl = _Planner(pattern)
-    by_pair: Dict[Tuple[int, int], List[Token]] = defaultdict(list)
-    for n in pattern.needs:
-        by_pair[(n.src, n.dst)] = [(n.src, e) for e in n.idx]
+    n, L = topo.nranks, pattern.local_size
+    by_pair: Dict[Tuple[int, int], np.ndarray] = {}
+    for nd in pattern.needs:
+        by_pair[(nd.src, nd.dst)] = nd.src * L + np.asarray(nd.idx, dtype=np.int64)
     B = max((len(v) for v in by_pair.values()), default=0)
     B = max(B, 1)
 
     # layout [npods, ppn, B] by destination (pod, local)
-    def sel(r: int) -> List[Optional[Token]]:
-        out: List[Optional[Token]] = []
-        for d in range(topo.nranks):
-            toks = by_pair.get((r, d), [])
-            out.extend(toks)
-            out.extend([PAD] * (B - len(toks)))
-        return out
-
-    pl.gather(sel, width=topo.nranks * B)
+    blocks = [by_pair.get((r, d), _EMPTY) for r in range(n) for d in range(n)]
+    pl.gather_codes(_pad_rows(blocks, width=B).reshape(n, n * B))
     pl.a2a_pod(elem_bytes)
     # transpose [q, j, B] -> [j, q, B] so A2ALocal blocks are contiguous
-    buf = pl.buf
-
-    def transpose_sel(r: int) -> List[Optional[Token]]:
-        row = buf[r]
-        out: List[Optional[Token]] = []
-        for j in range(topo.ppn):
-            for q in range(topo.npods):
-                base = (q * topo.ppn + j) * B
-                out.extend(row[base : base + B])
-        return out
-
-    pl.gather(transpose_sel, width=topo.nranks * B)
+    want = (
+        pl.buf.reshape(n, topo.npods, topo.ppn, B)
+        .transpose(0, 2, 1, 3)
+        .reshape(n, n * B)
+    )
+    pl.gather_codes(want)
     pl.a2a_local(elem_bytes)
     pl.finish_canonical()
     return pl.build("standard")
@@ -510,22 +711,22 @@ def plan_two_step(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
     pod-rank pair, then intra-pod redistribution (paper §2.3.2)."""
     topo = pattern.topo
     pl = _Planner(pattern)
-    fused: Dict[Tuple[int, int], List[Token]] = {}
-    for r in range(topo.nranks):
-        for p in range(topo.npods):
-            fused[(r, p)] = [(r, e) for e in pattern.dedup_for_pod(r, p)]
+    n, L = topo.nranks, pattern.local_size
+    dedup = _dedup_codes(pattern)
+    fused = {
+        (r, p): r * L + dedup.get((r, p), _EMPTY)
+        for r in range(n)
+        for p in range(topo.npods)
+    }
     B = max((len(v) for v in fused.values()), default=0)
     B = max(B, 1)
 
-    def sel(r: int) -> List[Optional[Token]]:
-        out: List[Optional[Token]] = []
-        for p in range(topo.npods):
-            toks = fused[(r, p)] if p != topo.pod_of(r) else []
-            out.extend(toks)
-            out.extend([PAD] * (B - len(toks)))
-        return out
-
-    pl.gather(sel, width=topo.npods * B)
+    blocks = [
+        fused[(r, p)] if p != topo.pod_of(r) else _EMPTY
+        for r in range(n)
+        for p in range(topo.npods)
+    ]
+    pl.gather_codes(_pad_rows(blocks, width=B).reshape(n, topo.npods * B))
     pl.a2a_pod(elem_bytes)
     pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)
     return pl.build("two_step")
@@ -536,50 +737,42 @@ def plan_three_step(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
     message per pod pair, intra-pod redistribution (paper §2.3.1)."""
     topo = pattern.topo
     pl = _Planner(pattern)
+    n, L = topo.nranks, pattern.local_size
+    dedup = _dedup_codes(pattern)
     # deduped contribution of each rank to each foreign pod
-    contrib: Dict[Tuple[int, int], List[Token]] = {}
-    for r in range(topo.nranks):
-        for p in range(topo.npods):
-            if p == topo.pod_of(r):
-                continue
-            contrib[(r, p)] = [(r, e) for e in pattern.dedup_for_pod(r, p)]
+    contrib = {
+        (r, p): r * L + dedup.get((r, p), _EMPTY)
+        for r in range(n)
+        for p in range(topo.npods)
+        if p != topo.pod_of(r)
+    }
 
     # step 1: route contributions to the (src pod, dst pod) agent
-    rows: Dict[int, List[List[Optional[Token]]]] = {}
-    for r in range(topo.nranks):
+    blocks: List[np.ndarray] = []
+    for r in range(n):
         q = topo.pod_of(r)
-        blocks: List[List[Optional[Token]]] = [[] for _ in range(topo.ppn)]
+        per_agent: List[List[np.ndarray]] = [[] for _ in range(topo.ppn)]
         for p in range(topo.npods):
             if p == q:
                 continue
-            blocks[topo.agent_local(q, p)].extend(contrib[(r, p)])
-        rows[r] = blocks
-    B1 = max(max(len(b) for b in blocks) for blocks in rows.values())
-    B1 = max(B1, 1)
-
-    def sel1(r: int) -> List[Optional[Token]]:
-        out: List[Optional[Token]] = []
-        for b in rows[r]:
-            out.extend(b)
-            out.extend([PAD] * (B1 - len(b)))
-        return out
-
-    pl.gather(sel1, width=B1 * topo.ppn)
+            per_agent[topo.agent_local(q, p)].append(contrib[(r, p)])
+        blocks.extend(
+            np.concatenate(b) if b else _EMPTY for b in per_agent
+        )
+    pl.gather_codes(_pad_rows(blocks).reshape(n, -1))
     pl.a2a_local(elem_bytes)
 
     # step 2: one fused message per pod pair, spread over shifts
     rounds = []
     for d in topo.pod_shift_rounds():
-        rnd: Dict[int, Tuple[int, List[Token]]] = {}
+        rnd: Dict[int, Tuple[int, np.ndarray]] = {}
         for q in range(topo.npods):
             p = (q + d) % topo.npods
             a = topo.agent_local(q, p)
             src = topo.rank_of(q, a)
             dst = topo.rank_of(p, a)
-            toks: List[Token] = []
-            for l in range(topo.ppn):
-                toks.extend(contrib[(topo.rank_of(q, l), p)])
-            rnd[src] = (dst, sorted(set(toks)))
+            toks = [contrib[(topo.rank_of(q, l), p)] for l in range(topo.ppn)]
+            rnd[src] = (dst, np.unique(np.concatenate(toks))) if toks else (dst, _EMPTY)
         rounds.append(rnd)
     pl.permute_world(rounds, elem_bytes)
     pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)
@@ -587,15 +780,15 @@ def plan_three_step(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
 
 
 def _greedy_rounds(
-    chunks: List[Tuple[int, int, List[Token]]]
-) -> List[Dict[int, Tuple[int, List[Token]]]]:
+    chunks: List[Tuple[int, int, np.ndarray]]
+) -> List[Dict[int, Tuple[int, np.ndarray]]]:
     """Edge-color the chunk multigraph into rounds where every rank sends
     and receives at most one chunk (largest chunks first)."""
     remaining = sorted(chunks, key=lambda c: -len(c[2]))
     rounds = []
     while remaining:
         used_s, used_d = set(), set()
-        rnd: Dict[int, Tuple[int, List[Token]]] = {}
+        rnd: Dict[int, Tuple[int, np.ndarray]] = {}
         rest = []
         for s, d, toks in remaining:
             if s in used_s or d in used_d:
@@ -623,23 +816,27 @@ def plan_split(
     """
     topo = pattern.topo
     pl = _Planner(pattern)
+    n, L = topo.nranks, pattern.local_size
+    dedup = _dedup_codes(pattern)
 
     # per recv pod: per origin pod: owner-major deduped token list
-    chunks: List[Tuple[int, int, List[Token]]] = []  # (sender, receiver, tokens)
-    stage0_rows: Dict[int, List[List[Optional[Token]]]] = {
-        r: [[] for _ in range(topo.ppn)] for r in range(topo.nranks)
-    }
+    chunks: List[Tuple[int, int, np.ndarray]] = []  # (sender, receiver, codes)
+    stage0_rows: List[List[List[np.ndarray]]] = [
+        [[] for _ in range(topo.ppn)] for _ in range(n)
+    ]
     for recv_pod in range(topo.npods):
-        per_origin: Dict[int, List[Token]] = {}
+        per_origin: Dict[int, np.ndarray] = {}
         for origin in range(topo.npods):
             if origin == recv_pod:
                 continue
-            toks: List[Token] = []
-            for l in range(topo.ppn):
-                src = topo.rank_of(origin, l)
-                toks.extend((src, e) for e in pattern.dedup_for_pod(src, recv_pod))
-            if toks:
-                per_origin[origin] = toks
+            toks = [
+                topo.rank_of(origin, l) * L
+                + dedup.get((topo.rank_of(origin, l), recv_pod), _EMPTY)
+                for l in range(topo.ppn)
+            ]
+            cat = np.concatenate(toks) if toks else _EMPTY
+            if len(cat):
+                per_origin[origin] = cat
         if not per_origin:
             continue
         vols = {o: len(t) * elem_bytes for o, t in per_origin.items()}
@@ -654,7 +851,7 @@ def plan_split(
             cap = message_cap_bytes
         cap_elems = max(cap // elem_bytes, 1)
 
-        raw: List[Tuple[int, List[Token]]] = []  # (origin, chunk tokens)
+        raw: List[Tuple[int, np.ndarray]] = []  # (origin, chunk codes)
         for origin in sorted(per_origin):
             toks = per_origin[origin]
             for i in range(0, len(toks), cap_elems):
@@ -669,24 +866,18 @@ def plan_split(
             send_counter[origin] += 1
             chunks.append((sender, receiver, toks))
             # stage 0 (local_Scomm): owners stage chunk bytes on the sender
-            for tok in toks:
-                owner = tok[0]
-                if owner != sender:
-                    stage0_rows[owner][topo.local_of(sender)].append(tok)
+            owners = toks // L if L else toks * 0
+            j = topo.local_of(sender)
+            for owner in np.unique(owners):
+                if int(owner) != sender:
+                    stage0_rows[int(owner)][j].append(toks[owners == owner])
 
-    B0 = max(
-        (len(b) for blocks in stage0_rows.values() for b in blocks), default=0
-    )
-    B0 = max(B0, 1)
-
-    def sel0(r: int) -> List[Optional[Token]]:
-        out: List[Optional[Token]] = []
-        for b in stage0_rows[r]:
-            out.extend(b)
-            out.extend([PAD] * (B0 - len(b)))
-        return out
-
-    pl.gather(sel0, width=B0 * topo.ppn)
+    blocks = [
+        np.concatenate(b) if b else _EMPTY
+        for row in stage0_rows
+        for b in row
+    ]
+    pl.gather_codes(_pad_rows(blocks).reshape(n, -1))
     pl.a2a_local(elem_bytes)
     pl.permute_world(_greedy_rounds(chunks), elem_bytes)
     pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)

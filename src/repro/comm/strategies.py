@@ -2,27 +2,44 @@
 
 :class:`IrregularExchange` takes an :class:`~repro.comm.exchange.ExchangePattern`
 and a strategy name, plans the static stage program (setup time, like the
-paper's Algorithm 1 / communicator construction), and exposes a jitted
-``shard_map`` callable that performs the exchange:
+paper's Algorithm 1 / communicator construction), fuses it
+(:mod:`repro.comm.fusion`), and exposes a jitted ``shard_map`` callable that
+performs the exchange:
 
-    ``local [nranks, L]  ->  canonical recv buffer [nranks, H]``
+    ``local [nranks, L]       ->  canonical recv buffer [nranks, H]``
+    ``local [nranks, L, k...] ->  [nranks, H, k...]``  (batched payloads:
+    multi-vector SpMM columns, per-token feature dims for MoE routing)
 
 The executor mirrors :func:`repro.comm.exchange.simulate_stage` exactly; the
 symbolic simulator is the oracle for the data movement, and
 ``ExchangePattern.reference`` is the oracle for the delivered values.
+
+Setup cost is amortized twice over:
+
+* **ext-once execution** -- at compile time every stage's indices are
+  re-based onto a single ``[local | buf]`` scratch array allocated once per
+  call, so no stage re-concatenates ``[buf, local]``.
+* **plan/compile caches** -- module-level LRU caches keyed by
+  ``(pattern fingerprint, strategy, message_cap, elem_bytes, fused)`` (plans)
+  plus the mesh identity (executors).  Repeated ``IrregularExchange``
+  constructions for the same exchange (every SpMV / MoE step) reuse the
+  planned program and the jitted callable; per-``(dtype, payload shape)``
+  specializations live in ``jax.jit``'s trace cache under that callable.
+  Inspect with :func:`cache_stats`, reset with :func:`clear_caches`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple
+from collections import OrderedDict
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.comm.exchange import (
     A2ALocal,
     A2APod,
@@ -32,53 +49,270 @@ from repro.comm.exchange import (
     StagePlan,
     plan,
 )
-from repro.comm.topology import LOCAL_AXIS, POD_AXIS, WORLD_AXES, PodTopology, make_exchange_mesh
+from repro.comm.fusion import fuse
+from repro.comm.topology import (
+    LOCAL_AXIS,
+    POD_AXIS,
+    WORLD_AXES,
+    PodTopology,
+    make_exchange_mesh,
+)
+
+# ---------------------------------------------------------------------------
+# Compiled-program representation (ext-once execution)
+# ---------------------------------------------------------------------------
 
 
-def _execute(stages, topo: PodTopology, local: jnp.ndarray, plan_arrays) -> jnp.ndarray:
-    """Stage interpreter; runs inside shard_map. ``local`` is ``[1, L]``."""
-    local = local.reshape(-1)
-    buf = jnp.zeros((0,), local.dtype)
+def _rebase(idx: np.ndarray, w: int, L: int, sentinel: int) -> np.ndarray:
+    """Re-base stage indices from ``ext = [buf(w) | local(L)]`` coordinates
+    onto the fixed ``[local(L) | buf(W_max)]`` scratch layout.
+
+    PADs (``idx >= w + L``) map to ``sentinel`` (one past the scratch), which
+    ``.get(mode='fill')`` turns into zeros.
+    """
+    idx = np.asarray(idx)
+    out = np.full(idx.shape, sentinel, dtype=np.int32)
+    np.copyto(out, (idx + L).astype(np.int32), where=idx < w)
+    np.copyto(out, (idx - w).astype(np.int32), where=(idx >= w) & (idx < w + L))
+    return out
+
+
+def _compile_program(sp: StagePlan) -> Tuple[Tuple, Tuple[np.ndarray, ...], int]:
+    """Lower a stage program to executor ops + re-based index arrays.
+
+    Returns ``(ops, arrays, W_max)`` where every index array addresses the
+    ``[local | buf]`` scratch of width ``L + W_max`` directly.
+    """
+    L = sp.pattern.local_size
+    widths: List[int] = []
+    w = 0
+    for st in sp.stages:
+        if isinstance(st, Gather):
+            w = st.idx.shape[1]
+        elif isinstance(st, (A2ALocal, A2APod)):
+            w = st.buflen
+        elif isinstance(st, PermuteWorld):
+            w = sum(st.blks)
+        else:
+            raise TypeError(f"unknown stage {st!r}")
+        widths.append(w)
+    w_max = max(widths, default=0)
+    w_max = max(w_max, sp.out_size)
+    sentinel = L + w_max
+
+    ops: List[Tuple] = []
+    arrays: List[np.ndarray] = []
+    w = 0
+    for st in sp.stages:
+        if isinstance(st, Gather):
+            arrays.append(_rebase(st.idx, w, L, sentinel))
+            w = st.idx.shape[1]
+            ops.append(("gather", w))
+        elif isinstance(st, (A2ALocal, A2APod)):
+            kind = "a2a_local" if isinstance(st, A2ALocal) else "a2a_pod"
+            has_idx = st.idx is not None
+            if has_idx:
+                arrays.append(_rebase(st.idx, w, L, sentinel))
+            ops.append((kind, st.buflen, has_idx))
+            w = st.buflen
+        elif isinstance(st, PermuteWorld):
+            for sel in st.sels:
+                arrays.append(_rebase(sel, w, L, sentinel))
+            ops.append(("permute", st.rounds, st.blks))
+            w = sum(st.blks)
+    return tuple(ops), tuple(arrays), w_max
+
+
+def _execute(
+    ops, topo: PodTopology, L: int, w_max: int, out_size: int, local, plan_arrays
+):
+    """Ops interpreter; runs inside shard_map.  ``local`` is ``[1, L, *feat]``.
+
+    The scratch ``ext = [local | buf]`` is allocated once per call; stages
+    read/write the buf region in place instead of re-concatenating
+    ``[buf, local]`` per Gather/PermuteWorld round.
+    """
+    x = local[0]
+    feat = x.shape[1:]
+    ext = jnp.concatenate([x, jnp.zeros((w_max,) + feat, x.dtype)], axis=0)
     ai = 0
-    for stage in stages:
-        if isinstance(stage, Gather):
-            idx = plan_arrays[ai].reshape(-1)
+    for op in ops:
+        kind = op[0]
+        if kind == "gather":
+            _, width = op
+            idx = plan_arrays[ai][0]
             ai += 1
-            ext = jnp.concatenate([buf, local])
-            buf = ext.at[idx].get(mode="fill", fill_value=0)
-        elif isinstance(stage, A2ALocal):
-            buf = jax.lax.all_to_all(
-                buf.reshape(topo.ppn, -1), LOCAL_AXIS, 0, 0, tiled=True
-            ).reshape(-1)
-        elif isinstance(stage, A2APod):
-            buf = jax.lax.all_to_all(
-                buf.reshape(topo.npods, -1), POD_AXIS, 0, 0, tiled=True
-            ).reshape(-1)
-        elif isinstance(stage, PermuteWorld):
-            ext = jnp.concatenate([buf, local])
-            outs = []
-            for perm, blk in zip(stage.rounds, stage.blks):
-                sel = plan_arrays[ai].reshape(-1)
+            vals = ext.at[idx].get(mode="fill", fill_value=0)
+            ext = ext.at[L : L + width].set(vals)
+        elif kind in ("a2a_local", "a2a_pod"):
+            _, buflen, has_idx = op
+            if has_idx:
+                idx = plan_arrays[ai][0]
+                ai += 1
+                seg = ext.at[idx].get(mode="fill", fill_value=0)
+            else:
+                seg = ext[L : L + buflen]
+            groups, axis = (
+                (topo.ppn, LOCAL_AXIS)
+                if kind == "a2a_local"
+                else (topo.npods, POD_AXIS)
+            )
+            res = jax.lax.all_to_all(
+                seg.reshape((groups, buflen // groups) + feat), axis, 0, 0, tiled=True
+            )
+            ext = ext.at[L : L + buflen].set(res.reshape((buflen,) + feat))
+        elif kind == "permute":
+            _, rounds, blks = op
+            parts = []
+            for perm, blk in zip(rounds, blks):
+                sel = plan_arrays[ai][0]
                 ai += 1
                 send = ext.at[sel].get(mode="fill", fill_value=0)
                 if perm:
-                    outs.append(jax.lax.ppermute(send, WORLD_AXES, list(perm)))
+                    parts.append(jax.lax.ppermute(send, WORLD_AXES, list(perm)))
                 else:
-                    outs.append(jnp.zeros_like(send))
-            buf = jnp.concatenate(outs) if outs else jnp.zeros((0,), local.dtype)
+                    parts.append(jnp.zeros_like(send))
+            width = sum(blks)
+            if parts:
+                ext = ext.at[L : L + width].set(jnp.concatenate(parts))
         else:
-            raise TypeError(f"unknown stage {stage!r}")
-    return buf.reshape(1, -1)
+            raise TypeError(f"unknown op {op!r}")
+    return ext[L : L + out_size][None]
 
 
-def _plan_arrays(stage_plan: StagePlan) -> Tuple[np.ndarray, ...]:
-    arrs = []
-    for stage in stage_plan.stages:
-        if isinstance(stage, Gather):
-            arrs.append(stage.idx)
-        elif isinstance(stage, PermuteWorld):
-            arrs.extend(stage.sels)
-    return tuple(arrs)
+# ---------------------------------------------------------------------------
+# Plan / executor caches
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    plan_hits: int = 0
+    plan_misses: int = 0
+    exec_hits: int = 0
+    exec_misses: int = 0
+
+
+_stats = CacheStats()
+_PLAN_CACHE: "OrderedDict[tuple, StagePlan]" = OrderedDict()
+_EXEC_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_MESH_CACHE: "OrderedDict[tuple, jax.sharding.Mesh]" = OrderedDict()
+PLAN_CACHE_MAX = 256
+EXEC_CACHE_MAX = 64
+
+
+def cache_stats() -> CacheStats:
+    """Snapshot of plan/executor cache hit counters."""
+    return dataclasses.replace(_stats)
+
+
+def clear_caches() -> None:
+    _PLAN_CACHE.clear()
+    _EXEC_CACHE.clear()
+    _MESH_CACHE.clear()
+    _stats.plan_hits = _stats.plan_misses = 0
+    _stats.exec_hits = _stats.exec_misses = 0
+
+
+def _lru_get(cache: OrderedDict, key, max_size: int, build):
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key], True
+    val = build()
+    cache[key] = val
+    while len(cache) > max_size:
+        cache.popitem(last=False)
+    return val, False
+
+
+def _plan_key(
+    pattern: ExchangePattern,
+    strategy: str,
+    message_cap_bytes: int,
+    elem_bytes: int,
+    fuse_program: bool,
+) -> tuple:
+    return (
+        pattern.fingerprint(),
+        strategy,
+        message_cap_bytes,
+        elem_bytes,
+        fuse_program,
+    )
+
+
+def planned(
+    pattern: ExchangePattern,
+    strategy: str,
+    message_cap_bytes: int = 16384,
+    elem_bytes: int = 4,
+    fuse_program: bool = True,
+    _key: Optional[tuple] = None,
+) -> StagePlan:
+    """Plan (and optionally fuse) with module-level memoization."""
+    key = _key or _plan_key(
+        pattern, strategy, message_cap_bytes, elem_bytes, fuse_program
+    )
+
+    def build():
+        sp = plan(
+            strategy,
+            pattern,
+            message_cap_bytes=message_cap_bytes,
+            elem_bytes=elem_bytes,
+        )
+        return fuse(sp) if fuse_program else sp
+
+    sp, hit = _lru_get(_PLAN_CACHE, key, PLAN_CACHE_MAX, build)
+    if hit:
+        _stats.plan_hits += 1
+    else:
+        _stats.plan_misses += 1
+    return sp
+
+
+def _default_mesh(topo: PodTopology) -> jax.sharding.Mesh:
+    key = (topo.npods, topo.ppn)
+    mesh, _ = _lru_get(_MESH_CACHE, key, 16, lambda: make_exchange_mesh(topo))
+    return mesh
+
+
+def _mesh_key(mesh: jax.sharding.Mesh) -> tuple:
+    return (
+        tuple(int(d.id) for d in mesh.devices.flat),
+        tuple(mesh.devices.shape),
+        tuple(mesh.axis_names),
+    )
+
+
+def _executor(sp: StagePlan, plan_key: tuple, mesh: jax.sharding.Mesh):
+    key = plan_key + _mesh_key(mesh)
+
+    def build():
+        topo = sp.pattern.topo
+        ops, arrays, w_max = _compile_program(sp)
+        specs = (P(WORLD_AXES),) * (1 + len(arrays))
+        L, out_size = sp.pattern.local_size, sp.out_size
+
+        def run(local, *plan_arrays):
+            return _execute(ops, topo, L, w_max, out_size, local, plan_arrays)
+
+        fn = jax.jit(
+            shard_map(run, mesh=mesh, in_specs=specs, out_specs=P(WORLD_AXES))
+        )
+        return fn, tuple(jnp.asarray(a) for a in arrays)
+
+    val, hit = _lru_get(_EXEC_CACHE, key, EXEC_CACHE_MAX, build)
+    if hit:
+        _stats.exec_hits += 1
+    else:
+        _stats.exec_misses += 1
+    return val
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -91,6 +325,11 @@ class IrregularExchange:
       mesh: optional pre-built ``("pod", "local")`` mesh.
       message_cap_bytes: Split's user cap (Algorithm 1 input).
       elem_bytes: element width used for cap arithmetic / byte accounting.
+      fuse_program: run the :mod:`repro.comm.fusion` rewrites (default on).
+
+    Construction is cheap when an equal exchange was built before: the plan
+    and the jitted executor come from module-level caches (see
+    :func:`cache_stats`).
     """
 
     pattern: ExchangePattern
@@ -98,35 +337,39 @@ class IrregularExchange:
     mesh: Optional[jax.sharding.Mesh] = None
     message_cap_bytes: int = 16384
     elem_bytes: int = 4
+    fuse_program: bool = True
 
     def __post_init__(self) -> None:
-        self.plan: StagePlan = plan(
-            self.strategy,
+        plan_key = _plan_key(
             self.pattern,
+            self.strategy,
+            self.message_cap_bytes,
+            self.elem_bytes,
+            self.fuse_program,
+        )
+        self.plan: StagePlan = planned(
+            self.pattern,
+            self.strategy,
             message_cap_bytes=self.message_cap_bytes,
             elem_bytes=self.elem_bytes,
+            fuse_program=self.fuse_program,
+            _key=plan_key,
         )
         if self.mesh is None:
-            self.mesh = make_exchange_mesh(self.pattern.topo)
-        topo = self.pattern.topo
-        arrays = _plan_arrays(self.plan)
-        specs = (P(WORLD_AXES),) * (1 + len(arrays))
-
-        def run(local, *plan_arrays):
-            return _execute(self.plan.stages, topo, local, plan_arrays)
-
-        self._arrays = tuple(jnp.asarray(a) for a in arrays)
-        self._fn = jax.jit(
-            jax.shard_map(run, mesh=self.mesh, in_specs=specs, out_specs=P(WORLD_AXES))
-        )
+            self.mesh = _default_mesh(self.pattern.topo)
+        self._fn, self._arrays = _executor(self.plan, plan_key, self.mesh)
 
     # ------------------------------------------------------------------
     def __call__(self, local: jax.Array) -> jax.Array:
-        """``local [nranks, L] -> canonical recv [nranks, H]``."""
-        if local.shape != (self.pattern.topo.nranks, self.pattern.local_size):
+        """``local [nranks, L, *feat] -> canonical recv [nranks, H, *feat]``.
+
+        Trailing feature dims (multi-vector SpMM ``k``, per-token features)
+        ride along under the same plan; jit specializes per trailing shape.
+        """
+        n, L = self.pattern.topo.nranks, self.pattern.local_size
+        if local.ndim < 2 or local.shape[:2] != (n, L):
             raise ValueError(
-                f"expected [{self.pattern.topo.nranks}, {self.pattern.local_size}], "
-                f"got {local.shape}"
+                f"expected [{n}, {L}, *feat], got {tuple(local.shape)}"
             )
         return self._fn(local, *self._arrays)
 

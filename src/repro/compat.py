@@ -1,0 +1,42 @@
+"""Version-tolerance shims for the small jax API surface this repo relies on.
+
+The repo targets the newest jax spellings (``jax.shard_map`` with
+``check_vma``, ``jax.tree.flatten_with_path``); older runtimes (e.g. the
+0.4.x series in the CI image) expose the same functionality under
+``jax.experimental.shard_map`` / ``jax.tree_util``.  Route every use through
+here so call sites stay on the modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax < 0.5: experimental module, `check_rep` keyword
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the replication-check kwarg name papered over."""
+    kwargs = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+try:
+    tree_flatten_with_path = jax.tree.flatten_with_path
+except AttributeError:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size``; on older jax, ``psum(1, axis)`` constant-folds
+    to the same static size inside shard_map/pmap bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

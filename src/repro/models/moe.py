@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
+from repro.compat import shard_map
 from repro.models.layers import MLP
 from repro.models.sharding import ParamSpec
 
@@ -190,7 +191,7 @@ class MoELayer:
         x_spec = P(batch_axes or None, None, None)
         r_spec = P(batch_axes or None, None, None)
         w_spec = P(ep, None, "model" if "model" in mesh.axis_names else None)
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(x_spec, r_spec, r_spec, w_spec, w_spec,

@@ -22,6 +22,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.comm.strategies import IrregularExchange
+from repro.compat import shard_map
 from repro.comm.topology import WORLD_AXES, PodTopology, make_exchange_mesh
 from repro.core.advisor import advise
 from repro.core.perfmodel import Strategy, Transport
@@ -50,6 +51,7 @@ class DistributedSpMV:
     message_cap_bytes: int = 16384
     use_pallas: bool = True
     mesh: Optional[jax.sharding.Mesh] = None
+    fuse_program: bool = True
 
     def __post_init__(self) -> None:
         topo = self.partition.topo
@@ -63,11 +65,16 @@ class DistributedSpMV:
             self.advice = None
         if self.mesh is None:
             self.mesh = make_exchange_mesh(topo)
+        # The exchange's plan + jitted executor come from the module-level
+        # caches in repro.comm.strategies, so rebuilding for the same matrix
+        # partition skips planning and the exchange jit.  The local-SpMV
+        # _compute below is still re-jitted per construction.
         self.exchange = IrregularExchange(
             self.partition.pattern,
             self.strategy,
             mesh=self.mesh,
             message_cap_bytes=self.message_cap_bytes,
+            fuse_program=self.fuse_program,
         )
         L = self.partition.rows_per_rank
         g = topo.nranks
@@ -90,7 +97,7 @@ class DistributedSpMV:
             return w[None]
 
         self._compute = jax.jit(
-            jax.shard_map(
+            shard_map(
                 compute,
                 mesh=self.mesh,
                 in_specs=(P(WORLD_AXES),) * 6,
@@ -105,6 +112,15 @@ class DistributedSpMV:
         """``v [nranks, L] -> w [nranks, L]``."""
         halo = self.exchange(v)
         return self._compute(v, halo, *self._blocks)
+
+    def halo(self, v: jax.Array) -> jax.Array:
+        """Exchange-only entry point.
+
+        Accepts batched payloads ``[nranks, L, k]`` (multi-vector SpMM /
+        batched serving) under the same plan; see
+        :meth:`repro.comm.strategies.IrregularExchange.__call__`.
+        """
+        return self.exchange(v)
 
     # ------------------------------------------------------------------
     @property

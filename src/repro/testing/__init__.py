@@ -1,0 +1,5 @@
+"""Test-support utilities vendored with the library (no external deps)."""
+
+from repro.testing.hypo import given, settings, st
+
+__all__ = ["given", "settings", "st"]

@@ -1,0 +1,115 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface the
+test-suite uses.
+
+The CI image does not ship ``hypothesis`` and installing packages is not an
+option, so the tests import it behind a ``try`` and fall back to this shim:
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from repro.testing.hypo import given, settings, st
+
+Semantics: ``@given(**strategies)`` runs the decorated test once per drawn
+example, ``max_examples`` (from ``@settings``) times, drawing from a
+deterministic per-test RNG seeded by the test's qualified name — so runs are
+reproducible and shrinking is simply "the failing example is printed".
+Only the strategies the suite uses are provided: ``integers``,
+``floats`` and ``sampled_from``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from types import SimpleNamespace
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+_MAX_EXAMPLES_ATTR = "_hypo_max_examples"
+
+
+class SearchStrategy:
+    """A drawable value source: ``draw(rng) -> value``."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any], label: str):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return self.label
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    items = list(elements)
+    if not items:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(
+        lambda rng: items[int(rng.integers(len(items)))],
+        f"sampled_from({items!r})",
+    )
+
+
+st = SimpleNamespace(integers=integers, floats=floats, sampled_from=sampled_from)
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record ``max_examples``; ``deadline`` and anything else is ignored."""
+
+    def deco(fn):
+        setattr(fn, _MAX_EXAMPLES_ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(**strategies: SearchStrategy):
+    """Run the test once per example; works with @settings above or below."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper,
+                _MAX_EXAMPLES_ATTR,
+                getattr(fn, _MAX_EXAMPLES_ATTR, _DEFAULT_MAX_EXAMPLES),
+            )
+            seed = zlib.crc32(getattr(fn, "__qualname__", fn.__name__).encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception:
+                    print(f"Falsifying example ({i + 1}/{n}): {drawn!r}")
+                    raise
+
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper's visible signature is the original minus given() kwargs.
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

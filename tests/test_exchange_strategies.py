@@ -3,8 +3,11 @@ reference exchange (8-device subprocess), plus in-process plan properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # CI image has no hypothesis; use the vendored shim
+    from repro.testing.hypo import given, settings, st
 
 from repro.comm.exchange import plan, random_pattern, simulate
 from repro.comm.topology import PodTopology
@@ -87,6 +90,14 @@ for trial in range(2):
         ex = IrregularExchange(pat, strat, message_cap_bytes=32)
         out = np.asarray(ex(local))
         np.testing.assert_allclose(out[:, :H], ref[:, :H])
+        # unfused program delivers the same bits through real collectives
+        exu = IrregularExchange(pat, strat, message_cap_bytes=32, fuse_program=False)
+        np.testing.assert_array_equal(np.asarray(exu(local)), out)
+    # batched payload [nranks, L, k] under the same plan
+    loc3 = rng.normal(size=(topo.nranks, 7, 3)).astype(np.float32)
+    ref3 = pat.reference(loc3)
+    ex = IrregularExchange(pat, "two_step", message_cap_bytes=32)
+    np.testing.assert_array_equal(np.asarray(ex(loc3))[:, :H], ref3[:, :H])
 print("OK")
 """,
         devices=8,

@@ -3,8 +3,11 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # CI image has no hypothesis; use the vendored shim
+    from repro.testing.hypo import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_kernel

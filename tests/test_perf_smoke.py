@@ -1,0 +1,97 @@
+"""Setup-path performance regression guards.
+
+These are deliberately generous budgets: they exist to catch an accidental
+return to per-token Python loops (orders of magnitude), not scheduler
+noise.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm import strategies as comm_strategies
+from repro.comm.exchange import plan, random_pattern
+from repro.comm.fusion import fuse
+from repro.comm.topology import PodTopology
+
+#: generous wall-time budget for planning+fusing one strategy on the fixed
+#: 16-rank pattern below (vectorized planner: ~5 ms; legacy: ~70 ms)
+PLAN_BUDGET_S = 2.0
+
+
+def _fixed_pattern():
+    rng = np.random.default_rng(1234)
+    topo = PodTopology(npods=4, ppn=4)  # 16 ranks
+    return random_pattern(rng, topo, local_size=16, p_connect=0.5, max_elems=8)
+
+
+def test_planning_within_time_budget():
+    pat = _fixed_pattern()
+    for strategy in ("standard", "two_step", "three_step", "split"):
+        t0 = time.perf_counter()
+        fuse(plan(strategy, pat, message_cap_bytes=512))
+        elapsed = time.perf_counter() - t0
+        assert elapsed < PLAN_BUDGET_S, (
+            f"{strategy}: planning took {elapsed:.2f}s (budget {PLAN_BUDGET_S}s); "
+            "did the planner fall back to per-token Python loops?"
+        )
+
+
+def test_plan_cache_hits_on_second_use():
+    """The module plan cache must serve repeated plans of an equal pattern."""
+    pat = _fixed_pattern()
+    comm_strategies.clear_caches()
+    sp1 = comm_strategies.planned(pat, "two_step", message_cap_bytes=512)
+    stats = comm_strategies.cache_stats()
+    assert stats.plan_misses == 1 and stats.plan_hits == 0
+    sp2 = comm_strategies.planned(pat, "two_step", message_cap_bytes=512)
+    stats = comm_strategies.cache_stats()
+    assert stats.plan_hits == 1
+    assert sp2 is sp1
+    # different cap is a different exchange: no false sharing
+    comm_strategies.planned(pat, "two_step", message_cap_bytes=256)
+    stats = comm_strategies.cache_stats()
+    assert stats.plan_misses == 2 and stats.plan_hits == 1
+    comm_strategies.clear_caches()
+
+
+@pytest.mark.slow
+def test_exchange_compile_cache_hits_on_devices(subproc):
+    """Second IrregularExchange construction reuses plan AND jitted executor."""
+    subproc(
+        """
+import time
+import numpy as np
+from repro.comm import strategies as S
+from repro.comm.exchange import random_pattern
+from repro.comm.topology import PodTopology
+
+rng = np.random.default_rng(1234)
+topo = PodTopology(npods=4, ppn=4)
+pat = random_pattern(rng, topo, local_size=16, p_connect=0.5, max_elems=8)
+S.clear_caches()
+
+t0 = time.perf_counter()
+ex1 = S.IrregularExchange(pat, "two_step", message_cap_bytes=512)
+cold = time.perf_counter() - t0
+s1 = S.cache_stats()
+assert s1.plan_misses == 1 and s1.exec_misses == 1, s1
+assert s1.plan_hits == 0 and s1.exec_hits == 0, s1
+
+t0 = time.perf_counter()
+ex2 = S.IrregularExchange(pat, "two_step", message_cap_bytes=512)
+warm = time.perf_counter() - t0
+s2 = S.cache_stats()
+assert s2.plan_hits >= 1, s2
+assert s2.exec_hits >= 1, s2
+assert ex2._fn is ex1._fn, "jitted executor was rebuilt"
+
+local = rng.normal(size=(topo.nranks, 16)).astype(np.float32)
+ref = pat.reference(local)
+H = pat.max_recv_size()
+np.testing.assert_array_equal(np.asarray(ex2(local))[:, :H], ref[:, :H])
+print(f"CACHE OK cold={cold*1e3:.1f}ms warm={warm*1e3:.1f}ms")
+""",
+        devices=16,
+    )

@@ -3,8 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # CI image has no hypothesis; use the vendored shim
+    from repro.testing.hypo import given, settings, st
 
 from repro.core import (
     LASSEN,
