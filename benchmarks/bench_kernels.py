@@ -13,42 +13,64 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.spmv_ell import spmv_ell
+from repro.kernels.spmv_ell import spmm_ell, spmv_ell
 from repro.kernels.ssd_scan import ssd_scan_kernel
 from repro.models.ssd import ssd_chunked
 
 RNG = np.random.default_rng(0)
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
+    iters = 3 if smoke else 10
     # spmv
-    data = jnp.asarray(RNG.normal(size=(512, 32)), jnp.float32)
-    cols = jnp.asarray(RNG.integers(0, 2048, (512, 32)), jnp.int32)
-    x = jnp.asarray(RNG.normal(size=(2048,)), jnp.float32)
-    t_k = time_fn(lambda: spmv_ell(data, cols, x, interpret=True).block_until_ready())
-    t_r = time_fn(lambda: ref.spmv_ell(data, cols, x).block_until_ready())
+    R, N = (128, 512) if smoke else (512, 2048)
+    data = jnp.asarray(RNG.normal(size=(R, 32)), jnp.float32)
+    cols = jnp.asarray(RNG.integers(0, N, (R, 32)), jnp.int32)
+    x = jnp.asarray(RNG.normal(size=(N,)), jnp.float32)
+    t_k = time_fn(lambda: spmv_ell(data, cols, x, interpret=True).block_until_ready(),
+                  iters=iters)
+    t_r = time_fn(lambda: ref.spmv_ell(data, cols, x).block_until_ready(), iters=iters)
     emit("kernel/spmv_ell/interpret", t_k, f"ref_us={t_r:.1f}")
 
+    # spmm: same ELL block, multi-vector rhs
+    for k in (4,) if smoke else (4, 64):
+        X = jnp.asarray(RNG.normal(size=(N, k)), jnp.float32)
+        t_k = time_fn(lambda: spmm_ell(data, cols, X, interpret=True).block_until_ready(),
+                      iters=iters)
+        t_r = time_fn(lambda: ref.spmm_ell(data, cols, X).block_until_ready(),
+                      iters=iters)
+        emit(f"kernel/spmm_ell/interpret/k{k}", t_k, f"ref_us={t_r:.1f}")
+
     # flash attention
-    q = jnp.asarray(RNG.normal(size=(1, 256, 4, 64)), jnp.float32)
-    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
-    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
-    t_k = time_fn(lambda: flash_attention_kernel(q, k, v, block_q=128, block_k=128,
-                                                 interpret=True).block_until_ready(), iters=5)
-    t_r = time_fn(lambda: ref.attention(q[0], k[0], v[0]).block_until_ready())
+    S = 64 if smoke else 256
+    q = jnp.asarray(RNG.normal(size=(1, S, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, S, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, S, 2, 64)), jnp.float32)
+    t_k = time_fn(lambda: flash_attention_kernel(q, k, v, block_q=32 if smoke else 128,
+                                                 block_k=32 if smoke else 128,
+                                                 interpret=True).block_until_ready(),
+                  iters=min(iters, 5))
+    t_r = time_fn(lambda: ref.attention(q[0], k[0], v[0]).block_until_ready(),
+                  iters=iters)
     emit("kernel/flash_attention/interpret", t_k, f"ref_us={t_r:.1f}")
 
     # ssd
-    xs = jnp.asarray(RNG.normal(size=(2, 512, 4, 32)), jnp.float32)
-    loga = jnp.asarray(-np.abs(RNG.normal(size=(2, 512, 4))) * 0.2, jnp.float32)
-    b = jnp.asarray(RNG.normal(size=(2, 512, 32)), jnp.float32)
-    c = jnp.asarray(RNG.normal(size=(2, 512, 32)), jnp.float32)
-    t_k = time_fn(lambda: ssd_scan_kernel(xs, loga, b, c, chunk=128,
-                                          interpret=True).block_until_ready(), iters=5)
-    t_r = time_fn(lambda: ssd_chunked(xs, loga, b, c, chunk=128).block_until_ready(), iters=5)
+    S = 128 if smoke else 512
+    xs = jnp.asarray(RNG.normal(size=(2, S, 4, 32)), jnp.float32)
+    loga = jnp.asarray(-np.abs(RNG.normal(size=(2, S, 4))) * 0.2, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(2, S, 32)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(2, S, 32)), jnp.float32)
+    t_k = time_fn(lambda: ssd_scan_kernel(xs, loga, b, c, chunk=64 if smoke else 128,
+                                          interpret=True).block_until_ready(),
+                  iters=min(iters, 5))
+    t_r = time_fn(lambda: ssd_chunked(xs, loga, b, c,
+                                      chunk=64 if smoke else 128).block_until_ready(),
+                  iters=min(iters, 5))
     emit("kernel/ssd_scan/interpret", t_k, f"xla_chunked_us={t_r:.1f}")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -20,7 +20,7 @@ from repro.sparse import audikw_like, build, partition_csr
 
 rng = np.random.default_rng(0)
 topo = PodTopology(npods=2, ppn=4)
-A = audikw_like(128, rng)
+A = audikw_like(64 if SMOKE else 128, rng)
 part = partition_csr(A, topo)
 adv = advise(part.pattern.to_comm_pattern(), machine="tpu_v5e_pod", include_two_step_one=False)
 pred = {
@@ -34,7 +34,7 @@ for strat in pred:
     sp = build(A, topo, strategy=strat, use_pallas=False)
     sp.exchange(v).block_until_ready()
     ts = []
-    for _ in range(10):
+    for _ in range(3 if SMOKE else 10):
         t0 = time.perf_counter(); sp.exchange(v).block_until_ready()
         ts.append(time.perf_counter() - t0)
     ts.sort()
@@ -43,13 +43,15 @@ for strat in pred:
 """
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
-    out = run_with_devices(CODE, devices=8)
+    out = run_with_devices(f"SMOKE = {smoke!r}\n" + CODE, devices=8)
     for line in out.splitlines():
         if line.startswith("RESULT,"):
             print(line[len("RESULT,"):])
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

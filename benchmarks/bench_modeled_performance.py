@@ -14,14 +14,14 @@ from benchmarks.common import emit
 from repro.core import Strategy, Transport, advise, figure43_pattern
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     for machine in ("lassen", "tpu_v5e_pod"):
         for nmsgs in (32, 256):
             for nodes in (4, 16):
-                for dup in (0.0, 0.25):
+                for dup in ((0.0,) if smoke else (0.0, 0.25)):
                     wins = {}
-                    for logs in range(4, 21):
+                    for logs in range(4, 13 if smoke else 21):
                         size = 2**logs
                         pat = figure43_pattern(size, nmsgs, nodes)
                         adv = advise(pat, machine=machine, duplicate_fraction=dup)
@@ -36,9 +36,21 @@ def main() -> None:
                     emit(
                         f"fig4.3/{machine}/m{nmsgs}/n{nodes}/dup{int(dup*100)}/winner",
                         0.0,
-                        f"{top}({wins[top]}of17)",
+                        f"{top}({wins[top]}of{sum(wins.values())})",
                     )
+        # payload-width sweep: how the advised winner moves as the batched
+        # column count k scales the byte terms under fixed message counts
+        pat = figure43_pattern(2048, 256, 16)
+        for k in (1, 4, 16, 64):
+            best = advise(pat, machine=machine, payload_width=k).best
+            emit(
+                f"fig4.3/{machine}/payload_width/k{k}",
+                best.predicted_time * 1e6,
+                best.key,
+            )
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -41,13 +41,13 @@ def table_2_3_4() -> None:
         emit(f"table4/{machine.name}/rn_inv", machine.rn_inv * 1e6, "s_per_B*1e6")
 
 
-def host_pingpong_fit() -> None:
+def host_pingpong_fit(smoke: bool = False) -> None:
     """Measure host memcpy 'ping-pong' and fit alpha/beta (demonstrates the
     paper's parameter-measurement methodology end to end)."""
     import jax.numpy as jnp
     import jax
 
-    sizes = np.array([2**k for k in range(10, 22)])
+    sizes = np.array([2**k for k in range(10, 18 if smoke else 22)])
     med = []
     for s in sizes:
         x = jnp.zeros((int(s) // 4,), jnp.float32)
@@ -55,17 +55,19 @@ def host_pingpong_fit() -> None:
         def copy():
             jnp.array(x, copy=True).block_until_ready()
 
-        med.append(time_fn(copy, warmup=1, iters=5) * 1e-6)
+        med.append(time_fn(copy, warmup=1, iters=3 if smoke else 5) * 1e-6)
     alpha, beta = fit_postal(sizes, np.array(med))
     emit("fit/host_copy/alpha_us", alpha * 1e6, f"beta={beta:.3e}s_per_B "
          f"bw={1e-9/max(beta,1e-30):.2f}GB_s")
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     table_2_3_4()
-    host_pingpong_fit()
+    host_pingpong_fit(smoke=smoke)
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -42,9 +42,9 @@ def _time(fn, iters: int) -> float:
     return best
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
-    for npods, ppn in TOPOLOGIES:
+    for npods, ppn in TOPOLOGIES[:1] if smoke else TOPOLOGIES:
         topo = PodTopology(npods=npods, ppn=ppn)
         rng = np.random.default_rng(1)
         pat = exchange.random_pattern(
@@ -73,4 +73,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -26,6 +26,8 @@ ICI_LINKS_PER_CHIP = 4
 def load_records(mesh: str = "single") -> List[Dict]:
     d = os.path.join(ARTIFACTS, "dryrun")
     out = []
+    if not os.path.isdir(d):
+        return out
     for f in sorted(os.listdir(d)):
         if f.endswith(f"__{mesh}.json"):
             with open(os.path.join(d, f)) as fh:
@@ -54,7 +56,7 @@ def terms(rec: Dict) -> Dict[str, float]:
     }
 
 
-def main(mesh: str = "single") -> None:
+def main(mesh: str = "single", smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     recs = load_records(mesh)
     if not recs:
@@ -81,4 +83,5 @@ def main(mesh: str = "single") -> None:
 if __name__ == "__main__":
     import sys
 
-    main(sys.argv[1] if len(sys.argv) > 1 else "single")
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    main(args[0] if args else "single", smoke="--smoke" in sys.argv)

@@ -1,4 +1,5 @@
-"""Paper Figure 5.1: SpMV communication benchmark per strategy per matrix.
+"""Paper Figure 5.1: SpMV communication benchmark per strategy per matrix,
+plus the multi-vector SpMM k-sweep.
 
 Runs the distributed SpMV exchange for each synthetic SuiteSparse-analogue
 matrix under every strategy on an 8-host-device mesh (2 pods x 4), timing the
@@ -6,17 +7,30 @@ exchange and reporting wire bytes (intra/inter-pod) plus the advisor's pick.
 Absolute times are CPU-host numbers; the *ranking* and byte counts are the
 reproduction target (DESIGN.md section 10).
 
-Per strategy the CSV also reports the setup path this PR optimizes:
+Per strategy the CSV also reports the setup path PR 1 optimizes:
 
 * ``plan_ms``      -- cold planning+fusion wall time (plan cache cleared),
 * ``replan_ms``    -- the same construction again (plan/compile cache hit),
 * ``fused_us`` / ``unfused_us`` -- median exchange time with and without
   the stage-fusion rewrites.
+
+The k-sweep (``kswp`` rows) compares, for k in {1, 4, 16, 64} on a 32-rank
+(8 pods x 4) stencil pattern, the three multi-vector paths:
+
+* ``looped_us`` -- k independent exchanges + k local SpMVs
+  (:meth:`DistributedSpMV.matmat_looped`, the pre-SpMM behaviour),
+* ``fused_us``  -- ONE batched exchange + one blocked-ELL SpMM
+  (:meth:`DistributedSpMV.matmat`),
+* ``oracle_us`` -- the sequential numpy ``CSRMatrix.spmm`` oracle, which the
+  fused output is verified against before timing.
+
+``main(smoke=True)`` shrinks both sections (one matrix, 8 devices, k <= 4)
+so ``benchmarks/run.py --smoke`` can exercise the script in tier-1 tests.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, run_with_devices
+from benchmarks.common import run_with_devices
 
 CODE = """
 import time, numpy as np
@@ -33,6 +47,7 @@ def med_us(fn, iters=10):
     ts.sort()
     return ts[len(ts)//2] * 1e6
 
+ITERS = 3 if SMOKE else 10
 rng = np.random.default_rng(0)
 topo = PodTopology(npods=2, ppn=4)
 mats = {
@@ -40,10 +55,14 @@ mats = {
     "thermal_like": thermal_like(256, rng),
     "random_block": random_block(128, 0.05, rng),
 }
+if SMOKE:
+    mats = {"thermal_like": mats["thermal_like"]}
+strategies = ("standard", "two_step") if SMOKE else (
+    "standard", "two_step", "three_step", "split")
 for name, A in mats.items():
     v = rng.normal(size=(A.n,)).astype(np.float32)
     vr = v.reshape(topo.nranks, -1)
-    for strat in ("standard", "two_step", "three_step", "split"):
+    for strat in strategies:
         comm_strategies.clear_caches()
         t0 = time.perf_counter()
         sp = build(A, topo, strategy=strat, use_pallas=False)
@@ -52,10 +71,10 @@ for name, A in mats.items():
         build(A, topo, strategy=strat, use_pallas=False)
         replan_ms = (time.perf_counter() - t0) * 1e3
         out = sp(vr); out.block_until_ready()
-        fused_us = med_us(lambda: sp.exchange(vr).block_until_ready())
+        fused_us = med_us(lambda: sp.exchange(vr).block_until_ready(), ITERS)
         spu = build(A, topo, strategy=strat, use_pallas=False, fuse_program=False)
         spu(vr).block_until_ready()
-        unfused_us = med_us(lambda: spu.exchange(vr).block_until_ready())
+        unfused_us = med_us(lambda: spu.exchange(vr).block_until_ready(), ITERS)
         wi, we = sp.wire_bytes
         print(
             f"RESULT,fig5.1/{name}/{strat},{fused_us:.1f},"
@@ -67,14 +86,59 @@ for name, A in mats.items():
     print(f"RESULT,fig5.1/{name}/advisor,0.0,chose={adv.strategy}")
 """
 
+KSWEEP_CODE = """
+import time, numpy as np
+from repro.comm.topology import PodTopology
+from repro.core import advise
+from repro.sparse import thermal_like, build
 
-def main() -> None:
+def med_us(fn, iters):
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter(); fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts)//2] * 1e6
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2 if SMOKE else 8, ppn=4)
+A = thermal_like(256 if SMOKE else 1024, rng)
+ks = (1, 4) if SMOKE else (1, 4, 16, 64)
+iters = 3 if SMOKE else 5
+sp = build(A, topo, strategy="two_step", use_pallas=False)
+for k in ks:
+    V = rng.normal(size=(A.n, k)).astype(np.float32)
+    Vr = V.reshape(topo.nranks, -1, k)
+    out = np.asarray(sp.matmat(Vr)).reshape(A.n, k)
+    want = A.spmm(V)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+    fused_us = med_us(lambda: sp.matmat(Vr).block_until_ready(), iters)
+    looped_us = med_us(lambda: sp.matmat_looped(Vr).block_until_ready(), iters)
+    t0 = time.perf_counter(); A.spmm(V)
+    oracle_us = (time.perf_counter() - t0) * 1e6
+    adv = advise(sp.partition.pattern.to_comm_pattern(), machine="tpu_v5e_pod",
+                 payload_width=k)
+    print(
+        f"RESULT,kswp/{topo.nranks}r/k{k},{fused_us:.1f},"
+        f"looped_us={looped_us:.1f} fused_us={fused_us:.1f} "
+        f"oracle_us={oracle_us:.1f} speedup={looped_us/fused_us:.2f}x "
+        f"advised={adv.best.key} parity=ok"
+    )
+"""
+
+
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
-    out = run_with_devices(CODE, devices=8)
-    for line in out.splitlines():
-        if line.startswith("RESULT,"):
-            print(line[len("RESULT,"):])
+    prefix = f"SMOKE = {smoke!r}\n"
+    for code, devices in ((CODE, 8), (KSWEEP_CODE, 8 if smoke else 32)):
+        out = run_with_devices(prefix + code, devices=devices)
+        for line in out.splitlines():
+            if line.startswith("RESULT,"):
+                print(line[len("RESULT,"):])
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

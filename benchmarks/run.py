@@ -2,15 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run params     # one section
+    PYTHONPATH=src python -m benchmarks.run --smoke    # cheap smoke pass
 
 Sections:
   params      -- paper Tables 2/3/4 (+ least-squares fit demo)
   modeled     -- paper Figure 4.3 (strategy predictions)
   validation  -- paper Figure 4.2 (model vs measured SpMV exchange)
-  spmv        -- paper Figure 5.1 (SpMV strategies on 8 host devices)
+  spmv        -- paper Figure 5.1 (SpMV strategies) + SpMM k-sweep
   planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
+
+``--smoke`` runs every requested section in a reduced configuration (fewer
+matrices/iterations/devices).  It exists so a tier-1 test can execute the
+benchmark scripts end to end and catch rot; absolute numbers from a smoke
+pass are meaningless.
 """
 
 from __future__ import annotations
@@ -39,12 +45,14 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
     }
-    wanted = sys.argv[1:] or list(sections)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    wanted = [a for a in args if not a.startswith("--")] or list(sections)
     failures = []
     for name in wanted:
         print(f"\n### section: {name}")
         try:
-            sections[name]()
+            sections[name](smoke=smoke)
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()

@@ -29,6 +29,7 @@ from repro.comm.strategies import (
     cache_stats,
     clear_caches,
     planned,
+    register_cache,
 )
 from repro.comm.hierarchical import (
     all_gather_hierarchical,
@@ -66,6 +67,7 @@ __all__ = [
     "cache_stats",
     "clear_caches",
     "planned",
+    "register_cache",
     "all_gather_hierarchical",
     "all_to_all_hierarchical",
     "init_residuals",

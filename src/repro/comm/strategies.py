@@ -191,27 +191,43 @@ class CacheStats:
     plan_misses: int = 0
     exec_hits: int = 0
     exec_misses: int = 0
+    #: local-compute compile cache (repro.sparse.spmv SpMV/SpMM programs,
+    #: keyed by (pattern fingerprint, payload width k, ...))
+    compute_hits: int = 0
+    compute_misses: int = 0
 
 
 _stats = CacheStats()
 _PLAN_CACHE: "OrderedDict[tuple, StagePlan]" = OrderedDict()
 _EXEC_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _MESH_CACHE: "OrderedDict[tuple, jax.sharding.Mesh]" = OrderedDict()
+#: external LRUs (e.g. the SpMM compute cache) reset by clear_caches()
+_EXTERNAL_CACHES: List[OrderedDict] = []
 PLAN_CACHE_MAX = 256
 EXEC_CACHE_MAX = 64
 
 
 def cache_stats() -> CacheStats:
-    """Snapshot of plan/executor cache hit counters."""
+    """Snapshot of plan/executor/compute cache hit counters."""
     return dataclasses.replace(_stats)
+
+
+def register_cache(cache: OrderedDict) -> None:
+    """Register an external LRU so :func:`clear_caches` resets it too."""
+    # identity, not equality: two distinct empty OrderedDicts compare ==
+    if not any(c is cache for c in _EXTERNAL_CACHES):
+        _EXTERNAL_CACHES.append(cache)
 
 
 def clear_caches() -> None:
     _PLAN_CACHE.clear()
     _EXEC_CACHE.clear()
     _MESH_CACHE.clear()
+    for cache in _EXTERNAL_CACHES:
+        cache.clear()
     _stats.plan_hits = _stats.plan_misses = 0
     _stats.exec_hits = _stats.exec_misses = 0
+    _stats.compute_hits = _stats.compute_misses = 0
 
 
 def _lru_get(cache: OrderedDict, key, max_size: int, build):
@@ -223,6 +239,17 @@ def _lru_get(cache: OrderedDict, key, max_size: int, build):
     while len(cache) > max_size:
         cache.popitem(last=False)
     return val, False
+
+
+def compute_cached(cache: OrderedDict, key, max_size: int, build):
+    """LRU get for a registered local-compute compile cache, with the hit /
+    miss accounted under ``compute_hits`` / ``compute_misses``."""
+    val, hit = _lru_get(cache, key, max_size, build)
+    if hit:
+        _stats.compute_hits += 1
+    else:
+        _stats.compute_misses += 1
+    return val
 
 
 def _plan_key(

@@ -64,14 +64,22 @@ def advise_stats(
     include_two_step_one: bool = False,
     duplicate_fraction: float = 0.0,
     exclude: Sequence[Tuple[Strategy, Transport]] = (),
+    payload_width: int = 1,
 ) -> Advice:
     """Rank strategies for raw Table 7 stats.
 
     ``duplicate_fraction`` models §4.6's duplicate-data removal: node-aware
     strategies eliminate that fraction of the standard data volume, standard
     communication does not.
+
+    ``payload_width`` is the batched payload column count ``k`` (multi-vector
+    SpMM): byte terms scale by ``k`` while message counts stay fixed (see
+    :meth:`~repro.core.perfmodel.PatternStats.widened`), which is what lets
+    the ranking flip between message-count-bound and bandwidth-bound winners
+    as ``k`` grows.
     """
     m = get_machine(machine) if isinstance(machine, str) else machine
+    stats = stats.widened(payload_width)
     keep = 1.0 - duplicate_fraction
     preds = {}
     for (strategy, transport), t in predict_all(
@@ -96,11 +104,17 @@ def advise(
     machine: MachineParams | str = "tpu_v5e_pod",
     include_two_step_one: bool = False,
     duplicate_fraction: float = 0.0,
+    payload_width: int = 1,
 ) -> Advice:
-    """Rank strategies for a concrete communication pattern."""
+    """Rank strategies for a concrete communication pattern.
+
+    ``payload_width`` is the batched-payload column count ``k`` (see
+    :func:`advise_stats`).
+    """
     return advise_stats(
         pattern.stats(),
         machine=machine,
         include_two_step_one=include_two_step_one,
         duplicate_fraction=duplicate_fraction,
+        payload_width=payload_width,
     )

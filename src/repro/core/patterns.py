@@ -75,6 +75,11 @@ class CommPattern:
 
         All parameters are worst-case ("max over ...") as in the paper, since
         the measured quantity is the max time over any single process.
+
+        Byte terms are per element; for batched ``k``-column payloads widen
+        the result via :meth:`~repro.core.perfmodel.PatternStats.widened`
+        (or pass ``payload_width`` to the advisor, the single widening entry
+        point -- widening both here and there would scale bytes by ``k**2``).
         """
         bytes_by_src: Dict[int, int] = defaultdict(int)
         msgs_by_src: Dict[int, int] = defaultdict(int)

@@ -90,6 +90,23 @@ class PatternStats:
             s_node_node=self.s_node_node * keep,
         )
 
+    def widened(self, payload_width: int) -> "PatternStats":
+        """Byte terms for a batched payload of ``payload_width`` columns.
+
+        A batched exchange ships ``k`` feature columns per element under one
+        plan (multi-vector SpMM, batched serving), so every byte volume grows
+        ``k``-fold while the message counts stay fixed: the per-message
+        ``alpha`` terms amortize across columns and the models slide from the
+        message-count-bound regime toward the bandwidth-bound regime as ``k``
+        grows (Bienz et al.; the heterogeneous-communication survey's batched
+        payload lever).
+        """
+        if payload_width < 1:
+            raise ValueError(f"payload_width must be >= 1, got {payload_width}")
+        if payload_width == 1:
+            return self
+        return self.scaled(float(payload_width))
+
 
 # ---------------------------------------------------------------------------
 # Primitive models

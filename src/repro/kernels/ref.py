@@ -16,6 +16,15 @@ def spmv_ell(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarra
     return (data * x[cols]).sum(axis=-1)
 
 
+def spmm_ell(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """``W[i, c] = sum_k data[i,k] * x[cols[i,k], c]`` for ``x: [N, C]``.
+
+    Reduction runs over axis 1 in the same order as :func:`spmv_ell`, so a
+    single-column ``x`` reproduces the SpMV result exactly.
+    """
+    return (data[..., None] * x[cols]).sum(axis=1)
+
+
 def attention(
     q: jnp.ndarray,
     k: jnp.ndarray,

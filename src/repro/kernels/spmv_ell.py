@@ -1,8 +1,11 @@
-"""Blocked-ELL SpMV Pallas kernel for TPU.
+"""Blocked-ELL SpMV / SpMM Pallas kernels for TPU.
 
-Computes ``w[i] = sum_k data[i, k] * x[cols[i, k]]`` for an ELL-padded sparse
-block (the local on-rank / off-rank SpMV of the paper's distributed SpMV,
-§2.4).
+:func:`spmv_ell` computes ``w[i] = sum_k data[i, k] * x[cols[i, k]]`` for an
+ELL-padded sparse block (the local on-rank / off-rank SpMV of the paper's
+distributed SpMV, §2.4); :func:`spmm_ell` is its multi-vector generalization
+``W[i, c] = sum_k data[i, k] * X[cols[i, k], c]`` for a ``[N, C]`` right-hand
+side (the fused local compute paired with the batched ``[nranks, L, k]``
+halo exchange).
 
 TPU adaptation (vs. a CUDA CSR kernel):
 
@@ -16,6 +19,25 @@ TPU adaptation (vs. a CUDA CSR kernel):
   gather-then-reduce kernel instead).
 * The inner gather uses ``jnp.take`` which lowers to Mosaic's dynamic-gather;
   K is padded to a multiple of 128 so the multiply-accumulate is lane-aligned.
+
+SpMM column-tiling design (why a second grid axis instead of a wider SpMV):
+
+* The grid is ``row tiles x column tiles`` of the rhs: step ``(i, c)``
+  gathers ``X[cols, c-tile]`` and contracts ``[TILE_R, K] @ gather`` into one
+  ``[TILE_R, TILE_C]`` output tile.  ``TILE_C = 128`` makes every rhs tile
+  exactly one lane tile wide, so each gathered row of ``X`` is a full vreg
+  row and the broadcast-multiply-reduce stays lane-aligned for any ``k``.
+* ``TILE_R`` shrinks from 256 (SpMV) to 64: the gathered operand is now
+  ``[TILE_R, K, TILE_C]`` rather than ``[TILE_R, K]``, and the VMEM budget
+  that held one row-tile's vector gather must hold a full lane tile per
+  matrix slot (64 x 128 x 128 x 4B = 4 MiB at K = 128).
+* Column tiles are *independent grid steps*, not an inner loop: the same
+  ``data``/``cols`` row tile is re-streamed once per column tile instead of
+  keeping a ``[TILE_R, k]`` accumulator live across the sweep.  That bounds
+  VMEM independently of ``k`` (k = 64 costs the ELL block being re-read
+  ``ceil(k/128)`` times, i.e. once) and keeps the k = 1 path numerically
+  identical to :func:`spmv_ell`: same ``K`` padding, same reduction order,
+  one degenerate column tile.
 """
 
 from __future__ import annotations
@@ -26,7 +48,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE_R = 256  # rows per grid step
+TILE_R = 256  # rows per SpMV grid step
+TILE_R_MM = 64  # rows per SpMM grid step (gather working set is TILE_C x wider)
+TILE_C = 128  # rhs columns per SpMM grid step = one lane tile
 LANE = 128  # TPU lane width
 
 
@@ -36,6 +60,16 @@ def _spmv_ell_kernel(data_ref, cols_ref, x_ref, out_ref):
     x = x_ref[...]  # [N]
     gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
     out_ref[...] = (data * gathered).sum(axis=1)
+
+
+def _spmm_ell_kernel(data_ref, cols_ref, x_ref, out_ref):
+    data = data_ref[...]  # [TILE_R_MM, K]
+    cols = cols_ref[...]  # [TILE_R_MM, K]
+    x = x_ref[...]  # [N, TILE_C]
+    gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(
+        cols.shape + (x.shape[-1],)
+    )  # [TILE_R_MM, K, TILE_C]
+    out_ref[...] = (data[..., None] * gathered).sum(axis=1)
 
 
 def _pad_to(a: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
@@ -74,3 +108,34 @@ def spmv_ell(
         interpret=interpret,
     )(data_p, cols_p, x_p)
     return out[:R]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmm_ell(
+    data: jnp.ndarray,
+    cols: jnp.ndarray,
+    x: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``W = A @ X`` for an ELL block. data/cols: [R, K]; x: [N, C] -> [R, C]."""
+    R, K = data.shape
+    N, C = x.shape
+    data_p = _pad_to(_pad_to(data, LANE, 1), TILE_R_MM, 0)
+    cols_p = _pad_to(_pad_to(cols, LANE, 1), TILE_R_MM, 0)
+    x_p = _pad_to(_pad_to(x, TILE_C, 1), 8, 0)
+    Rp, Kp = data_p.shape
+    Np, Cp = x_p.shape
+    grid = (Rp // TILE_R_MM, Cp // TILE_C)
+    out = pl.pallas_call(
+        _spmm_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R_MM, Kp), lambda i, c: (i, 0)),
+            pl.BlockSpec((TILE_R_MM, Kp), lambda i, c: (i, 0)),
+            pl.BlockSpec((Np, TILE_C), lambda i, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R_MM, TILE_C), lambda i, c: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Cp), data.dtype),
+        interpret=interpret,
+    )(data_p, cols_p, x_p)
+    return out[:R, :C]

@@ -9,7 +9,7 @@ from repro.sparse.matrices import (
     thermal_like,
 )
 from repro.sparse.partition import EllBlock, SpmvPartition, partition_csr
-from repro.sparse.spmv import DistributedSpMV, build, reference
+from repro.sparse.spmv import DistributedSpMV, build, reference, reference_mm
 
 __all__ = [
     "GENERATORS",
@@ -24,4 +24,5 @@ __all__ = [
     "DistributedSpMV",
     "build",
     "reference",
+    "reference_mm",
 ]

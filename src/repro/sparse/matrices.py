@@ -54,6 +54,14 @@ class CSRMatrix:
             out[i] = (vals * v[cols]).sum()
         return out
 
+    def spmm(self, V: np.ndarray) -> np.ndarray:
+        """Reference sequential SpMM for a ``[n, k]`` right-hand side."""
+        out = np.zeros((self.n, V.shape[1]), dtype=np.result_type(self.data, V))
+        for i in range(self.n):
+            cols, vals = self.row(i)
+            out[i] = vals @ V[cols]
+        return out
+
 
 def _from_coo(n: int, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray) -> CSRMatrix:
     order = np.lexsort((cols, rows))

@@ -1,4 +1,4 @@
-"""Distributed SpMV with pluggable node-aware communication (paper §2.4, §5).
+"""Distributed SpMV/SpMM with pluggable node-aware communication (paper §2.4, §5).
 
 ``A`` is row-partitioned over the mesh; each step is
 
@@ -7,13 +7,26 @@
 
 The exchange is an :class:`repro.comm.strategies.IrregularExchange` planned by
 the selected strategy; ``strategy="auto"`` asks the model-driven advisor
-(paper §4.6) to pick.  The local SpMV runs the Pallas blocked-ELL kernel
-(interpret mode on CPU) or its jnp oracle.
+(paper §4.6) to pick, with ``payload_width`` feeding the advisor's batched
+byte terms.  The local compute runs the Pallas blocked-ELL kernels
+(interpret mode on CPU) or their jnp oracles.
+
+Multi-vector products (``V: [nranks, L, k]``) are first-class: one exchange
+moves all ``k`` columns under the single cached plan and one fused blocked-ELL
+SpMM replaces the per-column Python loop (:meth:`DistributedSpMV.matmat`).
+
+The local-compute programs are compiled once per
+``(pattern fingerprint, payload width k, kernel flavor, mesh)`` into a
+module-level LRU shared with the exchange plan/executor caches -- inspect via
+``repro.comm.cache_stats()`` (``compute_hits`` / ``compute_misses``): distinct
+``k`` widths get distinct compile entries while the exchange keeps exactly one
+plan entry per pattern fingerprint.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Optional, Tuple
 
 import jax
@@ -21,12 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import strategies as comm_strategies
 from repro.comm.strategies import IrregularExchange
 from repro.compat import shard_map
 from repro.comm.topology import WORLD_AXES, PodTopology, make_exchange_mesh
 from repro.core.advisor import advise
 from repro.core.perfmodel import Strategy, Transport
 from repro.kernels import ref as kref
+from repro.kernels.spmv_ell import spmm_ell as spmm_ell_kernel
 from repro.kernels.spmv_ell import spmv_ell as spmv_ell_kernel
 from repro.sparse.matrices import CSRMatrix
 from repro.sparse.partition import SpmvPartition, partition_csr
@@ -41,10 +56,76 @@ _ADVISED = {
     Strategy.SPLIT_DD: "split",
 }
 
+# ---------------------------------------------------------------------------
+# Local-compute compile cache
+# ---------------------------------------------------------------------------
+
+#: jitted local-compute programs keyed by
+#: ``(pattern fingerprint, width, use_pallas, mesh)`` where ``width`` is the
+#: payload column count ``k`` (``None`` = the unbatched SpMV program).  One
+#: entry per (fingerprint, k): repeated construction / repeated ``matmat(k)``
+#: calls reuse the jitted program, and new widths never evict the exchange's
+#: single per-fingerprint plan entry.
+_COMPUTE_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+COMPUTE_CACHE_MAX = 64
+comm_strategies.register_cache(_COMPUTE_CACHE)
+
+
+def _compute_program(
+    fingerprint: str,
+    mesh: jax.sharding.Mesh,
+    use_pallas: bool,
+    width: Optional[int],
+):
+    """Build (or fetch) the jitted shard_map local-compute program.
+
+    ``width=None`` is the vector program (``v: [nranks, L]``); ``width=k``
+    is the fused SpMM program (``V: [nranks, L, k]``).
+    """
+    key = (fingerprint, width, use_pallas, comm_strategies._mesh_key(mesh))
+
+    def build():
+        if width is None:
+            def local(data, cols, x):
+                if use_pallas:
+                    return spmv_ell_kernel(data, cols, x, interpret=True)
+                return kref.spmv_ell(data, cols, x)
+        else:
+            def local(data, cols, x):
+                if use_pallas:
+                    return spmm_ell_kernel(data, cols, x, interpret=True)
+                return kref.spmm_ell(data, cols, x)
+
+        def compute(v_local, halo, dd, dc, od, oc):
+            # leading rank dim is 1 inside shard_map
+            v_local, halo = v_local[0], halo[0]
+            w = local(dd[0], dc[0], v_local) + local(od[0], oc[0], halo)
+            return w[None]
+
+        return jax.jit(
+            shard_map(
+                compute,
+                mesh=mesh,
+                in_specs=(P(WORLD_AXES),) * 6,
+                out_specs=P(WORLD_AXES),
+                check_vma=False,  # pallas_call does not yet annotate vma
+            )
+        )
+
+    return comm_strategies.compute_cached(
+        _COMPUTE_CACHE, key, COMPUTE_CACHE_MAX, build
+    )
+
 
 @dataclasses.dataclass
 class DistributedSpMV:
-    """A compiled distributed SpMV for one matrix, topology and strategy."""
+    """A compiled distributed SpMV/SpMM for one matrix, topology and strategy.
+
+    ``payload_width`` is the expected multi-vector column count ``k`` fed to
+    the advisor when ``strategy="auto"`` -- larger widths amortize per-message
+    latency and can flip the advised strategy into the bandwidth-bound regime.
+    Any width can still be executed regardless of the advised-time value.
+    """
 
     partition: SpmvPartition
     strategy: str = "auto"
@@ -52,12 +133,15 @@ class DistributedSpMV:
     use_pallas: bool = True
     mesh: Optional[jax.sharding.Mesh] = None
     fuse_program: bool = True
+    payload_width: int = 1
 
     def __post_init__(self) -> None:
         topo = self.partition.topo
         if self.strategy == "auto":
             advice = advise(
-                self.partition.pattern.to_comm_pattern(), machine="tpu_v5e_pod"
+                self.partition.pattern.to_comm_pattern(),
+                machine="tpu_v5e_pod",
+                payload_width=self.payload_width,
             )
             self.advice = advice
             self.strategy = _ADVISED[advice.best.strategy]
@@ -65,10 +149,10 @@ class DistributedSpMV:
             self.advice = None
         if self.mesh is None:
             self.mesh = make_exchange_mesh(topo)
-        # The exchange's plan + jitted executor come from the module-level
-        # caches in repro.comm.strategies, so rebuilding for the same matrix
-        # partition skips planning and the exchange jit.  The local-SpMV
-        # _compute below is still re-jitted per construction.
+        # The exchange's plan + jitted executor and the local-compute programs
+        # all come from module-level caches (repro.comm.strategies plus
+        # _COMPUTE_CACHE above), so rebuilding for the same matrix partition
+        # skips planning and every jit.
         self.exchange = IrregularExchange(
             self.partition.pattern,
             self.strategy,
@@ -78,40 +162,60 @@ class DistributedSpMV:
         )
         L = self.partition.rows_per_rank
         g = topo.nranks
-        use_pallas = self.use_pallas
 
         diag_d = jnp.asarray(self.partition.diag.data.reshape(g, L, -1))
         diag_c = jnp.asarray(self.partition.diag.cols.reshape(g, L, -1))
         off_d = jnp.asarray(self.partition.off.data.reshape(g, L, -1))
         off_c = jnp.asarray(self.partition.off.cols.reshape(g, L, -1))
 
-        def local_spmv(data, cols, x):
-            if use_pallas:
-                return spmv_ell_kernel(data, cols, x, interpret=True)
-            return kref.spmv_ell(data, cols, x)
-
-        def compute(v_local, halo, dd, dc, od, oc):
-            # leading rank dim is 1 inside shard_map
-            v_local, halo = v_local[0], halo[0]
-            w = local_spmv(dd[0], dc[0], v_local) + local_spmv(od[0], oc[0], halo)
-            return w[None]
-
-        self._compute = jax.jit(
-            shard_map(
-                compute,
-                mesh=self.mesh,
-                in_specs=(P(WORLD_AXES),) * 6,
-                out_specs=P(WORLD_AXES),
-                check_vma=False,  # pallas_call does not yet annotate vma
-            )
+        self._fingerprint = self.partition.pattern.fingerprint()
+        self._compute = _compute_program(
+            self._fingerprint, self.mesh, self.use_pallas, None
         )
         self._blocks = (diag_d, diag_c, off_d, off_c)
+        # per-instance memo over the module LRU: matmat's hot path must not
+        # re-derive the (fingerprint, k, mesh) key per call
+        self._mm_programs: dict = {}
 
     # ------------------------------------------------------------------
     def __call__(self, v: jax.Array) -> jax.Array:
-        """``v [nranks, L] -> w [nranks, L]``."""
+        """``v [nranks, L] -> w [nranks, L]``; a trailing feature dim
+        (``[nranks, L, k]``) dispatches to :meth:`matmat`."""
+        if v.ndim == 3:
+            return self.matmat(v)
         halo = self.exchange(v)
         return self._compute(v, halo, *self._blocks)
+
+    def matmat(self, V: jax.Array) -> jax.Array:
+        """``V [nranks, L, k] -> W [nranks, L, k]`` under ONE exchange.
+
+        All ``k`` columns ride the single cached plan
+        (:meth:`repro.comm.strategies.IrregularExchange.__call__`) and the
+        local compute is one fused blocked-ELL SpMM per block -- no Python
+        loop over columns.  The compiled program is cached per
+        ``(pattern fingerprint, k)``.
+        """
+        if V.ndim != 3:
+            raise ValueError(f"matmat expects [nranks, L, k], got {tuple(V.shape)}")
+        halo = self.exchange(V)
+        k = int(V.shape[2])
+        fn = self._mm_programs.get(k)
+        if fn is None:
+            fn = self._mm_programs[k] = _compute_program(
+                self._fingerprint, self.mesh, self.use_pallas, k
+            )
+        return fn(V, halo, *self._blocks)
+
+    def matmat_looped(self, V: jax.Array) -> jax.Array:
+        """Per-column baseline: ``k`` exchanges + ``k`` local SpMVs.
+
+        Kept as the comparison path for benchmarks/tests; :meth:`matmat` is
+        the serving path.
+        """
+        if V.ndim != 3:
+            raise ValueError(f"matmat_looped expects [nranks, L, k], got {tuple(V.shape)}")
+        cols = [self(V[:, :, c]) for c in range(V.shape[2])]
+        return jnp.stack(cols, axis=-1)
 
     def halo(self, v: jax.Array) -> jax.Array:
         """Exchange-only entry point.
@@ -140,3 +244,8 @@ def build(
 def reference(matrix: CSRMatrix, v_flat: np.ndarray) -> np.ndarray:
     """Sequential oracle on the unpartitioned matrix."""
     return matrix.spmv(v_flat)
+
+
+def reference_mm(matrix: CSRMatrix, V_flat: np.ndarray) -> np.ndarray:
+    """Sequential multi-vector oracle on the unpartitioned matrix."""
+    return matrix.spmm(V_flat)

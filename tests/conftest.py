@@ -7,7 +7,9 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: multi-device subprocess tests (run by default)"
+        "markers",
+        "slow: multi-device subprocess tests and interpret-mode Pallas sweeps "
+        "(run by default; deselect with -m 'not slow' for a quick pass)",
     )
 
 

@@ -1,0 +1,120 @@
+"""Advisor regression pins: payload-width-aware strategy crossovers.
+
+The table below locks in the advised (strategy, transport) for a grid of
+(pattern, machine, payload width k) cases so the k-aware byte terms can't
+silently drift.  The rows were chosen so that several patterns *flip* winner
+as k grows -- the message-count-bound -> bandwidth-bound transition the
+batched SpMM path exists to exploit.
+"""
+
+import pytest
+
+from repro.core import advise, advise_stats, figure43_pattern
+
+#: (machine, (msg bytes, inter-node msgs, dest nodes), k) -> advised key.
+#: Recorded from the models at pin time; a change here is a deliberate
+#: model change, not noise -- update only with a perfmodel/advisor PR.
+PINS = [
+    # lassen: moderate messages -- 2-Step's per-proc-to-node messages win at
+    # k=1; at k>=16 the on-node redistribute amortizes and 3-Step's single
+    # deduped node-node message wins.
+    ("lassen", (2048, 256, 16), 1, "two_step/device_aware"),
+    ("lassen", (2048, 256, 16), 4, "two_step/device_aware"),
+    ("lassen", (2048, 256, 16), 16, "three_step/device_aware"),
+    ("lassen", (2048, 256, 16), 64, "three_step/device_aware"),
+    # lassen: small messages, few nodes -- standard until the widened bytes
+    # make node-aware dedup worthwhile.
+    ("lassen", (512, 64, 4), 1, "standard/staged_host"),
+    ("lassen", (512, 64, 4), 64, "two_step/device_aware"),
+    ("lassen", (8192, 64, 16), 1, "standard/staged_host"),
+    ("lassen", (8192, 64, 16), 4, "three_step/device_aware"),
+    # tpu: rendezvous-size messages flip from standard to Split as k scales
+    # bytes past the pod-egress knee.
+    ("tpu_v5e_pod", (65536, 32, 4), 1, "standard/staged_host"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, "split_dd/staged_host"),
+    ("tpu_v5e_pod", (2048, 32, 4), 1, "standard/staged_host"),
+    ("tpu_v5e_pod", (2048, 32, 4), 64, "split_dd/staged_host"),
+    # no-flip pins: tiny pattern stays latency-bound at every width
+    ("tpu_v5e_pod", (256, 32, 4), 1, "standard/staged_host"),
+    ("tpu_v5e_pod", (256, 32, 4), 64, "standard/staged_host"),
+]
+
+
+@pytest.mark.parametrize("machine,scenario,k,expected", PINS)
+def test_advised_strategy_pinned(machine, scenario, k, expected):
+    size, nmsgs, nodes = scenario
+    pat = figure43_pattern(size, nmsgs, nodes)
+    adv = advise(pat, machine=machine, payload_width=k)
+    assert adv.best.key == expected, (
+        f"advisor drift for {machine}/{scenario}/k={k}: "
+        f"got {adv.best.key}, pinned {expected}"
+    )
+
+
+def test_payload_width_flips_exist():
+    """At least one pinned pattern must flip winner across k (the whole point
+    of the payload-width terms); guards against a degenerate widened()."""
+    flips = 0
+    seen = {}
+    for machine, scenario, k, expected in PINS:
+        prev = seen.setdefault((machine, scenario), expected)
+        if prev != expected:
+            flips += 1
+    assert flips >= 3
+
+
+# ---------------------------------------------------------------------------
+# widened() invariants
+# ---------------------------------------------------------------------------
+
+
+def _stats():
+    return figure43_pattern(1024, 64, 8).stats()
+
+
+def test_widened_scales_bytes_not_messages():
+    s = _stats()
+    w = s.widened(8)
+    assert (w.s_proc, w.s_node, w.s_node_node) == (
+        8 * s.s_proc,
+        8 * s.s_node,
+        8 * s.s_node_node,
+    )
+    assert (w.m_proc, w.m_proc_node, w.m_node_node, w.num_dest_nodes) == (
+        s.m_proc,
+        s.m_proc_node,
+        s.m_node_node,
+        s.num_dest_nodes,
+    )
+
+
+def test_widened_identity_and_validation():
+    s = _stats()
+    assert s.widened(1) is s
+    with pytest.raises(ValueError):
+        s.widened(0)
+
+
+def test_pattern_stats_widened_composes():
+    pat = figure43_pattern(1024, 64, 8)
+    assert pat.stats().widened(4) == pat.stats().widened(2).widened(2)
+
+
+def test_advise_stats_payload_width_equals_prewidened():
+    s = _stats()
+    a = advise_stats(s, machine="lassen", payload_width=16)
+    b = advise_stats(s.widened(16), machine="lassen")
+    assert [r.key for r in a.ranked] == [r.key for r in b.ranked]
+    for ra, rb in zip(a.ranked, b.ranked):
+        assert ra.predicted_time == pytest.approx(rb.predicted_time)
+
+
+def test_predictions_monotone_in_payload_width():
+    """Wider payloads can only cost more time for every modeled pair."""
+    s = _stats()
+    base = advise_stats(s, machine="lassen", include_two_step_one=True)
+    wide = advise_stats(
+        s, machine="lassen", include_two_step_one=True, payload_width=32
+    )
+    for r in base.ranked:
+        assert wide.time_for(r.strategy, r.transport) >= r.predicted_time * 0.999

@@ -1,0 +1,58 @@
+"""Tier-1 guard for the benchmark scripts: ``benchmarks/run.py --smoke``.
+
+Benchmark code is not imported by the library, so without this test it can
+rot silently (stale imports, renamed APIs).  The smoke pass runs every
+section in a reduced configuration and this test asserts the run succeeds
+and that the load-bearing rows -- including the SpMM k-sweep with its
+fused-beats-looped claim -- are present.
+"""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.mark.slow
+def test_benchmarks_run_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # sections spawn their own device subprocesses
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        cwd=REPO,
+        env=env,
+    )
+    assert proc.returncode == 0, (
+        f"--smoke failed (rc={proc.returncode})\n--- stdout ---\n"
+        f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}"
+    )
+    out = proc.stdout
+    for marker in (
+        "table2/lassen/",  # params
+        "fig4.3/",  # modeled
+        "payload_width/k64",  # modeled: k sweep
+        "fig4.2/audikw_like/",  # validation
+        "fig5.1/thermal_like/",  # spmv
+        "kswp/8r/k4",  # spmv: SpMM k-sweep (smoke topology)
+        "planning/8r/",  # planning
+        "kernel/spmm_ell/interpret/k4",  # kernels
+    ):
+        assert marker in out, f"missing benchmark row {marker!r}\n{out[-4000:]}"
+
+    # the k-sweep's acceptance property in miniature: by k=4 the fused SpMM
+    # path must beat k independent exchange+SpMV rounds (the margin is ~k on
+    # the exchange count, so this is timing-noise safe)
+    m = re.search(r"kswp/8r/k4,.*looped_us=([0-9.]+) fused_us=([0-9.]+)", out)
+    assert m, f"k-sweep row unparsable\n{out[-2000:]}"
+    looped, fused = float(m.group(1)), float(m.group(2))
+    assert fused < looped, f"fused SpMM ({fused}us) not beating looped ({looped}us)"
+    assert "parity=ok" in out

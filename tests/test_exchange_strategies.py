@@ -9,7 +9,8 @@ try:
 except ImportError:  # CI image has no hypothesis; use the vendored shim
     from repro.testing.hypo import given, settings, st
 
-from repro.comm.exchange import plan, random_pattern, simulate
+from repro.comm.exchange import execute_numpy, plan, random_pattern, simulate
+from repro.comm.fusion import fuse
 from repro.comm.topology import PodTopology
 
 
@@ -49,6 +50,30 @@ def test_node_aware_reduces_inter_pod_bytes(seed):
     for s in ("two_step", "three_step", "split"):
         nodeaware = plan(s, pat, message_cap_bytes=64)
         assert nodeaware.inter_pod_bytes <= std.inter_pod_bytes
+
+
+@given(
+    seed=st.integers(0, 300),
+    strategy=st.sampled_from(["standard", "two_step", "three_step", "split"]),
+    k=st.sampled_from([2, 3, 5]),
+    fused=st.sampled_from([False, True]),
+)
+@settings(max_examples=30, deadline=None)
+def test_batched_exchange_equals_stacked_columns(seed, strategy, k, fused):
+    """A batched [nranks, L, k] payload through one plan must equal k stacked
+    k=1 exchanges column-for-column (fused and unfused programs)."""
+    rng = np.random.default_rng(seed)
+    topo = PodTopology(npods=2, ppn=2)
+    pat = random_pattern(rng, topo, local_size=5, p_connect=0.5, max_elems=3)
+    sp = plan(strategy, pat, message_cap_bytes=48)
+    if fused:
+        sp = fuse(sp)
+    local = rng.normal(size=(topo.nranks, 5, k)).astype(np.float32)
+    batched = execute_numpy(sp, local)
+    for c in range(k):
+        single = execute_numpy(sp, local[:, :, c])
+        np.testing.assert_array_equal(batched[:, :, c], single)
+    np.testing.assert_array_equal(batched[:, : pat.max_recv_size()], pat.reference(local))
 
 
 def test_three_step_single_message_per_pod_pair():
@@ -93,11 +118,20 @@ for trial in range(2):
         # unfused program delivers the same bits through real collectives
         exu = IrregularExchange(pat, strat, message_cap_bytes=32, fuse_program=False)
         np.testing.assert_array_equal(np.asarray(exu(local)), out)
-    # batched payload [nranks, L, k] under the same plan
+    # batched payload [nranks, L, k]: one plan, k columns, every strategy,
+    # fused and unfused -- must equal k stacked k=1 calls column-for-column
     loc3 = rng.normal(size=(topo.nranks, 7, 3)).astype(np.float32)
     ref3 = pat.reference(loc3)
-    ex = IrregularExchange(pat, "two_step", message_cap_bytes=32)
-    np.testing.assert_array_equal(np.asarray(ex(loc3))[:, :H], ref3[:, :H])
+    for strat in STRATEGY_NAMES:
+        for fused in (True, False):
+            ex = IrregularExchange(pat, strat, message_cap_bytes=32,
+                                   fuse_program=fused)
+            got = np.asarray(ex(loc3))
+            np.testing.assert_array_equal(got[:, :H], ref3[:, :H])
+            for c in range(3):
+                np.testing.assert_array_equal(
+                    got[:, :, c], np.asarray(ex(loc3[:, :, c]))
+                )
 print("OK")
 """,
         devices=8,

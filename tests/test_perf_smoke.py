@@ -56,6 +56,106 @@ def test_plan_cache_hits_on_second_use():
     comm_strategies.clear_caches()
 
 
+def test_plan_cache_eviction_under_many_fingerprints(monkeypatch):
+    """The plan LRU must cap at PLAN_CACHE_MAX, evict oldest-first, and keep
+    hot entries resident."""
+    rng = np.random.default_rng(7)
+    topo = PodTopology(npods=2, ppn=2)
+    pats = [
+        random_pattern(rng, topo, local_size=4, p_connect=0.6, max_elems=2)
+        for _ in range(5)
+    ]
+    assert len({p.fingerprint() for p in pats}) == 5
+    comm_strategies.clear_caches()
+    monkeypatch.setattr(comm_strategies, "PLAN_CACHE_MAX", 3)
+    for p in pats:
+        comm_strategies.planned(p, "two_step", message_cap_bytes=64)
+    assert len(comm_strategies._PLAN_CACHE) == 3
+    stats = comm_strategies.cache_stats()
+    assert stats.plan_misses == 5 and stats.plan_hits == 0
+    # newest three are resident...
+    for p in pats[2:]:
+        comm_strategies.planned(p, "two_step", message_cap_bytes=64)
+    assert comm_strategies.cache_stats().plan_hits == 3
+    # ...oldest two were evicted and re-plan as misses
+    comm_strategies.planned(pats[0], "two_step", message_cap_bytes=64)
+    stats = comm_strategies.cache_stats()
+    assert stats.plan_misses == 6
+    comm_strategies.clear_caches()
+
+
+def test_compute_cache_eviction_under_many_fingerprints(monkeypatch):
+    """The local-compute compile LRU evicts by fingerprint but never grows a
+    second entry for a repeated (fingerprint, k)."""
+    import jax
+    from repro.sparse import spmv as spmv_mod
+
+    mesh = jax.make_mesh((1, 1), ("pod", "local"))
+    comm_strategies.clear_caches()
+    monkeypatch.setattr(spmv_mod, "COMPUTE_CACHE_MAX", 4)
+    for fp in ("fp0", "fp1", "fp2", "fp3", "fp4", "fp5"):
+        spmv_mod._compute_program(fp, mesh, False, 4)
+    assert len(spmv_mod._COMPUTE_CACHE) == 4
+    stats = comm_strategies.cache_stats()
+    assert stats.compute_misses == 6 and stats.compute_hits == 0
+    # distinct k widths of a resident fingerprint are distinct entries ...
+    spmv_mod._compute_program("fp5", mesh, False, 8)
+    spmv_mod._compute_program("fp5", mesh, False, None)
+    # ... repeats are hits, not rebuilds
+    spmv_mod._compute_program("fp5", mesh, False, 4)
+    spmv_mod._compute_program("fp5", mesh, False, 8)
+    stats = comm_strategies.cache_stats()
+    assert stats.compute_misses == 8 and stats.compute_hits == 2
+    # evicted fingerprint re-misses
+    spmv_mod._compute_program("fp0", mesh, False, 4)
+    assert comm_strategies.cache_stats().compute_misses == 9
+    comm_strategies.clear_caches()
+    assert len(spmv_mod._COMPUTE_CACHE) == 0  # registered external cache
+
+
+@pytest.mark.slow
+def test_batched_plan_cache_keying_on_devices(subproc):
+    """Distinct payload widths k must NOT thrash the plan/compile caches:
+    one plan + one executor per pattern fingerprint, one local-compute
+    compile entry per (fingerprint, k)."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import strategies as S
+from repro.comm.topology import PodTopology
+from repro.sparse import thermal_like, build
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+A = thermal_like(64, rng)
+S.clear_caches()
+sp = build(A, topo, strategy="two_step", use_pallas=False)
+s = S.cache_stats()
+assert s.plan_misses == 1 and s.exec_misses == 1, s
+assert s.compute_misses == 1, s  # the width=None vector program
+V = rng.normal(size=(A.n, 16)).astype(np.float32).reshape(topo.nranks, -1, 16)
+for k in (1, 4, 16, 4, 1):
+    sp.matmat(V[:, :, :k])
+s = S.cache_stats()
+# one compile entry per distinct k (1, 4, 16) + the vector program; repeat
+# widths are served by the instance memo and never touch the module LRU
+assert s.compute_misses == 4, s
+assert s.compute_hits == 0, s
+# the exchange kept exactly ONE plan/executor for the fingerprint: batched
+# widths specialize inside the jitted executor, not the plan cache
+assert s.plan_misses == 1 and s.exec_misses == 1, s
+# full rebuild for the same matrix is all hits, no recompiles
+sp2 = build(A, topo, strategy="two_step", use_pallas=False)
+sp2.matmat(V)
+s2 = S.cache_stats()
+assert s2.plan_misses == 1 and s2.exec_misses == 1, s2
+assert s2.compute_misses == 4 and s2.compute_hits == 2, s2
+print("BATCHED CACHE OK", s2)
+""",
+        devices=8,
+    )
+
+
 @pytest.mark.slow
 def test_exchange_compile_cache_hits_on_devices(subproc):
     """Second IrregularExchange construction reuses plan AND jitted executor."""
