@@ -9,6 +9,7 @@ Sections:
   modeled     -- paper Figure 4.3 (strategy predictions)
   validation  -- paper Figure 4.2 (model vs measured SpMV exchange)
   spmv        -- paper Figure 5.1 (SpMV strategies) + SpMM k-sweep
+  overlap     -- split-phase overlap sweep (interior fraction x pods x k)
   planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
@@ -30,6 +31,7 @@ def main() -> None:
         bench_kernels,
         bench_model_validation,
         bench_modeled_performance,
+        bench_overlap,
         bench_params,
         bench_planning,
         bench_roofline,
@@ -41,6 +43,7 @@ def main() -> None:
         "modeled": bench_modeled_performance.main,
         "validation": bench_model_validation.main,
         "spmv": bench_spmv.main,
+        "overlap": bench_overlap.main,
         "planning": bench_planning.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,

@@ -4,7 +4,19 @@ Given a scenario (message count, destination nodes, message sizes), print the
 per-size strategy ranking on both machine registries -- the exact exercise of
 paper §4.6, usable for planning a real deployment's exchange strategy.
 
+``--payload-width k`` widens the byte terms for batched ``k``-column payloads
+(the multi-vector SpMM / batched-serving lever: message counts stay fixed, so
+big ``k`` pushes every model toward the bandwidth-bound regime and can flip
+the winner -- compare ``--payload-width 1`` with ``--payload-width 64``).
+
+``--compute-us t --interior-frac f`` adds overlap-aware ranking: a per-step
+local compute of ``t`` microseconds, ``f`` of it halo-independent, lets the
+split-phase pipeline hide the inter-node phase and ``+overlap`` variants
+enter the ranking.
+
     PYTHONPATH=src python examples/strategy_advisor.py --messages 256 --nodes 16
+    PYTHONPATH=src python examples/strategy_advisor.py --payload-width 64
+    PYTHONPATH=src python examples/strategy_advisor.py --compute-us 50 --interior-frac 0.9
 """
 
 import argparse
@@ -21,20 +33,38 @@ def main() -> None:
     ap.add_argument("--machine", default="lassen", choices=("lassen", "tpu_v5e_pod"))
     ap.add_argument("--duplicate", type=float, default=0.0,
                     help="fraction of duplicate data removable by node-aware schemes")
+    ap.add_argument("--payload-width", type=int, default=1,
+                    help="batched payload columns k (PatternStats.widened)")
+    ap.add_argument("--compute-us", type=float, default=0.0,
+                    help="per-step local compute in us; enables overlap ranking")
+    ap.add_argument("--interior-frac", type=float, default=0.0,
+                    help="fraction of compute that is halo-independent")
     args = ap.parse_args()
 
-    from repro.core import advise, figure43_pattern
+    from repro.core import ComputeProfile, advise, figure43_pattern
+
+    compute = None
+    if args.compute_us > 0.0:
+        compute = ComputeProfile.from_fraction(
+            args.compute_us * 1e-6, args.interior_frac
+        )
 
     print(f"machine={args.machine}  inter-node messages={args.messages}  "
-          f"destination nodes={args.nodes}  duplicates={args.duplicate:.0%}\n")
-    print(f"{'msg size':>10} | best strategy             | predicted | runner-up")
-    print("-" * 78)
+          f"destination nodes={args.nodes}  duplicates={args.duplicate:.0%}  "
+          f"payload_width={args.payload_width}"
+          + (f"  compute={args.compute_us}us"
+             f" interior={args.interior_frac:.0%}" if compute else "") + "\n")
+    print(f"{'msg size':>10} | best strategy                     | predicted | runner-up")
+    print("-" * 90)
     for logs in range(4, 21):
         size = 2 ** logs
         pat = figure43_pattern(size, args.messages, args.nodes)
-        adv = advise(pat, machine=args.machine, duplicate_fraction=args.duplicate)
+        adv = advise(pat, machine=args.machine,
+                     duplicate_fraction=args.duplicate,
+                     payload_width=args.payload_width,
+                     compute=compute)
         b, r = adv.ranked[0], adv.ranked[1]
-        print(f"{size:>10} | {b.key:<25} | {b.predicted_time:.3e}s | "
+        print(f"{size:>10} | {b.key:<33} | {b.predicted_time:.3e}s | "
               f"{r.key} ({r.predicted_time:.2e}s)")
 
 

@@ -33,6 +33,12 @@ Stage semantics (mirrored exactly by the JAX executor):
 * ``PermuteWorld(...)``-- rounds of world-level ``ppermute``; each round the
   sender selects ``sel[round]`` from ``ext`` and the received blocks are
   concatenated into the new buffer.
+
+For overlapped execution, :func:`split_phase` factors a pattern into its
+on-pod and inter-pod sub-patterns (the two phases of
+:meth:`repro.comm.strategies.IrregularExchange.start`), and
+:func:`merge_split_phase` is the numpy oracle for reassembling the full
+canonical buffer from the two phase outputs.
 """
 
 from __future__ import annotations
@@ -884,11 +890,32 @@ def plan_split(
     return pl.build("split")
 
 
+def plan_local(pattern: ExchangePattern, elem_bytes: int = 4) -> StagePlan:
+    """Intra-pod-only program: one gather + one ``A2ALocal`` + projection.
+
+    This is the on-node phase of the split-phase (overlap) exchange: every
+    need must be pod-local.  All four node-aware strategies degenerate to the
+    same program for pod-local data -- the node-aware rewrites only touch
+    inter-node traffic -- so the local phase has a single planner.
+    """
+    topo = pattern.topo
+    for n in pattern.needs:
+        if topo.pod_of(n.src) != topo.pod_of(n.dst):
+            raise ValueError(
+                f"plan_local requires a pod-local pattern; need "
+                f"{n.dst}<-{n.src} crosses pods"
+            )
+    pl = _Planner(pattern)
+    pl.redistribute_and_finish(elem_bytes, extra_local_direct=True)
+    return pl.build("local")
+
+
 PLANNERS: Dict[str, Callable[..., StagePlan]] = {
     "standard": plan_standard,
     "two_step": plan_two_step,
     "three_step": plan_three_step,
     "split": plan_split,
+    "local": plan_local,
 }
 
 
@@ -899,3 +926,99 @@ def plan(strategy: str, pattern: ExchangePattern, *, message_cap_bytes: int = 16
         return PLANNERS[strategy](pattern, elem_bytes)
     except KeyError as e:
         raise KeyError(f"unknown strategy {strategy!r}; known: {sorted(PLANNERS)}") from e
+
+
+# ---------------------------------------------------------------------------
+# Split-phase decomposition (the overlap-capable two-phase exchange)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPhase:
+    """A pattern factored into an on-pod phase and an inter-pod phase.
+
+    ``local`` holds the needs whose source is on the destination's own pod
+    (deliverable with intra-pod communication only, :func:`plan_local`);
+    ``remote`` holds the inter-pod needs (planned by any node-aware
+    strategy).  The merge maps route each slot of the *full* canonical recv
+    buffer to its position in the phase that delivers it:
+
+    ``merged[r, j] = local_out[r, local_idx[r, j]]``  if ``from_local[r, j]``
+    else ``remote_out[r, remote_idx[r, j]]``.
+
+    Because both sub-patterns keep the full pattern's src-major canonical
+    ordering, each phase's canonical buffer is a subsequence of the full one
+    and the merge is a pure per-rank gather -- no communication.
+    """
+
+    full: ExchangePattern
+    local: ExchangePattern
+    remote: ExchangePattern
+    from_local: np.ndarray  # [nranks, H] bool
+    local_idx: np.ndarray  # [nranks, H] int32 into the local phase's buffer
+    remote_idx: np.ndarray  # [nranks, H] int32 into the remote phase's buffer
+    #: slots past a rank's canonical length are zero-filled, like the
+    #: barrier executor's PAD handling
+    valid: np.ndarray  # [nranks, H] bool
+
+
+def split_phase(pattern: ExchangePattern) -> SplitPhase:
+    """Factor ``pattern`` into its on-pod and inter-pod sub-patterns."""
+    topo = pattern.topo
+    loc: List[Need] = []
+    rem: List[Need] = []
+    for n in pattern.needs:
+        (loc if topo.pod_of(n.src) == topo.pod_of(n.dst) else rem).append(n)
+    local = ExchangePattern(
+        topo=topo, local_size=pattern.local_size, needs=tuple(loc)
+    )
+    remote = ExchangePattern(
+        topo=topo, local_size=pattern.local_size, needs=tuple(rem)
+    )
+    nranks = topo.nranks
+    L = pattern.local_size
+    H = max(pattern.max_recv_size(), 1)
+    from_local = np.zeros((nranks, H), dtype=bool)
+    local_idx = np.zeros((nranks, H), dtype=np.int32)
+    remote_idx = np.zeros((nranks, H), dtype=np.int32)
+    valid = np.zeros((nranks, H), dtype=bool)
+    for r, codes in enumerate(pattern.canonical_code_rows()):
+        n = len(codes)
+        if not n:
+            continue
+        is_local = (codes // L) // topo.ppn == topo.pod_of(r)
+        valid[r, :n] = True
+        from_local[r, :n] = is_local
+        local_idx[r, :n] = np.cumsum(is_local) - 1
+        remote_idx[r, :n] = np.cumsum(~is_local) - 1
+    np.maximum(local_idx, 0, out=local_idx)
+    np.maximum(remote_idx, 0, out=remote_idx)
+    return SplitPhase(
+        full=pattern,
+        local=local,
+        remote=remote,
+        from_local=from_local,
+        local_idx=local_idx,
+        remote_idx=remote_idx,
+        valid=valid,
+    )
+
+
+def merge_split_phase(
+    sp: SplitPhase, local_out: np.ndarray, remote_out: np.ndarray
+) -> np.ndarray:
+    """Numpy oracle for the split-phase merge: phase outputs -> full buffer.
+
+    ``local_out`` / ``remote_out`` are the two phases' canonical buffers
+    (e.g. from :func:`execute_numpy` on their plans); the result is
+    bit-identical to executing the unsplit plan.
+    """
+    n, H = sp.from_local.shape
+    feat = local_out.shape[2:]
+    rows = np.arange(n)[:, None]
+    lo = local_out[rows, np.minimum(sp.local_idx, local_out.shape[1] - 1)]
+    ro = remote_out[rows, np.minimum(sp.remote_idx, remote_out.shape[1] - 1)]
+    expand = (n, H) + (1,) * len(feat)
+    mask = sp.from_local.reshape(expand)
+    valid = sp.valid.reshape(expand)
+    return np.where(valid, np.where(mask, lo, ro), np.zeros_like(lo))

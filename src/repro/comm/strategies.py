@@ -46,8 +46,10 @@ from repro.comm.exchange import (
     ExchangePattern,
     Gather,
     PermuteWorld,
+    SplitPhase,
     StagePlan,
     plan,
+    split_phase,
 )
 from repro.comm.fusion import fuse
 from repro.comm.topology import (
@@ -201,6 +203,8 @@ _stats = CacheStats()
 _PLAN_CACHE: "OrderedDict[tuple, StagePlan]" = OrderedDict()
 _EXEC_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _MESH_CACHE: "OrderedDict[tuple, jax.sharding.Mesh]" = OrderedDict()
+#: split-phase decompositions + jitted merge fns, keyed by pattern fingerprint
+_SPLIT_CACHE: "OrderedDict[str, tuple]" = OrderedDict()
 #: external LRUs (e.g. the SpMM compute cache) reset by clear_caches()
 _EXTERNAL_CACHES: List[OrderedDict] = []
 PLAN_CACHE_MAX = 256
@@ -223,6 +227,7 @@ def clear_caches() -> None:
     _PLAN_CACHE.clear()
     _EXEC_CACHE.clear()
     _MESH_CACHE.clear()
+    _SPLIT_CACHE.clear()
     for cache in _EXTERNAL_CACHES:
         cache.clear()
     _stats.plan_hits = _stats.plan_misses = 0
@@ -338,6 +343,72 @@ def _executor(sp: StagePlan, plan_key: tuple, mesh: jax.sharding.Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Split-phase merge
+# ---------------------------------------------------------------------------
+
+
+def _build_merge(sp: SplitPhase):
+    """Jitted per-rank gather assembling the full canonical buffer from the
+    two phase outputs (no communication; sharding of axis 0 is preserved)."""
+    mask = jnp.asarray(sp.from_local)
+    valid = jnp.asarray(sp.valid)
+    li = jnp.asarray(sp.local_idx)
+    ri = jnp.asarray(sp.remote_idx)
+
+    @jax.jit
+    def merge(local_out, remote_out):
+        nfeat = local_out.ndim - 2
+
+        def take(buf, idx):
+            idx = jnp.minimum(idx, buf.shape[1] - 1)
+            idx = idx.reshape(idx.shape + (1,) * nfeat)
+            idx = jnp.broadcast_to(idx, idx.shape[:2] + buf.shape[2:])
+            return jnp.take_along_axis(buf, idx, axis=1)
+
+        m = mask.reshape(mask.shape + (1,) * nfeat)
+        v = valid.reshape(valid.shape + (1,) * nfeat)
+        lo = take(local_out, li)
+        merged = jnp.where(m, lo, take(remote_out, ri))
+        return jnp.where(v, merged, jnp.zeros_like(lo))
+
+    return merge
+
+
+def _split_phase_cached(pattern: ExchangePattern) -> tuple:
+    key = pattern.fingerprint()
+
+    def build():
+        sp = split_phase(pattern)
+        return sp, _build_merge(sp)
+
+    val, _ = _lru_get(_SPLIT_CACHE, key, PLAN_CACHE_MAX, build)
+    return val
+
+
+@dataclasses.dataclass
+class ExchangeHandle:
+    """An in-flight two-phase exchange (see :meth:`IrregularExchange.start`).
+
+    ``local_halo`` is the on-pod phase result, available as soon as
+    :meth:`IrregularExchange.start` returns; the inter-pod phase was
+    dispatched first and completes asynchronously.  :meth:`finish` merges
+    both phases into the full canonical recv buffer -- bit-identical to the
+    barrier ``IrregularExchange.__call__``.
+    """
+
+    local_halo: jax.Array
+    remote_halo: jax.Array
+    _merge: object
+    _done: Optional[jax.Array] = None
+
+    def finish(self) -> jax.Array:
+        """Block on the inter-pod phase and return ``[nranks, H, *feat]``."""
+        if self._done is None:
+            self._done = self._merge(self.local_halo, self.remote_halo)
+        return self._done
+
+
+# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
@@ -357,6 +428,23 @@ class IrregularExchange:
     Construction is cheap when an equal exchange was built before: the plan
     and the jitted executor come from module-level caches (see
     :func:`cache_stats`).
+
+    Example (needs ``jax.device_count() >= pattern.topo.nranks``, e.g. via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)::
+
+        import numpy as np
+        from repro.comm import IrregularExchange, PodTopology, random_pattern
+
+        topo = PodTopology(npods=2, ppn=4)
+        pat = random_pattern(np.random.default_rng(0), topo, local_size=6)
+        ex = IrregularExchange(pat, "two_step")
+
+        local = np.ones((topo.nranks, 6), np.float32)
+        halo = ex(local)                    # barrier: [nranks, H]
+
+        handle = ex.start(local)            # split-phase (overlap) variant:
+        fast = handle.local_halo            # on-pod data, ready immediately
+        assert np.array_equal(np.asarray(handle.finish()), np.asarray(halo))
     """
 
     pattern: ExchangePattern
@@ -385,6 +473,7 @@ class IrregularExchange:
         if self.mesh is None:
             self.mesh = _default_mesh(self.pattern.topo)
         self._fn, self._arrays = _executor(self.plan, plan_key, self.mesh)
+        self._two_phase: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     def __call__(self, local: jax.Array) -> jax.Array:
@@ -399,6 +488,51 @@ class IrregularExchange:
                 f"expected [{n}, {L}, *feat], got {tuple(local.shape)}"
             )
         return self._fn(local, *self._arrays)
+
+    # ------------------------------------------------------------------
+    def start(self, local: jax.Array) -> ExchangeHandle:
+        """Begin a split-phase exchange; on-pod data is ready immediately.
+
+        The pattern is factored (:func:`repro.comm.exchange.split_phase`)
+        into an inter-pod sub-pattern -- planned with this exchange's
+        strategy and dispatched *first*, so it is in flight while anything
+        else runs -- and an on-pod sub-pattern delivered synchronously as
+        ``handle.local_halo``.  Work that needs no halo data (the diag-block
+        product of :class:`repro.sparse.spmv.DistributedSpMV`), or only the
+        on-pod part of it (``handle.local_halo``), can execute between
+        ``start()`` and ``handle.finish()``, hiding the inter-node latency
+        behind it; ``finish()`` merges both phases into exactly the buffer
+        :meth:`__call__` returns.
+
+        Both sub-exchanges and the merge come from the module-level caches
+        (and are memoized on the instance), so repeated ``start()`` calls
+        replan nothing and re-hash nothing.
+        """
+        if self._two_phase is None:
+            sp, merge = _split_phase_cached(self.pattern)
+            self._two_phase = (
+                IrregularExchange(
+                    sp.remote,
+                    self.strategy,
+                    mesh=self.mesh,
+                    message_cap_bytes=self.message_cap_bytes,
+                    elem_bytes=self.elem_bytes,
+                    fuse_program=self.fuse_program,
+                ),
+                IrregularExchange(
+                    sp.local,
+                    "local",
+                    mesh=self.mesh,
+                    elem_bytes=self.elem_bytes,
+                    fuse_program=self.fuse_program,
+                ),
+                merge,
+            )
+        remote_ex, local_ex, merge = self._two_phase
+        remote = remote_ex(local)  # async dispatch: inter-pod phase in flight
+        return ExchangeHandle(
+            local_halo=local_ex(local), remote_halo=remote, _merge=merge
+        )
 
     # ------------------------------------------------------------------
     def reference(self, local: np.ndarray) -> np.ndarray:

@@ -5,6 +5,21 @@ stats) and a machine registry entry, the advisor evaluates every Table 6
 composite model and returns the ranked strategies.  This turns the paper's
 characterization into the runtime decision procedure used by the SpMV driver
 (``--strategy auto``) and the MoE dispatch layer.
+
+When a :class:`ComputeProfile` is supplied, every (strategy, transport) pair
+is additionally ranked in its *overlapped* (split-phase) variant, where
+interior compute hides the inter-node phase
+(:func:`repro.core.perfmodel.predict_overlapped`); recommendations carry an
+``overlap`` flag and overlapped keys read e.g. ``"split_dd/staged_host+overlap"``.
+
+Example (doctest)::
+
+    >>> from repro.core import advise, figure43_pattern
+    >>> pat = figure43_pattern(2048, 256, 16)
+    >>> advise(pat, machine="lassen").best.key
+    'two_step/device_aware'
+    >>> advise(pat, machine="lassen", payload_width=16).best.key
+    'three_step/device_aware'
 """
 
 from __future__ import annotations
@@ -19,7 +34,40 @@ from repro.core.perfmodel import (
     Strategy,
     Transport,
     predict_all,
+    predict_overlapped,
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeProfile:
+    """Per-step local compute, split by halo dependence (seconds).
+
+    ``t_interior`` is the compute that needs no halo data (overlappable with
+    the inter-node phase); ``t_boundary`` is the halo-dependent remainder.
+    Build one from a measured whole-step compute time and the row split's
+    interior tile fraction via :meth:`from_fraction`.
+    """
+
+    t_interior: float
+    t_boundary: float
+
+    @property
+    def total(self) -> float:
+        return self.t_interior + self.t_boundary
+
+    @staticmethod
+    def from_fraction(t_compute: float, interior_fraction: float) -> "ComputeProfile":
+        """Split a total compute time by the overlappable fraction.
+
+        >>> ComputeProfile.from_fraction(1.0, 0.75)
+        ComputeProfile(t_interior=0.75, t_boundary=0.25)
+        """
+        if not 0.0 <= interior_fraction <= 1.0:
+            raise ValueError(f"interior_fraction must be in [0, 1], got {interior_fraction}")
+        return ComputeProfile(
+            t_interior=t_compute * interior_fraction,
+            t_boundary=t_compute * (1.0 - interior_fraction),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,10 +75,13 @@ class Recommendation:
     strategy: Strategy
     transport: Transport
     predicted_time: float
+    #: True when this entry models the split-phase (overlapped) execution
+    overlap: bool = False
 
     @property
     def key(self) -> str:
-        return f"{self.strategy.value}/{self.transport.value}"
+        base = f"{self.strategy.value}/{self.transport.value}"
+        return base + "+overlap" if self.overlap else base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,11 +96,17 @@ class Advice:
     def best(self) -> Recommendation:
         return self.ranked[0]
 
-    def time_for(self, strategy: Strategy, transport: Transport) -> float:
+    def time_for(
+        self, strategy: Strategy, transport: Transport, overlap: bool = False
+    ) -> float:
         for r in self.ranked:
-            if r.strategy is strategy and r.transport is transport:
+            if (
+                r.strategy is strategy
+                and r.transport is transport
+                and r.overlap == overlap
+            ):
                 return r.predicted_time
-        raise KeyError((strategy, transport))
+        raise KeyError((strategy, transport, overlap))
 
     def table(self) -> str:
         w = max(len(r.key) for r in self.ranked)
@@ -65,6 +122,7 @@ def advise_stats(
     duplicate_fraction: float = 0.0,
     exclude: Sequence[Tuple[Strategy, Transport]] = (),
     payload_width: int = 1,
+    compute: Optional[ComputeProfile] = None,
 ) -> Advice:
     """Rank strategies for raw Table 7 stats.
 
@@ -77,6 +135,12 @@ def advise_stats(
     :meth:`~repro.core.perfmodel.PatternStats.widened`), which is what lets
     the ranking flip between message-count-bound and bandwidth-bound winners
     as ``k`` grows.
+
+    ``compute`` switches on overlap-aware ranking: every pair is evaluated
+    both as the barrier pipeline (``T_comm + T_compute``) and as the
+    split-phase pipeline (:func:`~repro.core.perfmodel.predict_overlapped`),
+    and the two variants compete in one ranking.  Without a compute profile
+    the ranking is communication-only, as in the paper.
     """
     m = get_machine(machine) if isinstance(machine, str) else machine
     stats = stats.widened(payload_width)
@@ -87,14 +151,23 @@ def advise_stats(
     ).items():
         if (strategy, transport) in exclude:
             continue
+        stats_eff = stats
         if duplicate_fraction > 0.0 and strategy is not Strategy.STANDARD:
-            t = predict_all(m, stats.scaled(keep), include_two_step_one=True)[
+            stats_eff = stats.scaled(keep)
+            t = predict_all(m, stats_eff, include_two_step_one=True)[
                 (strategy, transport)
             ]
-        preds[(strategy, transport)] = t
+        if compute is None:
+            preds[(strategy, transport, False)] = t
+        else:
+            preds[(strategy, transport, False)] = t + compute.total
+            preds[(strategy, transport, True)] = predict_overlapped(
+                m, strategy, transport, stats_eff,
+                compute.t_interior, compute.t_boundary,
+            )
     ranked = tuple(
-        Recommendation(s, tr, t)
-        for (s, tr), t in sorted(preds.items(), key=lambda kv: kv[1])
+        Recommendation(s, tr, t, overlap=ov)
+        for (s, tr, ov), t in sorted(preds.items(), key=lambda kv: kv[1])
     )
     return Advice(machine=m.name, stats=stats, ranked=ranked)
 
@@ -105,11 +178,19 @@ def advise(
     include_two_step_one: bool = False,
     duplicate_fraction: float = 0.0,
     payload_width: int = 1,
+    compute: Optional[ComputeProfile] = None,
 ) -> Advice:
     """Rank strategies for a concrete communication pattern.
 
-    ``payload_width`` is the batched-payload column count ``k`` (see
-    :func:`advise_stats`).
+    ``payload_width`` is the batched-payload column count ``k`` and
+    ``compute`` enables overlap-aware ranking (see :func:`advise_stats`).
+
+    >>> from repro.core import figure43_pattern
+    >>> adv = advise(figure43_pattern(2048, 256, 16), machine="lassen")
+    >>> adv.best.key
+    'two_step/device_aware'
+    >>> adv.best.predicted_time < adv.ranked[-1].predicted_time
+    True
     """
     return advise_stats(
         pattern.stats(),
@@ -117,4 +198,5 @@ def advise(
         include_two_step_one=include_two_step_one,
         duplicate_fraction=duplicate_fraction,
         payload_width=payload_width,
+        compute=compute,
     )

@@ -12,7 +12,16 @@ Implements, faithfully, the models of paper §2.2 / §4:
 * Table 6    composite models for all (strategy x transport) pairs
 
 plus the Table 7 pattern statistics consumed by the composites (computed by
-:mod:`repro.core.patterns`).
+:mod:`repro.core.patterns`), plus the overlap-aware extension used by the
+split-phase execution path: :func:`predict_phases` factors each Table 6
+composite into its on-node and inter-node terms, and
+:func:`predict_overlapped` evaluates
+
+    ``T = T_local_comm + max(T_inter_comm, T_interior_compute) + T_boundary``
+
+-- the split-phase pipeline where interior compute hides behind the
+inter-node phase (paper §4.6 closing discussion; Bienz et al., "Modeling
+Data Movement Performance on Heterogeneous Architectures").
 """
 
 from __future__ import annotations
@@ -100,6 +109,17 @@ class PatternStats:
         message-count-bound regime toward the bandwidth-bound regime as ``k``
         grows (Bienz et al.; the heterogeneous-communication survey's batched
         payload lever).
+
+        >>> s = PatternStats(s_proc=100.0, s_node=400.0, s_node_node=200.0,
+        ...                  m_proc_node=4, m_node_node=8, m_proc=16,
+        ...                  num_dest_nodes=4)
+        >>> w = s.widened(8)
+        >>> (w.s_proc, w.s_node)      # byte terms scale by k ...
+        (800.0, 3200.0)
+        >>> (w.m_proc, w.m_node_node) # ... message counts do not
+        (16, 8)
+        >>> s.widened(1) is s
+        True
         """
         if payload_width < 1:
             raise ValueError(f"payload_width must be >= 1, got {payload_width}")
@@ -275,6 +295,114 @@ def predict(
         )
 
     raise ValueError(f"unknown strategy {strategy}")
+
+
+# ---------------------------------------------------------------------------
+# Overlap-aware extension (split-phase execution)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseTimes:
+    """A Table 6 composite factored into its two communication phases.
+
+    ``local`` collects every on-node term (gathers, redistributes, staging
+    copies) -- the part of the exchange that cannot be hidden because the
+    split-phase pipeline needs it before interior compute starts; ``inter``
+    is the inter-node transport term -- the part that runs concurrently with
+    interior compute when the execution path overlaps
+    (:meth:`repro.sparse.spmv.DistributedSpMV` with ``overlap=True``).
+    """
+
+    local: float
+    inter: float
+
+    @property
+    def total(self) -> float:
+        return self.local + self.inter
+
+
+def predict_phases(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+) -> PhaseTimes:
+    """Factor the Table 6 composite into (on-node, inter-node) terms.
+
+    Invariant (pinned by tests): ``phases.local + phases.inter`` equals
+    :func:`predict` for every modeled pair.
+    """
+    ppn = machine.procs_per_node
+
+    if strategy is Strategy.STANDARD:
+        return PhaseTimes(local=0.0, inter=predict(machine, strategy, transport, stats))
+
+    if strategy is Strategy.THREE_STEP:
+        if transport is Transport.STAGED_HOST:
+            return PhaseTimes(
+                local=2.0 * t_on(machine, Space.CPU, stats.s_node_node)
+                + t_copy(machine.copy[1], stats.s_proc, stats.s_node_node),
+                inter=t_off(machine, stats.m_node_node, stats.s_node_node,
+                            stats.s_node, msg_size=stats.s_node_node),
+            )
+        return PhaseTimes(
+            local=2.0 * t_on(machine, Space.GPU, stats.s_node_node),
+            inter=t_off_da(machine, stats.m_node_node, stats.s_node_node),
+        )
+
+    if strategy in (Strategy.TWO_STEP, Strategy.TWO_STEP_ONE):
+        on_space = Space.CPU if transport is Transport.STAGED_HOST else Space.GPU
+        local = (
+            t_on(machine, on_space, stats.s_proc)
+            if strategy is Strategy.TWO_STEP
+            else 0.0
+        )
+        if transport is Transport.STAGED_HOST:
+            local += t_copy(machine.copy[1], stats.s_proc, stats.s_node_node)
+            inter = t_off(machine, stats.m_proc_node, stats.s_proc, stats.s_node,
+                          msg_size=stats.s_proc / max(stats.m_proc_node, 1))
+        else:
+            inter = t_off_da(machine, stats.m_proc_node, stats.s_proc,
+                             msg_size=stats.s_proc / max(stats.m_proc_node, 1))
+        return PhaseTimes(local=local, inter=inter)
+
+    if strategy in (Strategy.SPLIT_MD, Strategy.SPLIT_DD):
+        if transport is not Transport.STAGED_HOST:
+            raise ValueError("device-aware transport does not apply to Split (paper Table 5)")
+        ppg = 1 if strategy is Strategy.SPLIT_MD else 4
+        s_split = stats.s_node / ppn
+        return PhaseTimes(
+            local=2.0 * t_on_split(machine, stats.s_node, ppg)
+            + t_copy(machine.copy[ppg], stats.s_proc, stats.s_node_node),
+            inter=t_off(machine, stats.m_proc_node, s_split, stats.s_node,
+                        msg_size=s_split),
+        )
+
+    raise ValueError(f"unknown strategy {strategy}")
+
+
+def predict_overlapped(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+    t_interior: float,
+    t_boundary: float,
+) -> float:
+    """Split-phase pipeline time with interior compute hiding the inter-node
+    phase: ``T = T_local + max(T_inter, T_interior) + T_boundary``.
+
+    ``t_interior`` / ``t_boundary`` are the interior-tile and boundary-tile
+    local compute times in seconds (e.g. from a measured per-step compute
+    time scaled by :attr:`repro.core.split_plan.RowPhaseSplit.interior_tile_fraction`).
+    The non-overlapped counterpart of the same step is
+    ``predict(...) + t_interior + t_boundary``.
+    """
+    if t_interior < 0 or t_boundary < 0:
+        raise ValueError("compute times must be non-negative")
+    ph = predict_phases(machine, strategy, transport, stats)
+    return ph.local + max(ph.inter, t_interior) + t_boundary
 
 
 def predict_all(

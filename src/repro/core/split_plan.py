@@ -31,6 +31,8 @@ import math
 from collections import defaultdict
 from typing import Dict, List, Tuple
 
+import numpy as np
+
 from repro.core.patterns import CommPattern, Message
 
 
@@ -177,4 +179,80 @@ def build_split_plan(pattern: CommPattern, message_cap: int) -> SplitPlan:
         effective_cap=effective_cap,
         local_messages=local_msgs,
         chunks=tuple(all_chunks),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Interior / boundary row split (the overlap enabler, paper §4.6 discussion)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPhaseSplit:
+    """Each rank's rows partitioned for split-phase (overlapped) compute.
+
+    A row is *interior* when it depends only on entries its own rank holds
+    -- its compute can run while the inter-node exchange is in flight -- and
+    *boundary* when it reads halo data and must wait for
+    ``ExchangeHandle.finish()``.  Row-tile granularity matters on TPU: the
+    blocked-ELL kernels compute whole ``tile_rows`` tiles, so a tile is
+    interior only if *every* row in it is (``interior_tiles``); any halo
+    dependency promotes the whole tile to the boundary phase.
+
+    Attributes:
+      interior: ``[nranks, L]`` bool, True for halo-independent rows.
+      interior_tiles: ``[nranks, ntiles]`` bool at kernel tile granularity.
+      tile_rows: the row-tile size the tile masks were computed for.
+    """
+
+    interior: np.ndarray
+    interior_tiles: np.ndarray
+    tile_rows: int
+
+    @property
+    def boundary(self) -> np.ndarray:
+        return ~self.interior
+
+    @property
+    def boundary_tiles(self) -> np.ndarray:
+        return ~self.interior_tiles
+
+    @property
+    def interior_fraction(self) -> float:
+        """Fraction of rows whose compute overlaps the inter-node phase
+        (the x-axis of ``benchmarks/bench_overlap.py``)."""
+        return float(self.interior.mean()) if self.interior.size else 0.0
+
+    @property
+    def interior_tile_fraction(self) -> float:
+        """Fraction of *tiles* that overlap -- what the kernels actually
+        skip; always <= ``interior_fraction``."""
+        return (
+            float(self.interior_tiles.mean()) if self.interior_tiles.size else 0.0
+        )
+
+
+def split_rows(halo_dependent: np.ndarray, tile_rows: int) -> RowPhaseSplit:
+    """Partition rows into interior/boundary sets from a dependency mask.
+
+    ``halo_dependent[r, i]`` is True when row ``i`` of rank ``r`` reads at
+    least one off-rank (halo) entry -- for the SpMV case this is "row has a
+    nonzero in the off-rank ELL block".  ``tile_rows`` is the kernel's
+    row-tile size; rows are padded up to a whole number of tiles and padding
+    rows count as interior (they compute zeros either way).
+    """
+    if halo_dependent.ndim != 2:
+        raise ValueError(
+            f"halo_dependent must be [nranks, rows], got {halo_dependent.shape}"
+        )
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    dep = np.asarray(halo_dependent, dtype=bool)
+    nranks, L = dep.shape
+    ntiles = -(-L // tile_rows) if L else 0
+    pad = ntiles * tile_rows - L
+    padded = np.pad(dep, ((0, 0), (0, pad)))
+    tile_dep = padded.reshape(nranks, ntiles, tile_rows).any(axis=2)
+    return RowPhaseSplit(
+        interior=~dep, interior_tiles=~tile_dep, tile_rows=tile_rows
     )

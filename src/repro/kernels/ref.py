@@ -25,6 +25,24 @@ def spmm_ell(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarra
     return (data[..., None] * x[cols]).sum(axis=1)
 
 
+def spmv_ell_masked(
+    data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray, row_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Phase-masked SpMV oracle: rows where ``row_mask`` is False deliver
+    exactly 0 (the jnp analogue of the kernel's skipped row tiles; the mask
+    is the kernel's ``tile_mask`` expanded to rows)."""
+    w = spmv_ell(data, cols, x)
+    return jnp.where(row_mask, w, jnp.zeros_like(w))
+
+
+def spmm_ell_masked(
+    data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray, row_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Phase-masked SpMM oracle; see :func:`spmv_ell_masked`."""
+    w = spmm_ell(data, cols, x)
+    return jnp.where(row_mask[:, None], w, jnp.zeros_like(w))
+
+
 def attention(
     q: jnp.ndarray,
     k: jnp.ndarray,

@@ -38,6 +38,18 @@ SpMM column-tiling design (why a second grid axis instead of a wider SpMV):
   ``ceil(k/128)`` times, i.e. once) and keeps the k = 1 path numerically
   identical to :func:`spmv_ell`: same ``K`` padding, same reduction order,
   one degenerate column tile.
+
+Row-tile masking (the split-phase/overlap hook):
+
+* Both kernels accept an optional ``tile_mask`` -- one int per row tile.
+  Inactive tiles (mask 0) are *skipped* via ``pl.when`` (zero-filled output,
+  no gather, no multiply-accumulate), so both passes of the overlapped
+  distributed SpMV reuse ONE kernel: the diag pass runs every row tile while
+  the inter-node exchange is in flight, and the off pass afterwards runs
+  only the boundary tiles (interior tiles' off-block rows are pure padding).
+  An active tile's compute is instruction-identical to the unmasked kernel,
+  which is what makes the overlapped path bit-compatible with the barrier
+  path.
 """
 
 from __future__ import annotations
@@ -62,6 +74,16 @@ def _spmv_ell_kernel(data_ref, cols_ref, x_ref, out_ref):
     out_ref[...] = (data * gathered).sum(axis=1)
 
 
+def _spmv_ell_masked_kernel(mask_ref, data_ref, cols_ref, x_ref, out_ref):
+    @pl.when(mask_ref[0] != 0)
+    def _active():
+        _spmv_ell_kernel(data_ref, cols_ref, x_ref, out_ref)
+
+    @pl.when(mask_ref[0] == 0)
+    def _inactive():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+
 def _spmm_ell_kernel(data_ref, cols_ref, x_ref, out_ref):
     data = data_ref[...]  # [TILE_R_MM, K]
     cols = cols_ref[...]  # [TILE_R_MM, K]
@@ -70,6 +92,16 @@ def _spmm_ell_kernel(data_ref, cols_ref, x_ref, out_ref):
         cols.shape + (x.shape[-1],)
     )  # [TILE_R_MM, K, TILE_C]
     out_ref[...] = (data[..., None] * gathered).sum(axis=1)
+
+
+def _spmm_ell_masked_kernel(mask_ref, data_ref, cols_ref, x_ref, out_ref):
+    @pl.when(mask_ref[0] != 0)
+    def _active():
+        _spmm_ell_kernel(data_ref, cols_ref, x_ref, out_ref)
+
+    @pl.when(mask_ref[0] == 0)
+    def _inactive():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
 
 
 def _pad_to(a: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
@@ -81,32 +113,59 @@ def _pad_to(a: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
     return jnp.pad(a, widths)
 
 
+def num_row_tiles(rows: int, tile_rows: int) -> int:
+    """Grid length (= ``tile_mask`` length) for ``rows`` ELL rows."""
+    return -(-rows // tile_rows)
+
+
+def _check_mask(tile_mask: jnp.ndarray, ntiles: int) -> jnp.ndarray:
+    if tile_mask.shape != (ntiles,):
+        raise ValueError(
+            f"tile_mask must have shape ({ntiles},) for this row count, "
+            f"got {tuple(tile_mask.shape)}"
+        )
+    return tile_mask.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def spmv_ell(
     data: jnp.ndarray,
     cols: jnp.ndarray,
     x: jnp.ndarray,
     interpret: bool = True,
+    tile_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """``w = A @ x`` for an ELL block. data/cols: [R, K]; x: [N] -> w: [R]."""
+    """``w = A @ x`` for an ELL block. data/cols: [R, K]; x: [N] -> w: [R].
+
+    ``tile_mask`` (optional ``[num_row_tiles(R, TILE_R)]`` ints) selects
+    which row tiles compute; inactive tiles are skipped and deliver zeros.
+    """
     R, K = data.shape
     data_p = _pad_to(_pad_to(data, LANE, 1), TILE_R, 0)
     cols_p = _pad_to(_pad_to(cols, LANE, 1), TILE_R, 0)
     x_p = _pad_to(x, LANE, 0)
     Rp, Kp = data_p.shape
-    grid = (Rp // TILE_R,)
+    grid = (num_row_tiles(R, TILE_R),)
+    in_specs = [
+        pl.BlockSpec((TILE_R, Kp), lambda i: (i, 0)),
+        pl.BlockSpec((TILE_R, Kp), lambda i: (i, 0)),
+        pl.BlockSpec((x_p.shape[0],), lambda i: (0,)),
+    ]
+    if tile_mask is None:
+        kernel, args = _spmv_ell_kernel, (data_p, cols_p, x_p)
+    else:
+        mask = _check_mask(tile_mask, grid[0])
+        kernel = _spmv_ell_masked_kernel
+        in_specs = [pl.BlockSpec((1,), lambda i: (i,))] + in_specs
+        args = (mask, data_p, cols_p, x_p)
     out = pl.pallas_call(
-        _spmv_ell_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((TILE_R, Kp), lambda i: (i, 0)),
-            pl.BlockSpec((TILE_R, Kp), lambda i: (i, 0)),
-            pl.BlockSpec((x_p.shape[0],), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((TILE_R,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Rp,), data.dtype),
         interpret=interpret,
-    )(data_p, cols_p, x_p)
+    )(*args)
     return out[:R]
 
 
@@ -116,8 +175,13 @@ def spmm_ell(
     cols: jnp.ndarray,
     x: jnp.ndarray,
     interpret: bool = True,
+    tile_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """``W = A @ X`` for an ELL block. data/cols: [R, K]; x: [N, C] -> [R, C]."""
+    """``W = A @ X`` for an ELL block. data/cols: [R, K]; x: [N, C] -> [R, C].
+
+    ``tile_mask`` (optional ``[num_row_tiles(R, TILE_R_MM)]`` ints) selects
+    which row tiles compute; inactive tiles are skipped and deliver zeros.
+    """
     R, K = data.shape
     N, C = x.shape
     data_p = _pad_to(_pad_to(data, LANE, 1), TILE_R_MM, 0)
@@ -125,17 +189,25 @@ def spmm_ell(
     x_p = _pad_to(_pad_to(x, TILE_C, 1), 8, 0)
     Rp, Kp = data_p.shape
     Np, Cp = x_p.shape
-    grid = (Rp // TILE_R_MM, Cp // TILE_C)
+    grid = (num_row_tiles(R, TILE_R_MM), Cp // TILE_C)
+    in_specs = [
+        pl.BlockSpec((TILE_R_MM, Kp), lambda i, c: (i, 0)),
+        pl.BlockSpec((TILE_R_MM, Kp), lambda i, c: (i, 0)),
+        pl.BlockSpec((Np, TILE_C), lambda i, c: (0, c)),
+    ]
+    if tile_mask is None:
+        kernel, args = _spmm_ell_kernel, (data_p, cols_p, x_p)
+    else:
+        mask = _check_mask(tile_mask, grid[0])
+        kernel = _spmm_ell_masked_kernel
+        in_specs = [pl.BlockSpec((1,), lambda i, c: (i,))] + in_specs
+        args = (mask, data_p, cols_p, x_p)
     out = pl.pallas_call(
-        _spmm_ell_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((TILE_R_MM, Kp), lambda i, c: (i, 0)),
-            pl.BlockSpec((TILE_R_MM, Kp), lambda i, c: (i, 0)),
-            pl.BlockSpec((Np, TILE_C), lambda i, c: (0, c)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((TILE_R_MM, TILE_C), lambda i, c: (i, c)),
         out_shape=jax.ShapeDtypeStruct((Rp, Cp), data.dtype),
         interpret=interpret,
-    )(data_p, cols_p, x_p)
+    )(*args)
     return out[:R, :C]

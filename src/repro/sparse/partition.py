@@ -47,6 +47,10 @@ class SpmvPartition:
     diag: EllBlock  # cols index into the rank's own v slice [0, L)
     off: EllBlock  # cols index into the canonical halo buffer [0, H)
     halo_width: int
+    #: structural off-rank nonzeros per row ``[nranks * L]`` -- the
+    #: interior/boundary classifier for split-phase compute (a row with 0
+    #: has a pure-padding off-ELL row, including explicitly stored zeros)
+    off_row_nnz: np.ndarray
 
     @property
     def n(self) -> int:
@@ -98,6 +102,7 @@ def partition_csr(matrix: CSRMatrix, topo: PodTopology) -> SpmvPartition:
     diag_cols = np.zeros((g, L, kd), dtype=np.int32)
     off_data = np.zeros((g, L, ko), dtype=np.float32)
     off_cols = np.zeros((g, L, ko), dtype=np.int32)
+    off_row_nnz = np.zeros(g * L, dtype=np.int64)
     for r in range(g):
         for li in range(L):
             cols, vals = matrix.row(r * L + li)
@@ -112,6 +117,7 @@ def partition_csr(matrix: CSRMatrix, topo: PodTopology) -> SpmvPartition:
                     off_data[r, li, oi] = vv
                     off_cols[r, li, oi] = halo_pos[r][(o, int(c) - o * L)]
                     oi += 1
+            off_row_nnz[r * L + li] = oi
 
     return SpmvPartition(
         topo=topo,
@@ -120,4 +126,5 @@ def partition_csr(matrix: CSRMatrix, topo: PodTopology) -> SpmvPartition:
         diag=EllBlock(data=diag_data.reshape(g * L, kd), cols=diag_cols.reshape(g * L, kd)),
         off=EllBlock(data=off_data.reshape(g * L, ko), cols=off_cols.reshape(g * L, ko)),
         halo_width=H,
+        off_row_nnz=off_row_nnz,
     )

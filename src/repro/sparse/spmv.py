@@ -15,6 +15,30 @@ Multi-vector products (``V: [nranks, L, k]``) are first-class: one exchange
 moves all ``k`` columns under the single cached plan and one fused blocked-ELL
 SpMM replaces the per-column Python loop (:meth:`DistributedSpMV.matmat`).
 
+``overlap=True`` replaces the barrier step with the split-phase pipeline
+(paper §4.6 closing discussion: hide inter-node latency behind on-node work):
+
+    handle = exchange.start(v)   # inter-pod phase in flight; on-pod done
+    w_diag = A_diag @ v_local    # halo-independent: every row tile overlaps
+    halo   = handle.finish()
+    w_off  = A_off @ halo        # boundary row tiles only
+    w      = w_diag + w_off
+
+The boundary row set -- rows whose off-rank ELL row holds a *stored* entry
+(structural ``off_row_nnz``, value-independent) -- comes from
+:func:`repro.core.split_plan.split_rows` at kernel row-tile granularity;
+interior tiles' off-block is pure padding and is skipped outright.  (Note
+the off-rank block covers *all* non-owned columns, on-pod and inter-pod
+alike, so even rows that only read on-pod neighbours count as boundary and
+wait for ``finish()``.)  Both passes run the same tile-masked blocked-ELL
+kernel, so with the Pallas kernels (the default) the overlapped result is
+bit-identical to the barrier result for every strategy; the jnp-oracle
+flavor (``use_pallas=False``) agrees to ~1 ulp because XLA fuses the
+barrier program's two reductions.  Finite inputs are assumed, as everywhere
+in the ELL layout: a padding slot computes ``0 * x[0]``, so a non-finite
+value in slot 0 would poison padded rows in the barrier path but not in
+the skipped interior tiles.
+
 The local-compute programs are compiled once per
 ``(pattern fingerprint, payload width k, kernel flavor, mesh)`` into a
 module-level LRU shared with the exchange plan/executor caches -- inspect via
@@ -40,7 +64,9 @@ from repro.compat import shard_map
 from repro.comm.topology import WORLD_AXES, PodTopology, make_exchange_mesh
 from repro.core.advisor import advise
 from repro.core.perfmodel import Strategy, Transport
+from repro.core.split_plan import RowPhaseSplit, split_rows
 from repro.kernels import ref as kref
+from repro.kernels.spmv_ell import TILE_R, TILE_R_MM
 from repro.kernels.spmv_ell import spmm_ell as spmm_ell_kernel
 from repro.kernels.spmv_ell import spmv_ell as spmv_ell_kernel
 from repro.sparse.matrices import CSRMatrix
@@ -117,6 +143,57 @@ def _compute_program(
     )
 
 
+def _phase_program(
+    fingerprint: str,
+    mesh: jax.sharding.Mesh,
+    use_pallas: bool,
+    width: Optional[int],
+):
+    """Build (or fetch) the tile-masked one-block program of the overlapped
+    local compute: ``x, (data, cols), masks -> block @ x`` on active tiles.
+
+    The split-phase pipeline runs it twice per step: once for the
+    halo-independent diag block (every row tile, while the inter-node
+    exchange is in flight) and once for the halo-dependent off block after
+    ``handle.finish()``, masked to the boundary row tiles (an interior
+    tile's off-block rows are pure padding, so skipping them changes
+    nothing).  Both runs use the SAME blocked-ELL kernel as the barrier
+    path and the final ``diag + off`` add matches the barrier program's
+    summation, so the overlapped result is bit-identical to it with the
+    Pallas kernels (the jnp oracle agrees to ~1 ulp; see module docstring).
+    """
+    key = (fingerprint, width, use_pallas, "phase", comm_strategies._mesh_key(mesh))
+
+    def build():
+        if width is None:
+            def local(data, cols, x, tiles, rows):
+                if use_pallas:
+                    return spmv_ell_kernel(data, cols, x, interpret=True, tile_mask=tiles)
+                return kref.spmv_ell_masked(data, cols, x, rows)
+        else:
+            def local(data, cols, x, tiles, rows):
+                if use_pallas:
+                    return spmm_ell_kernel(data, cols, x, interpret=True, tile_mask=tiles)
+                return kref.spmm_ell_masked(data, cols, x, rows)
+
+        def compute(x, data, cols, tiles, rows):
+            return local(data[0], cols[0], x[0], tiles[0], rows[0])[None]
+
+        return jax.jit(
+            shard_map(
+                compute,
+                mesh=mesh,
+                in_specs=(P(WORLD_AXES),) * 5,
+                out_specs=P(WORLD_AXES),
+                check_vma=False,
+            )
+        )
+
+    return comm_strategies.compute_cached(
+        _COMPUTE_CACHE, key, COMPUTE_CACHE_MAX, build
+    )
+
+
 @dataclasses.dataclass
 class DistributedSpMV:
     """A compiled distributed SpMV/SpMM for one matrix, topology and strategy.
@@ -125,6 +202,28 @@ class DistributedSpMV:
     the advisor when ``strategy="auto"`` -- larger widths amortize per-message
     latency and can flip the advised strategy into the bandwidth-bound regime.
     Any width can still be executed regardless of the advised-time value.
+
+    ``overlap=True`` switches ``__call__``/:meth:`matmat` to the split-phase
+    pipeline: the exchange runs as ``start()``/``finish()``
+    (:meth:`repro.comm.strategies.IrregularExchange.start`), the whole
+    halo-independent diag-block product computes while the inter-node phase
+    is in flight, and only the boundary row tiles' off-block product (see
+    :func:`repro.core.split_plan.split_rows`) runs after ``finish()``.
+    Results are bit-compatible with the barrier path for every strategy.
+
+    Example (needs >= ``topo.nranks`` devices, e.g. via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)::
+
+        import numpy as np
+        from repro.comm import PodTopology
+        from repro.sparse import build, thermal_like
+
+        A = thermal_like(256, np.random.default_rng(0))
+        topo = PodTopology(npods=2, ppn=4)
+        sp = build(A, topo, strategy="auto", payload_width=8, overlap=True)
+
+        V = np.ones((A.n, 8), np.float32)          # 8 right-hand sides
+        W = sp.matmat(V.reshape(topo.nranks, -1, 8))  # ONE exchange, overlapped
     """
 
     partition: SpmvPartition
@@ -134,6 +233,7 @@ class DistributedSpMV:
     mesh: Optional[jax.sharding.Mesh] = None
     fuse_program: bool = True
     payload_width: int = 1
+    overlap: bool = False
 
     def __post_init__(self) -> None:
         topo = self.partition.topo
@@ -177,14 +277,72 @@ class DistributedSpMV:
         # re-derive the (fingerprint, k, mesh) key per call
         self._mm_programs: dict = {}
 
+        self._row_splits: dict = {}
+        if self.overlap:
+            self._masks_v = self._phase_masks(self.row_split, L)
+            self._masks_mm = self._phase_masks(self.row_split_mm, L)
+            self._phase_fn = _phase_program(
+                self._fingerprint, self.mesh, self.use_pallas, None
+            )
+            self._mm_phase_programs: dict = {}
+
+    def _row_split(self, tile_rows: int) -> RowPhaseSplit:
+        """Interior/boundary row split (the overlap enabler), lazily built.
+
+        Classification is *structural*: a row is boundary iff its off-rank
+        ELL row holds at least one stored entry (``off_row_nnz > 0``), so an
+        explicitly stored zero still counts as a halo dependency and the
+        split never depends on matrix values.
+        """
+        split = self._row_splits.get(tile_rows)
+        if split is None:
+            g, L = self.partition.topo.nranks, self.partition.rows_per_rank
+            halo_dep = self.partition.off_row_nnz.reshape(g, L) > 0
+            split = self._row_splits[tile_rows] = split_rows(halo_dep, tile_rows)
+        return split
+
+    @property
+    def row_split(self) -> RowPhaseSplit:
+        """Row split at the SpMV kernel's tile size."""
+        return self._row_split(TILE_R)
+
+    @property
+    def row_split_mm(self) -> RowPhaseSplit:
+        """Row split at the SpMM kernel's tile size."""
+        return self._row_split(TILE_R_MM)
+
+    @staticmethod
+    def _phase_masks(split: RowPhaseSplit, L: int):
+        """Device arrays for one tile size: the all-tiles mask pair (the
+        diag pass) and the boundary mask pair (the off pass), each as
+        (tile mask, tile-expanded row mask)."""
+        g, ntiles = split.interior_tiles.shape
+        bnd = split.boundary_tiles
+        bnd_rows = np.repeat(bnd, split.tile_rows, axis=1)[:, :L]
+        return (
+            jnp.ones((g, ntiles), np.int32),
+            jnp.ones((g, L), bool),
+            jnp.asarray(bnd.astype(np.int32)),
+            jnp.asarray(bnd_rows),
+        )
+
     # ------------------------------------------------------------------
     def __call__(self, v: jax.Array) -> jax.Array:
         """``v [nranks, L] -> w [nranks, L]``; a trailing feature dim
         (``[nranks, L, k]``) dispatches to :meth:`matmat`."""
         if v.ndim == 3:
             return self.matmat(v)
-        halo = self.exchange(v)
-        return self._compute(v, halo, *self._blocks)
+        if not self.overlap:
+            halo = self.exchange(v)
+            return self._compute(v, halo, *self._blocks)
+        all_tiles, all_rows, bnd_tiles, bnd_rows = self._masks_v
+        handle = self.exchange.start(v)
+        # the whole halo-independent diag block runs while the inter-pod
+        # phase is in flight; only boundary tiles' off-block waits on it
+        w_diag = self._phase_fn(v, *self._blocks[:2], all_tiles, all_rows)
+        halo = handle.finish()
+        w_off = self._phase_fn(halo, *self._blocks[2:], bnd_tiles, bnd_rows)
+        return w_diag + w_off
 
     def matmat(self, V: jax.Array) -> jax.Array:
         """``V [nranks, L, k] -> W [nranks, L, k]`` under ONE exchange.
@@ -193,18 +351,32 @@ class DistributedSpMV:
         (:meth:`repro.comm.strategies.IrregularExchange.__call__`) and the
         local compute is one fused blocked-ELL SpMM per block -- no Python
         loop over columns.  The compiled program is cached per
-        ``(pattern fingerprint, k)``.
+        ``(pattern fingerprint, k)``.  With ``overlap=True`` the exchange is
+        split-phase and the diag-block SpMM computes during the inter-node
+        phase.
         """
         if V.ndim != 3:
             raise ValueError(f"matmat expects [nranks, L, k], got {tuple(V.shape)}")
-        halo = self.exchange(V)
         k = int(V.shape[2])
-        fn = self._mm_programs.get(k)
+        if not self.overlap:
+            halo = self.exchange(V)
+            fn = self._mm_programs.get(k)
+            if fn is None:
+                fn = self._mm_programs[k] = _compute_program(
+                    self._fingerprint, self.mesh, self.use_pallas, k
+                )
+            return fn(V, halo, *self._blocks)
+        fn = self._mm_phase_programs.get(k)
         if fn is None:
-            fn = self._mm_programs[k] = _compute_program(
+            fn = self._mm_phase_programs[k] = _phase_program(
                 self._fingerprint, self.mesh, self.use_pallas, k
             )
-        return fn(V, halo, *self._blocks)
+        all_tiles, all_rows, bnd_tiles, bnd_rows = self._masks_mm
+        handle = self.exchange.start(V)
+        w_diag = fn(V, *self._blocks[:2], all_tiles, all_rows)
+        halo = handle.finish()
+        w_off = fn(halo, *self._blocks[2:], bnd_tiles, bnd_rows)
+        return w_diag + w_off
 
     def matmat_looped(self, V: jax.Array) -> jax.Array:
         """Per-column baseline: ``k`` exchanges + ``k`` local SpMVs.

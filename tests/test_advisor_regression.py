@@ -9,7 +9,19 @@ batched SpMM path exists to exploit.
 
 import pytest
 
-from repro.core import advise, advise_stats, figure43_pattern
+from repro.core import (
+    MODELED_PAIRS,
+    ComputeProfile,
+    Strategy,
+    Transport,
+    advise,
+    advise_stats,
+    figure43_pattern,
+    get_machine,
+    predict,
+    predict_overlapped,
+    predict_phases,
+)
 
 #: (machine, (msg bytes, inter-node msgs, dest nodes), k) -> advised key.
 #: Recorded from the models at pin time; a change here is a deliberate
@@ -49,6 +61,100 @@ def test_advised_strategy_pinned(machine, scenario, k, expected):
         f"advisor drift for {machine}/{scenario}/k={k}: "
         f"got {adv.best.key}, pinned {expected}"
     )
+
+
+# ---------------------------------------------------------------------------
+# Overlap-aware crossovers (split-phase pipeline, PR 3)
+# ---------------------------------------------------------------------------
+
+#: (machine, scenario, k, compute multiple of the base winner's comm time,
+#:  interior fraction) -> advised key.  The intended physics: light compute
+#: -> the comm-optimal strategy wins and overlapping it is free; heavy
+#: interior compute -> Standard+overlap wins because its entire (large)
+#: inter-node phase hides behind compute while node-aware strategies keep
+#: paying their unhideable on-node phases; low interior fraction -> the
+#: node-aware winner holds.
+OVERLAP_PINS = [
+    ("lassen", (2048, 256, 16), 1, 0.5, 0.9, "two_step/device_aware+overlap"),
+    ("lassen", (2048, 256, 16), 1, 2.0, 0.9, "standard/staged_host+overlap"),
+    ("lassen", (2048, 256, 16), 1, 2.0, 0.2, "two_step/device_aware+overlap"),
+    ("lassen", (8192, 64, 16), 4, 0.5, 0.9, "three_step/device_aware+overlap"),
+    ("lassen", (8192, 64, 16), 4, 2.0, 0.9, "standard/staged_host+overlap"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, 0.5, 0.9, "split_dd/staged_host+overlap"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, 2.0, 0.9, "standard/staged_host+overlap"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, 2.0, 0.2, "split_dd/staged_host+overlap"),
+]
+
+
+@pytest.mark.parametrize("machine,scenario,k,mult,frac,expected", OVERLAP_PINS)
+def test_overlap_advised_strategy_pinned(machine, scenario, k, mult, frac, expected):
+    pat = figure43_pattern(*scenario)
+    base = advise(pat, machine=machine, payload_width=k)
+    profile = ComputeProfile.from_fraction(base.best.predicted_time * mult, frac)
+    adv = advise(pat, machine=machine, payload_width=k, compute=profile)
+    assert adv.best.key == expected, (
+        f"overlap advisor drift for {machine}/{scenario}/k={k}/"
+        f"compute={mult}x/frac={frac}: got {adv.best.key}, pinned {expected}"
+    )
+
+
+def test_overlap_never_slower_than_barrier():
+    """For every pair the overlapped variant is <= its barrier variant:
+    ``local + max(inter, t_int) + t_bnd <= local + inter + t_int + t_bnd``."""
+    pat = figure43_pattern(8192, 64, 16)
+    profile = ComputeProfile.from_fraction(1e-3, 0.8)
+    adv = advise(pat, machine="lassen", compute=profile)
+    seen = 0
+    for r in adv.ranked:
+        if r.overlap:
+            continue
+        ov = adv.time_for(r.strategy, r.transport, overlap=True)
+        assert ov <= r.predicted_time * (1 + 1e-12)
+        seen += 1
+    assert seen >= 6
+
+
+def test_predict_phases_sums_to_predict():
+    """The (local, inter) factoring must reproduce Table 6 exactly."""
+    pairs = MODELED_PAIRS + [
+        (Strategy.TWO_STEP_ONE, Transport.STAGED_HOST),
+        (Strategy.TWO_STEP_ONE, Transport.DEVICE_AWARE),
+    ]
+    for machine in ("lassen", "tpu_v5e_pod"):
+        m = get_machine(machine)
+        for scenario in [(2048, 256, 16), (512, 64, 4), (65536, 32, 4)]:
+            stats = figure43_pattern(*scenario).stats()
+            for s, tr in pairs:
+                ph = predict_phases(m, s, tr, stats)
+                assert ph.total == pytest.approx(predict(m, s, tr, stats), rel=1e-12)
+
+
+def test_predict_overlapped_saturates():
+    """Once interior compute exceeds the inter-node phase, more interior
+    compute raises T by exactly the excess (the comm is fully hidden)."""
+    m = get_machine("lassen")
+    stats = figure43_pattern(8192, 64, 16).stats()
+    ph = predict_phases(m, Strategy.THREE_STEP, Transport.DEVICE_AWARE, stats)
+    big = 10.0 * ph.inter
+    t1 = predict_overlapped(m, Strategy.THREE_STEP, Transport.DEVICE_AWARE, stats, big, 0.0)
+    t2 = predict_overlapped(m, Strategy.THREE_STEP, Transport.DEVICE_AWARE, stats, 2 * big, 0.0)
+    assert t2 - t1 == pytest.approx(big, rel=1e-9)
+    with pytest.raises(ValueError):
+        predict_overlapped(m, Strategy.THREE_STEP, Transport.DEVICE_AWARE, stats, -1.0, 0.0)
+
+
+def test_overlap_ranking_superset_and_flag():
+    """With a compute profile every (strategy, transport) appears exactly
+    twice -- overlap on and off -- and keys carry the +overlap suffix."""
+    pat = figure43_pattern(2048, 32, 4)
+    base = advise(pat, machine="tpu_v5e_pod")
+    adv = advise(
+        pat, machine="tpu_v5e_pod", compute=ComputeProfile.from_fraction(1e-4, 0.5)
+    )
+    assert len(adv.ranked) == 2 * len(base.ranked)
+    overlapped = {r.key for r in adv.ranked if r.overlap}
+    barrier = {r.key for r in adv.ranked if not r.overlap}
+    assert {k + "+overlap" for k in barrier} == overlapped
 
 
 def test_payload_width_flips_exist():

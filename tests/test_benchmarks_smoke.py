@@ -43,10 +43,19 @@ def test_benchmarks_run_smoke():
         "fig4.2/audikw_like/",  # validation
         "fig5.1/thermal_like/",  # spmv
         "kswp/8r/k4",  # spmv: SpMM k-sweep (smoke topology)
+        "overlap/2p/f0.25/k1",  # overlap: split-phase sweep
+        "overlap/2p/f0.75/k4",
         "planning/8r/",  # planning
         "kernel/spmm_ell/interpret/k4",  # kernels
     ):
         assert marker in out, f"missing benchmark row {marker!r}\n{out[-4000:]}"
+
+    # the overlap sweep's acceptance property in miniature: at interior
+    # fraction 0.75 / k=4 the overlap-aware model must predict a win (the
+    # values are model outputs, not timings, so this is deterministic)
+    m = re.search(r"overlap/2p/f0\.75/k4,.*model_win=([0-9.]+)x", out)
+    assert m, f"overlap row unparsable\n{out[-2000:]}"
+    assert float(m.group(1)) > 1.0, f"no modeled overlap win: {m.group(0)}"
 
     # the k-sweep's acceptance property in miniature: by k=4 the fused SpMM
     # path must beat k independent exchange+SpMV rounds (the margin is ~k on

@@ -1,0 +1,68 @@
+"""Tier-1 guard for the example scripts (mirrors test_benchmarks_smoke).
+
+Examples are not imported by the library, so without this test they rot
+silently.  Every file in ``examples/`` is executed in a subprocess with
+smoke-sized arguments; a new example file is picked up automatically (and
+runs with no arguments unless registered in ``ARGS``).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+EXAMPLES = os.path.join(REPO, "examples")
+
+#: smoke-sized arguments per example (keep each file under ~1 minute)
+ARGS = {
+    "quickstart.py": [],
+    "strategy_advisor.py": ["--messages", "32", "--nodes", "4", "--payload-width", "8"],
+    "serve_lm.py": ["--batch", "1", "--prompt-len", "8", "--gen", "3"],
+    "train_lm.py": ["--steps", "2", "--ckpt", "/tmp/repro_examples_smoke_ckpt"],
+}
+
+#: a line that must appear in stdout when the example succeeded
+EXPECT = {
+    "quickstart.py": "split",  # strategy table printed after execution
+    "strategy_advisor.py": "best strategy",
+    "serve_lm.py": "decode",
+    "train_lm.py": "loss:",
+}
+
+EXAMPLE_FILES = sorted(
+    f for f in os.listdir(EXAMPLES) if f.endswith(".py") and not f.startswith("_")
+)
+
+
+def test_every_example_is_covered():
+    """New examples must at least run; known ones must have smoke args."""
+    assert EXAMPLE_FILES, "examples/ directory is empty?"
+    assert set(ARGS) <= set(EXAMPLE_FILES), "ARGS lists a deleted example"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fname", EXAMPLE_FILES)
+def test_example_runs(fname):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # examples manage their own device counts
+    proc = subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES, fname)] + ARGS.get(fname, []),
+        capture_output=True,
+        text=True,
+        timeout=600,
+        cwd=REPO,
+        env=env,
+    )
+    assert proc.returncode == 0, (
+        f"{fname} failed (rc={proc.returncode})\n--- stdout ---\n"
+        f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}"
+    )
+    marker = EXPECT.get(fname)
+    if marker:
+        assert marker in proc.stdout, (
+            f"{fname}: expected {marker!r} in output\n{proc.stdout[-2000:]}"
+        )

@@ -98,3 +98,57 @@ def test_invalid_cap_rejected():
     pat = CommPattern.from_messages(4, 2, [(0, 2, 10)])
     with pytest.raises(ValueError):
         build_split_plan(pat, message_cap=0)
+
+
+# ---------------------------------------------------------------------------
+# Cap-resolution edge cases (previously only hit through random patterns)
+# ---------------------------------------------------------------------------
+
+
+def test_cap_larger_than_total_volume():
+    """Cap >> everything: lines 12-13 conglomerate to one chunk per origin
+    node and the effective cap collapses to the largest origin volume."""
+    pat = CommPattern.from_messages(
+        12, 4,
+        [(0, 4, 100), (1, 5, 50), (8, 6, 30), (9, 7, 20)],  # node0+node2 -> node1
+    )
+    plan = build_split_plan(pat, message_cap=10**9)
+    assert len(plan.chunks) == 2  # one per origin node (0 and 2)
+    assert {(c.origin_node, c.nbytes) for c in plan.chunks} == {(0, 150), (2, 50)}
+    assert plan.effective_cap[1] == 150  # max origin volume, not the user cap
+    # conglomerated chunks need no inter-node splitting of any message
+    for c in plan.chunks:
+        for msg, off, length in c.parts:
+            assert (off, length) == (0, msg.nbytes)
+
+
+def test_single_node_world_has_no_chunks():
+    """All traffic on one node: Algorithm 1 degenerates to local_comm."""
+    pat = CommPattern.from_messages(4, 4, [(0, 1, 64), (2, 3, 32), (1, 2, 8)])
+    plan = build_split_plan(pat, message_cap=16)
+    assert plan.chunks == ()
+    assert plan.effective_cap == {}
+    assert plan.total_inter_node_bytes() == 0
+    assert sum(m.nbytes for m in plan.local_messages) == 104
+    assert plan.send_redistribution() == [] and plan.recv_redistribution() == []
+
+
+def test_ppn1_world_assignment():
+    """PPN=1: every node is one rank, so line 18's balancing must pin the
+    sender/receiver to the only rank on each node and still split by cap."""
+    pat = CommPattern.from_messages(3, 1, [(0, 1, 100), (2, 1, 40)])
+    plan = build_split_plan(pat, message_cap=30)
+    # total 140 / cap 30 > ppn=1 -> cap raised to ceil(140/1) = 140 (line 16)
+    assert plan.effective_cap[1] == 140
+    assert all(c.receiver == 1 for c in plan.chunks)
+    for c in plan.chunks:
+        assert c.sender == c.origin_node  # rank == node when ppn == 1
+    assert plan.total_inter_node_bytes() == 140
+
+
+def test_ppn1_cap_not_raised_when_chunks_fit():
+    """PPN=1 with cap >= total: conglomeration branch, one chunk per origin."""
+    pat = CommPattern.from_messages(2, 1, [(0, 1, 10)])
+    plan = build_split_plan(pat, message_cap=1000)
+    assert len(plan.chunks) == 1
+    assert plan.chunks[0].sender == 0 and plan.chunks[0].receiver == 1

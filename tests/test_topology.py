@@ -1,0 +1,75 @@
+"""Unit tests for the pod topology helpers (previously only exercised
+indirectly through the planners)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.comm.topology import (
+    LOCAL_AXIS,
+    POD_AXIS,
+    WORLD_AXES,
+    PodTopology,
+    make_exchange_mesh,
+)
+
+
+def test_rank_layout_roundtrip():
+    topo = PodTopology(npods=3, ppn=4)
+    assert topo.nranks == 12
+    for r in range(topo.nranks):
+        p, l = topo.pod_of(r), topo.local_of(r)
+        assert 0 <= p < topo.npods and 0 <= l < topo.ppn
+        assert topo.rank_of(p, l) == r
+    # row-major over (pod, local): rank 0..ppn-1 on pod 0, etc.
+    assert [topo.pod_of(r) for r in range(12)] == [0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]
+    assert [topo.local_of(r) for r in range(4)] == [0, 1, 2, 3]
+
+
+@pytest.mark.parametrize("npods,ppn", [(1, 1), (1, 8), (5, 1), (3, 2)])
+def test_rank_layout_degenerate_shapes(npods, ppn):
+    topo = PodTopology(npods=npods, ppn=ppn)
+    seen = {topo.rank_of(p, l) for p in range(npods) for l in range(ppn)}
+    assert seen == set(range(topo.nranks))
+
+
+def test_agent_local_in_range_and_spreads():
+    """The 3-Step agent assignment stays in [0, ppn) and, per source pod,
+    spreads different destination pods over different local ranks."""
+    topo = PodTopology(npods=4, ppn=4)
+    for q in range(topo.npods):
+        agents = [topo.agent_local(q, p) for p in range(topo.npods) if p != q]
+        assert all(0 <= a < topo.ppn for a in agents)
+        assert len(set(agents)) == len(agents)  # distinct while npods <= ppn+1
+
+
+def test_agent_local_wraps_when_more_pods_than_ppn():
+    topo = PodTopology(npods=5, ppn=2)
+    for q in range(topo.npods):
+        for p in range(topo.npods):
+            assert 0 <= topo.agent_local(q, p) < topo.ppn
+
+
+def test_pod_shift_rounds():
+    assert PodTopology(npods=4, ppn=2).pod_shift_rounds() == [1, 2, 3]
+    assert PodTopology(npods=1, ppn=4).pod_shift_rounds() == []
+    # every ordered pod pair is covered exactly once across the shifts
+    topo = PodTopology(npods=4, ppn=1)
+    pairs = {
+        (q, (q + d) % topo.npods)
+        for d in topo.pod_shift_rounds()
+        for q in range(topo.npods)
+    }
+    assert pairs == {(a, b) for a in range(4) for b in range(4) if a != b}
+
+
+def test_make_exchange_mesh_single_device():
+    mesh = make_exchange_mesh(PodTopology(npods=1, ppn=1))
+    assert mesh.axis_names == WORLD_AXES == (POD_AXIS, LOCAL_AXIS)
+    assert mesh.devices.shape == (1, 1)
+
+
+def test_make_exchange_mesh_rejects_oversized_topology():
+    need = jax.device_count() + 1
+    with pytest.raises(ValueError, match="devices"):
+        make_exchange_mesh(PodTopology(npods=need, ppn=1))
