@@ -1,0 +1,114 @@
+"""Krylov solver sweep: matrix regime x strategy x overlap (paper §5 as a
+workload, §4.6 closing discussion as the model).
+
+For each of the three communication regimes (`audikw_like` /
+`thermal_like` / `random_block`, SPD-ified by
+``repro.solve.problems.spd_system``), runs CG on the device executor
+(:class:`repro.sparse.spmv.DistributedSpMV`) under every strategy, barrier
+and split-phase, with dot products through the node-aware hierarchical
+reductions (:class:`repro.solve.DeviceReductions`).  Reported per row:
+
+* ``us_per_iter`` -- measured wall time per CG iteration (host-device
+  collectives complete synchronously, so this bounds pipeline overhead, not
+  latency hiding);
+* ``iters`` / ``relres`` -- convergence trajectory (identical iteration
+  counts across strategies is the correctness property; asserted before
+  timing within each overlap mode, where results are bitwise equal);
+* ``setup_s`` / ``periter_s`` / ``total_s`` -- the iteration-amortized model
+  (:func:`repro.core.advisor.advise_solver`) for this strategy at the
+  measured iteration count;
+* one ``.../advisor`` row per regime showing the amortization flip: the
+  modeled best strategy for a 1-iteration exchange vs the full solve.
+
+``main(smoke=True)`` shrinks matrices and the strategy set so
+``benchmarks/run.py --smoke`` keeps the section alive in tier-1.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_with_devices
+
+CODE = """
+import time, numpy as np
+from repro.comm.topology import PodTopology
+from repro.core import Strategy, Transport, advise_solver
+from repro.solve import DeviceReductions, REDUCTIONS_PER_ITER, cg, spd_system
+from repro.sparse import DistributedSpMV, partition_csr
+from repro.sparse.matrices import GENERATORS
+
+EXEC_TO_MODEL = {
+    "standard": Strategy.STANDARD, "two_step": Strategy.TWO_STEP,
+    "three_step": Strategy.THREE_STEP, "split": Strategy.SPLIT_DD,
+}
+
+topo = PodTopology(npods=2, ppn=4) if SMOKE else PodTopology(npods=4, ppn=4)
+n = 144 if SMOKE else 1024
+strategies = ("standard", "two_step", "split") if SMOKE else (
+    "standard", "two_step", "three_step", "split")
+tol = 1e-6
+rng = np.random.default_rng(0)
+red = DeviceReductions(topo)  # one jitted dot program serves every regime
+
+for regime in ("audikw_like", "thermal_like", "random_block"):
+    A = spd_system(GENERATORS[regime](n, rng))
+    part = partition_csr(A, topo)
+    b = rng.normal(size=(topo.nranks, part.rows_per_rank)).astype(np.float32)
+    pat = part.pattern.to_comm_pattern()
+    rows = []
+    for strat in strategies:
+        for ov in (False, True):
+            op = DistributedSpMV(part, strategy=strat, use_pallas=False, overlap=ov)
+            res = cg(op, b, tol=tol, reductions=red)  # warm caches + jits
+            t0 = time.perf_counter()
+            res = cg(op, b, tol=tol, reductions=red)
+            wall = time.perf_counter() - t0
+            rows.append((strat, ov, res))
+            us = wall / max(res.iterations, 1) * 1e6
+            adv = advise_solver(
+                pat, max(res.iterations, 1), machine="tpu_v5e_pod",
+                reductions_per_iter=REDUCTIONS_PER_ITER["cg"],
+            )
+            model = next(
+                r for r in adv.ranked
+                if r.strategy is EXEC_TO_MODEL[strat]
+                and r.transport is Transport.STAGED_HOST and not r.overlap
+            )
+            print(
+                f"RESULT,solver/{regime}/{strat}/{'ov1' if ov else 'ov0'},"
+                f"{us:.1f},iters={res.iterations} conv={int(res.converged)} "
+                f"relres={res.final_residual:.2e} "
+                f"setup_s={model.setup_time:.3e} periter_s={model.iter_time:.3e} "
+                f"total_s={model.total_time:.3e}"
+            )
+    # parity: within one overlap mode every strategy's trajectory is
+    # bitwise equal (the halo buffer is canonical); assert it
+    for mode in (False, True):
+        group = [r for s, o, r in rows if o is mode]
+        assert all(r.converged for r in group), f"{regime} non-convergence"
+        assert all(r.residuals == group[0].residuals for r in group), (
+            f"{regime} history drift across strategies (overlap={mode})")
+    iters = rows[0][2].iterations
+    best1 = advise_solver(pat, 1, machine="tpu_v5e_pod").best.key
+    bestN = advise_solver(
+        pat, iters, machine="tpu_v5e_pod",
+        reductions_per_iter=REDUCTIONS_PER_ITER["cg"]).best.key
+    print(
+        f"RESULT,solver/{regime}/advisor,0.0,"
+        f"best@1={best1} best@{iters}={bestN} parity=ok"
+    )
+"""
+
+
+def main(smoke: bool = False) -> None:
+    print("name,us_per_call,derived")
+    devices = 8 if smoke else 16
+    out = run_with_devices(f"SMOKE = {smoke!r}\n" + CODE, devices=devices)
+    for line in out.splitlines():
+        if line.startswith("RESULT,"):
+            print(line[len("RESULT,"):])
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -10,6 +10,7 @@ Sections:
   validation  -- paper Figure 4.2 (model vs measured SpMV exchange)
   spmv        -- paper Figure 5.1 (SpMV strategies) + SpMM k-sweep
   overlap     -- split-phase overlap sweep (interior fraction x pods x k)
+  solver      -- CG workload sweep (regime x strategy x overlap + amortized model)
   planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
@@ -35,6 +36,7 @@ def main() -> None:
         bench_params,
         bench_planning,
         bench_roofline,
+        bench_solver,
         bench_spmv,
     )
 
@@ -44,6 +46,7 @@ def main() -> None:
         "validation": bench_model_validation.main,
         "spmv": bench_spmv.main,
         "overlap": bench_overlap.main,
+        "solver": bench_solver.main,
         "planning": bench_planning.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,

@@ -29,15 +29,33 @@ class Compressor:
         return float(2 ** (self.bits - 1) - 1)
 
     def compress(self, x: jnp.ndarray, outer_axis: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Quantize ``x`` with a scale agreed over ``outer_axis`` via pmax."""
+        """Quantize ``x`` with a scale agreed over ``outer_axis`` via pmax.
+
+        The returned ``scale`` keeps ``x``'s floating dtype, so a
+        bfloat16 payload round-trips through :meth:`decompress` as bfloat16
+        (error-feedback residuals must not silently upcast).  The tiny-scale
+        guard against an all-zero shard therefore uses ``finfo(x.dtype)``:
+        the old ``finfo(float32).tiny`` constant promoted the whole
+        ``maximum`` -- and with it ``scale`` -- to float32 for narrower
+        payloads, and for a float16 payload (min normal ~6e-5) a float32
+        tiny would flush to zero inside the payload dtype anyway.
+        """
         amax = jnp.max(jnp.abs(x))
         amax = jax.lax.pmax(amax, outer_axis)
-        scale = jnp.maximum(amax / self.qmax, jnp.finfo(jnp.float32).tiny)
+        scale = jnp.maximum(amax / self.qmax, jnp.finfo(x.dtype).tiny)
         q = jnp.clip(jnp.round(x / scale), -self.qmax, self.qmax).astype(jnp.int8)
         return q, scale
 
     def decompress(self, q_sum: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-        return q_sum.astype(jnp.float32) * scale
+        """Dequantize back to the payload's own dtype (``scale`` carries it).
+
+        The multiply runs at float32-or-wider so the int32 sum stays exact
+        (a bfloat16 product would round ``q_sum`` itself once it exceeds
+        256, e.g. summing near-saturated int8 over many pods) and only the
+        final result rounds to the payload dtype.
+        """
+        wide = jnp.promote_types(scale.dtype, jnp.float32)
+        return (q_sum.astype(wide) * scale.astype(wide)).astype(scale.dtype)
 
     def wire_bytes(self, x: jnp.ndarray) -> int:
         """Bytes this leaf puts on the DCI per hop (vs 4*size uncompressed)."""

@@ -197,6 +197,11 @@ class CacheStats:
     #: keyed by (pattern fingerprint, payload width k, ...))
     compute_hits: int = 0
     compute_misses: int = 0
+    #: split-phase decomposition + jitted-merge cache (``_SPLIT_CACHE``,
+    #: keyed by pattern fingerprint; populated by ``IrregularExchange.start``
+    #: and the solver's overlapped numpy executor)
+    split_hits: int = 0
+    split_misses: int = 0
 
 
 _stats = CacheStats()
@@ -233,6 +238,7 @@ def clear_caches() -> None:
     _stats.plan_hits = _stats.plan_misses = 0
     _stats.exec_hits = _stats.exec_misses = 0
     _stats.compute_hits = _stats.compute_misses = 0
+    _stats.split_hits = _stats.split_misses = 0
 
 
 def _lru_get(cache: OrderedDict, key, max_size: int, build):
@@ -374,14 +380,39 @@ def _build_merge(sp: SplitPhase):
     return merge
 
 
+class _LazyMerge:
+    """Builds the jitted split-phase merge on first call.
+
+    Laziness matters because the jax-free consumers of the split cache
+    (:class:`repro.solve.operator.NumpySpMV`) only need the decomposition;
+    eagerly constructing the merge would transfer its index maps to device
+    for a function they never invoke.
+    """
+
+    __slots__ = ("_sp", "_fn")
+
+    def __init__(self, sp: SplitPhase):
+        self._sp = sp
+        self._fn = None
+
+    def __call__(self, local_out, remote_out):
+        if self._fn is None:
+            self._fn = _build_merge(self._sp)
+        return self._fn(local_out, remote_out)
+
+
 def _split_phase_cached(pattern: ExchangePattern) -> tuple:
     key = pattern.fingerprint()
 
     def build():
         sp = split_phase(pattern)
-        return sp, _build_merge(sp)
+        return sp, _LazyMerge(sp)
 
-    val, _ = _lru_get(_SPLIT_CACHE, key, PLAN_CACHE_MAX, build)
+    val, hit = _lru_get(_SPLIT_CACHE, key, PLAN_CACHE_MAX, build)
+    if hit:
+        _stats.split_hits += 1
+    else:
+        _stats.split_misses += 1
     return val
 
 

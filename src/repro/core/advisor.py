@@ -30,11 +30,13 @@ from typing import List, Optional, Sequence, Tuple
 from repro.core.hardware import MachineParams, get_machine
 from repro.core.patterns import CommPattern
 from repro.core.perfmodel import (
+    MODELED_PAIRS,
     PatternStats,
     Strategy,
     Transport,
     predict_all,
     predict_overlapped,
+    predict_solver,
 )
 
 
@@ -70,18 +72,24 @@ class ComputeProfile:
         )
 
 
-@dataclasses.dataclass(frozen=True)
-class Recommendation:
-    strategy: Strategy
-    transport: Transport
-    predicted_time: float
-    #: True when this entry models the split-phase (overlapped) execution
-    overlap: bool = False
+class _StrategyKey:
+    """Shared ``key`` spelling for per-call and whole-solve recommendations
+    (``strategy/transport`` with a ``+overlap`` suffix) -- one place to keep
+    the format the pinned regression grids assert on."""
 
     @property
     def key(self) -> str:
         base = f"{self.strategy.value}/{self.transport.value}"
         return base + "+overlap" if self.overlap else base
+
+
+@dataclasses.dataclass(frozen=True)
+class Recommendation(_StrategyKey):
+    strategy: Strategy
+    transport: Transport
+    predicted_time: float
+    #: True when this entry models the split-phase (overlapped) execution
+    overlap: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +178,147 @@ def advise_stats(
         for (s, tr, ov), t in sorted(preds.items(), key=lambda kv: kv[1])
     )
     return Advice(machine=m.name, stats=stats, ranked=ranked)
+
+
+# ---------------------------------------------------------------------------
+# Iteration-amortized selection (solver workloads)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverRecommendation(_StrategyKey):
+    """One (strategy, transport, overlap) variant of a whole solve."""
+
+    strategy: Strategy
+    transport: Transport
+    overlap: bool
+    setup_time: float
+    iter_time: float
+    total_time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverAdvice:
+    """Ranked whole-solve recommendations for one pattern on one machine."""
+
+    machine: str
+    stats: PatternStats
+    iters: int
+    ranked: Tuple[SolverRecommendation, ...]
+
+    @property
+    def best(self) -> SolverRecommendation:
+        return self.ranked[0]
+
+    def time_for(
+        self, strategy: Strategy, transport: Transport, overlap: bool = False
+    ) -> float:
+        for r in self.ranked:
+            if (
+                r.strategy is strategy
+                and r.transport is transport
+                and r.overlap == overlap
+            ):
+                return r.total_time
+        raise KeyError((strategy, transport, overlap))
+
+    def table(self) -> str:
+        w = max(len(r.key) for r in self.ranked)
+        lines = [f"{'strategy':<{w}}  setup_s    per_iter_s  total_s"]
+        lines += [
+            f"{r.key:<{w}}  {r.setup_time:.3e}  {r.iter_time:.3e}  {r.total_time:.3e}"
+            for r in self.ranked
+        ]
+        return "\n".join(lines)
+
+
+def advise_solver(
+    stats: PatternStats | CommPattern,
+    iters: int,
+    machine: MachineParams | str = "tpu_v5e_pod",
+    reductions_per_iter: float = 2.0,
+    payload_width: int = 1,
+    compute: Optional[ComputeProfile] = None,
+    include_two_step_one: bool = False,
+    exclude: Sequence[Tuple[Strategy, Transport]] = (),
+) -> SolverAdvice:
+    """Rank strategies for a whole ``iters``-iteration Krylov solve.
+
+    The per-call ranking of :func:`advise` answers "which strategy moves one
+    halo fastest"; a solver re-runs the SAME exchange ``iters`` times, so the
+    question becomes amortized (paper §4.6 closing discussion):
+
+        ``T_total = T_setup + iters * (T_step + reductions_per_iter * T_red)``
+
+    * ``T_setup`` -- :func:`~repro.core.perfmodel.predict_setup`, paid once:
+      node-aware communicator construction is several metadata rounds while
+      standard communication starts almost free, so at small ``iters`` the
+      standard strategy wins patterns it loses per-call;
+    * ``T_step`` -- the Table 6 composite on payload-widened stats, plus the
+      compute profile; with ``compute`` supplied every pair also competes as
+      its split-phase ``+overlap`` variant
+      (:func:`~repro.core.perfmodel.predict_overlapped`);
+    * ``T_red`` -- :func:`~repro.core.perfmodel.predict_reduction`, the
+      node-aware hierarchical scalar all-reduce each dot product costs
+      (``reductions_per_iter``: 2 for CG, 6 for BiCGStab --
+      :data:`repro.solve.krylov.REDUCTIONS_PER_ITER`).
+
+    Doctest (the amortization flip this function exists for)::
+
+        >>> from repro.core import advise_solver, figure43_pattern
+        >>> pat = figure43_pattern(2048, 256, 16)
+        >>> advise_solver(pat, iters=1, machine="lassen").best.key
+        'standard/staged_host'
+        >>> advise_solver(pat, iters=500, machine="lassen").best.key
+        'two_step/device_aware'
+    """
+    if isinstance(stats, CommPattern):
+        stats = stats.stats()
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    m = get_machine(machine) if isinstance(machine, str) else machine
+    wide = stats.widened(payload_width)
+    pairs = list(MODELED_PAIRS)
+    if include_two_step_one:
+        pairs += [
+            (Strategy.TWO_STEP_ONE, Transport.STAGED_HOST),
+            (Strategy.TWO_STEP_ONE, Transport.DEVICE_AWARE),
+        ]
+    recs = []
+    for strategy, transport in pairs:
+        if (strategy, transport) in exclude:
+            continue
+        variants = [(False, 0.0, 0.0)]
+        if compute is not None:
+            variants = [
+                (False, compute.t_interior, compute.t_boundary),
+                (True, compute.t_interior, compute.t_boundary),
+            ]
+        for overlap, t_int, t_bnd in variants:
+            setup, per_iter, total = predict_solver(
+                m,
+                strategy,
+                transport,
+                wide,
+                iters,
+                reductions_per_iter=reductions_per_iter,
+                t_interior=t_int,
+                t_boundary=t_bnd,
+                overlap=overlap,
+                setup_stats=stats,
+            )
+            recs.append(
+                SolverRecommendation(
+                    strategy=strategy,
+                    transport=transport,
+                    overlap=overlap,
+                    setup_time=setup,
+                    iter_time=per_iter,
+                    total_time=total,
+                )
+            )
+    ranked = tuple(sorted(recs, key=lambda r: r.total_time))
+    return SolverAdvice(machine=m.name, stats=wide, iters=iters, ranked=ranked)
 
 
 def advise(

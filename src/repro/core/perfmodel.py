@@ -405,6 +405,117 @@ def predict_overlapped(
     return ph.local + max(ph.inter, t_interior) + t_boundary
 
 
+# ---------------------------------------------------------------------------
+# Iteration-amortized extension (solver workloads)
+# ---------------------------------------------------------------------------
+
+#: metadata-exchange rounds paid once at communicator construction.  The
+#: standard strategy posts its receive lists directly (one round); the
+#: node-aware strategies additionally gather per-process destination lists
+#: on-node and scatter the redistribution maps back (two more rounds --
+#: the communicator-construction phase of §2.3); Split runs Algorithm 1's
+#: chunk-assignment negotiation on top (one more).
+SETUP_META_ROUNDS: Dict[Strategy, int] = {
+    Strategy.STANDARD: 1,
+    Strategy.THREE_STEP: 3,
+    Strategy.TWO_STEP: 3,
+    Strategy.TWO_STEP_ONE: 3,
+    Strategy.SPLIT_MD: 4,
+    Strategy.SPLIT_DD: 4,
+}
+
+
+def _log2ceil(n: int) -> int:
+    return max(1, (max(int(n), 1) - 1).bit_length())
+
+
+def predict_setup(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+) -> float:
+    """One-time communicator-construction cost for a (strategy, transport).
+
+    The paper's closing discussion (and Bienz et al.'s irregular-p2p
+    modeling) notes node-aware strategies only pay off once their setup --
+    exchanging index metadata and building the node communicator -- is
+    amortized over many identical exchanges.  Modeled as:
+
+    * ``SETUP_META_ROUNDS[strategy]`` metadata exchanges costed at the
+      strategy's own Table 6 composite (index lists are 4-byte tokens, the
+      same volume as one ``k=1`` payload), plus
+    * for node-aware strategies, one on-node gather + scatter of the
+      per-process maps (eq. 4.1) and a per-node-pair count agreement over a
+      log-depth inter-node tree.
+
+    Call with **unwidened** stats: metadata volume does not scale with the
+    batched payload width ``k``.
+    """
+    t = SETUP_META_ROUNDS[strategy] * predict(machine, strategy, transport, stats)
+    if strategy is not Strategy.STANDARD:
+        space = Space.GPU if transport is Transport.DEVICE_AWARE else Space.CPU
+        t += 2.0 * t_on(machine, space, stats.s_proc)
+        p = machine.path(Space.CPU, Locality.OFF_NODE, 8.0)
+        t += 2.0 * _log2ceil(stats.num_dest_nodes) * p.alpha
+    return t
+
+
+def predict_reduction(
+    machine: MachineParams,
+    stats: PatternStats,
+    nbytes: float = 8.0,
+) -> float:
+    """Latency of one node-aware hierarchical scalar all-reduce.
+
+    The solver's dot products follow the same hierarchy as the exchange
+    strategies (``repro.comm.hierarchical.dot_hierarchical``): a log-depth
+    on-node tree over the PPN processes, then a log-depth inter-node tree
+    over the destination-node set, then the on-node broadcast back.  The
+    payload is ``nbytes`` (one float64 scalar by default), so every term is
+    latency-bound.  Strategy-independent: it shifts all solver totals
+    equally but keeps per-iteration predictions honest.
+    """
+    p_on = machine.path(Space.CPU, Locality.ON_SOCKET, nbytes)
+    p_off = machine.path(Space.CPU, Locality.OFF_NODE, nbytes)
+    on = 2.0 * _log2ceil(machine.procs_per_node) * (p_on.alpha + p_on.beta * nbytes)
+    off = _log2ceil(stats.num_dest_nodes) * (p_off.alpha + p_off.beta * nbytes)
+    return on + off
+
+
+def predict_solver(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+    iters: int,
+    reductions_per_iter: float = 2.0,
+    t_interior: float = 0.0,
+    t_boundary: float = 0.0,
+    overlap: bool = False,
+    setup_stats: Optional[PatternStats] = None,
+) -> Tuple[float, float, float]:
+    """(setup, per-iteration, total) time of an ``iters``-iteration solve.
+
+    ``total = setup + iters * (T_step + reductions_per_iter * T_red)`` where
+    ``T_step`` is the Table 6 composite plus compute (barrier) or
+    :func:`predict_overlapped` (split-phase), and ``setup`` is
+    :func:`predict_setup` evaluated on ``setup_stats`` (defaults to
+    ``stats``; pass the unwidened stats when ``stats`` is payload-widened).
+    """
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    setup = predict_setup(machine, strategy, transport, setup_stats or stats)
+    if overlap:
+        step = predict_overlapped(
+            machine, strategy, transport, stats, t_interior, t_boundary
+        )
+    else:
+        step = predict(machine, strategy, transport, stats) + t_interior + t_boundary
+    per_iter = step + reductions_per_iter * predict_reduction(machine, stats)
+    return setup, per_iter, setup + iters * per_iter
+
+
 def predict_all(
     machine: MachineParams,
     stats: PatternStats,

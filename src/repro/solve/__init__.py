@@ -1,0 +1,42 @@
+"""Distributed Krylov solver workload over the node-aware exchange.
+
+The iterative-solver layer the paper's models are ultimately judged against:
+CG / BiCGStab re-running ONE cached exchange plan per iteration
+(:mod:`repro.solve.krylov`), matvecs on the device executor
+(:class:`repro.sparse.spmv.DistributedSpMV`, ``overlap=True`` supported) or
+the jax-free numpy executor (:class:`repro.solve.operator.NumpySpMV`), and
+scalar reductions through the node-aware hierarchical collectives
+(:mod:`repro.solve.reductions`).  Whole-solve strategy selection -- setup
+amortization over iterations -- lives in
+:func:`repro.core.advisor.advise_solver`.
+"""
+
+from repro.solve.krylov import (
+    MATVECS_PER_ITER,
+    REDUCTIONS_PER_ITER,
+    SolveResult,
+    bicgstab,
+    cg,
+)
+from repro.solve.operator import NumpySpMV, build_numpy
+from repro.solve.problems import shifted_system, spd_system
+from repro.solve.reductions import (
+    DeviceReductions,
+    NumpyReductions,
+    default_reductions,
+)
+
+__all__ = [
+    "MATVECS_PER_ITER",
+    "REDUCTIONS_PER_ITER",
+    "SolveResult",
+    "bicgstab",
+    "cg",
+    "NumpySpMV",
+    "build_numpy",
+    "shifted_system",
+    "spd_system",
+    "DeviceReductions",
+    "NumpyReductions",
+    "default_reductions",
+]

@@ -1,0 +1,138 @@
+"""Jax-free distributed SpMV executor for the solver test/benchmark path.
+
+:class:`NumpySpMV` runs the SAME planned stage programs as the device
+executor -- the plan comes from the module-level plan cache
+(:func:`repro.comm.strategies.planned`), the exchange runs through
+:func:`repro.comm.exchange.execute_numpy` (the bit-exact numpy oracle of the
+``shard_map`` executor), and the local compute is the blocked-ELL
+contraction in plain numpy.  Because every strategy delivers the identical
+canonical halo buffer, a Krylov solve on this operator produces
+*bitwise-identical* residual histories across strategies and across
+barrier-vs-split-phase execution -- the property pinned by
+``tests/test_solver.py``.
+
+``overlap=True`` exercises the split-phase decomposition: the pattern is
+factored through the module ``_SPLIT_CACHE``
+(:func:`repro.comm.strategies._split_phase_cached`, visible as
+``split_hits``/``split_misses`` in :func:`repro.comm.cache_stats`), the
+on-pod and inter-pod sub-plans execute separately, and
+:func:`repro.comm.exchange.merge_split_phase` reassembles the halo --
+bit-identical to the barrier buffer, so the local compute needs no masking
+to stay bit-compatible (unlike the device pipeline, nothing actually runs
+concurrently here; the decomposition is what is being exercised).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.comm import strategies as comm_strategies
+from repro.comm.exchange import execute_numpy, merge_split_phase
+from repro.comm.topology import PodTopology
+from repro.sparse.partition import SpmvPartition
+
+
+def _ell_matvec(data: np.ndarray, cols: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Blocked-ELL contraction over stacked ranks.
+
+    ``data``/``cols``: ``[g, L, K]``; ``x``: ``[g, W]`` (per-rank source
+    vector or halo buffer).  Padding slots have ``data == 0, cols == 0`` and
+    contribute exact zeros.
+    """
+    g = x.shape[0]
+    gathered = x[np.arange(g)[:, None, None], cols]  # [g, L, K]
+    return (data * gathered).sum(axis=2)
+
+
+@dataclasses.dataclass
+class NumpySpMV:
+    """One matrix + topology + strategy, executed without jax.
+
+    Mirrors :class:`repro.sparse.spmv.DistributedSpMV`'s call contract for
+    vectors (``v [nranks, L] -> w [nranks, L]``) and shares its plan cache,
+    so a solve on either operator re-plans nothing and the
+    one-plan-per-solve property is measurable via
+    ``repro.comm.cache_stats()``.
+    """
+
+    partition: SpmvPartition
+    strategy: str = "standard"
+    message_cap_bytes: int = 16384
+    overlap: bool = False
+
+    def __post_init__(self) -> None:
+        if self.strategy not in comm_strategies.STRATEGY_NAMES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; "
+                f"known: {comm_strategies.STRATEGY_NAMES}"
+            )
+        pattern = self.partition.pattern
+        if self.overlap:
+            sp, _ = comm_strategies._split_phase_cached(pattern)
+            self._split = sp
+            self._remote_plan = comm_strategies.planned(
+                sp.remote, self.strategy, message_cap_bytes=self.message_cap_bytes
+            )
+            self._local_plan = comm_strategies.planned(sp.local, "local")
+            self._plan = None
+        else:
+            self._split = None
+            self._plan = comm_strategies.planned(
+                pattern, self.strategy, message_cap_bytes=self.message_cap_bytes
+            )
+        g, L = self.topo.nranks, self.partition.rows_per_rank
+        self._diag_d = self.partition.diag.data.reshape(g, L, -1)
+        self._diag_c = self.partition.diag.cols.reshape(g, L, -1)
+        self._off_d = self.partition.off.data.reshape(g, L, -1)
+        self._off_c = self.partition.off.cols.reshape(g, L, -1)
+
+    @property
+    def topo(self) -> PodTopology:
+        return self.partition.topo
+
+    @property
+    def rows_per_rank(self) -> int:
+        return self.partition.rows_per_rank
+
+    # ------------------------------------------------------------------
+    def halo(self, v: np.ndarray) -> np.ndarray:
+        """Exchange only: ``[nranks, L] -> [nranks, H]`` canonical buffer."""
+        v = np.asarray(v)
+        if self.overlap:
+            # inter-pod and on-pod sub-plans execute separately, then merge
+            # -- bit-identical to the unsplit plan (tests/test_overlap.py)
+            remote = execute_numpy(self._remote_plan, v)
+            local = execute_numpy(self._local_plan, v)
+            return merge_split_phase(self._split, local, remote)
+        return execute_numpy(self._plan, v)
+
+    def __call__(self, v: np.ndarray) -> np.ndarray:
+        v = np.asarray(v)
+        g, L = self.topo.nranks, self.partition.rows_per_rank
+        if v.shape != (g, L):
+            raise ValueError(f"expected [{g}, {L}], got {tuple(v.shape)}")
+        halo = self.halo(v)
+        return _ell_matvec(self._diag_d, self._diag_c, v) + _ell_matvec(
+            self._off_d, self._off_c, halo
+        )
+
+    @property
+    def wire_bytes(self):
+        """(intra-pod, inter-pod) wire bytes of one exchange."""
+        if self.overlap:
+            return (
+                self._remote_plan.wire_intra_pod_bytes
+                + self._local_plan.wire_intra_pod_bytes,
+                self._remote_plan.wire_inter_pod_bytes,
+            )
+        return (self._plan.wire_intra_pod_bytes, self._plan.wire_inter_pod_bytes)
+
+
+def build_numpy(matrix, topo: PodTopology, strategy: str = "standard", **kw) -> NumpySpMV:
+    """Partition ``matrix`` and wrap it in a :class:`NumpySpMV`."""
+    from repro.sparse.partition import partition_csr
+
+    return NumpySpMV(partition_csr(matrix, topo), strategy=strategy, **kw)

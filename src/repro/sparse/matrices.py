@@ -35,6 +35,46 @@ class CSRMatrix:
     def nnz(self) -> int:
         return int(self.indptr[-1])
 
+    def validate(self) -> "CSRMatrix":
+        """Enforce the documented invariants; raises ``ValueError`` on a
+        malformed matrix, returns ``self`` otherwise.
+
+        Checked: ``indptr`` is ``[n+1]`` starting at 0 and non-decreasing,
+        ``indices``/``data`` lengths match ``indptr[-1]``, column ids are in
+        ``[0, n)``, and -- the invariant downstream code leans on
+        (:func:`repro.sparse.partition.partition_csr` canonical orders,
+        bisection over rows) -- indices are strictly increasing within each
+        row (sorted, no duplicates).  Generators call this under
+        ``__debug__``; run ``python -O`` to skip the O(nnz) check.
+        """
+        indptr, indices, data = self.indptr, self.indices, self.data
+        if indptr.shape != (self.n + 1,):
+            raise ValueError(f"indptr shape {indptr.shape} != ({self.n + 1},)")
+        if indptr[0] != 0 or (np.diff(indptr) < 0).any():
+            raise ValueError("indptr must start at 0 and be non-decreasing")
+        if indices.shape != (int(indptr[-1]),) or data.shape != indices.shape:
+            raise ValueError(
+                f"indices/data length {indices.shape}/{data.shape} "
+                f"!= nnz {int(indptr[-1])}"
+            )
+        if indices.size and (indices.min() < 0 or indices.max() >= self.n):
+            raise ValueError("column ids out of range [0, n)")
+        # strictly increasing per row: every adjacent pair must increase
+        # unless it straddles a row boundary
+        d = np.diff(indices.astype(np.int64))
+        within_row = np.ones(d.shape, dtype=bool)
+        boundary = indptr[1:-1]
+        boundary = boundary[(boundary > 0) & (boundary < indices.size)]
+        within_row[boundary - 1] = False
+        if (d[within_row] <= 0).any():
+            bad = int(np.flatnonzero(within_row & (d <= 0))[0])
+            row = int(np.searchsorted(indptr, bad, side="right")) - 1
+            raise ValueError(
+                f"indices not strictly sorted within row {row} "
+                f"(positions {bad}, {bad + 1}: {indices[bad]}, {indices[bad + 1]})"
+            )
+        return self
+
     def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         s, e = self.indptr[i], self.indptr[i + 1]
         return self.indices[s:e], self.data[s:e]
@@ -63,22 +103,51 @@ class CSRMatrix:
         return out
 
 
-def _from_coo(n: int, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray) -> CSRMatrix:
+def _from_coo(
+    n: int,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    duplicates: str = "first",
+) -> CSRMatrix:
+    """COO triplets -> CSR (rows lexsorted, per-row columns sorted).
+
+    ``duplicates`` resolves repeated ``(row, col)`` entries: ``"first"``
+    keeps the earliest occurrence in the input order (the generators'
+    historical behavior), ``"sum"`` accumulates them (what matrix algebra
+    like :func:`repro.solve.problems.spd_system` needs).  Empty input is
+    valid and yields an all-empty-rows matrix.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
     order = np.lexsort((cols, rows))
     rows, cols, vals = rows[order], cols[order], vals[order]
-    # deduplicate (keep first)
-    key = rows.astype(np.int64) * n + cols
-    keep = np.concatenate([[True], key[1:] != key[:-1]])
-    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    key = rows * n + cols
+    keep = np.ones(key.shape, dtype=bool)
+    keep[1:] = key[1:] != key[:-1]
+    if duplicates == "sum":
+        group = np.cumsum(keep) - 1
+        summed = np.zeros(int(keep.sum()), dtype=np.float64)
+        np.add.at(summed, group, vals.astype(np.float64))
+        vals = summed
+    elif duplicates == "first":
+        vals = vals[keep]
+    else:
+        raise ValueError(f"duplicates must be 'first' or 'sum', got {duplicates!r}")
+    rows, cols = rows[keep], cols[keep]
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.add.at(indptr, rows + 1, 1)
     indptr = np.cumsum(indptr)
-    return CSRMatrix(
+    out = CSRMatrix(
         n=n,
         indptr=indptr,
         indices=cols.astype(np.int32),
         data=vals.astype(np.float32),
     )
+    if __debug__:
+        out.validate()
+    return out
 
 
 def banded(n: int, bandwidth: int, rng: np.random.Generator, fill: float = 0.6) -> CSRMatrix:

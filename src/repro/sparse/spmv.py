@@ -400,6 +400,16 @@ class DistributedSpMV:
 
     # ------------------------------------------------------------------
     @property
+    def topo(self) -> PodTopology:
+        """The pod topology (the solver-facing operator contract shared
+        with :class:`repro.solve.operator.NumpySpMV`)."""
+        return self.partition.topo
+
+    @property
+    def rows_per_rank(self) -> int:
+        return self.partition.rows_per_rank
+
+    @property
     def wire_bytes(self) -> Tuple[int, int]:
         return self.exchange.wire_bytes
 

@@ -8,8 +8,10 @@ import pytest
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
-        "slow: multi-device subprocess tests and interpret-mode Pallas sweeps "
-        "(run by default; deselect with -m 'not slow' for a quick pass)",
+        "slow: multi-device subprocess tests, interpret-mode Pallas sweeps, "
+        "and the heaviest property sweeps (solver-vs-dense, kernel oracles). "
+        "Run by default -- the full suite is the verify tier; deselect with "
+        "-m 'not slow' for a quick inner-loop pass",
     )
 
 

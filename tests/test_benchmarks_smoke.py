@@ -45,6 +45,9 @@ def test_benchmarks_run_smoke():
         "kswp/8r/k4",  # spmv: SpMM k-sweep (smoke topology)
         "overlap/2p/f0.25/k1",  # overlap: split-phase sweep
         "overlap/2p/f0.75/k4",
+        "solver/thermal_like/two_step/ov1",  # solver: CG workload sweep
+        "solver/random_block/standard/ov0",
+        "solver/audikw_like/advisor",
         "planning/8r/",  # planning
         "kernel/spmm_ell/interpret/k4",  # kernels
     ):
@@ -65,3 +68,10 @@ def test_benchmarks_run_smoke():
     looped, fused = float(m.group(1)), float(m.group(2))
     assert fused < looped, f"fused SpMM ({fused}us) not beating looped ({looped}us)"
     assert "parity=ok" in out
+
+    # the solver sweep's acceptance property in miniature: CG converged on
+    # every regime row with a residual at or under the 1e-6 target
+    solver_rows = re.findall(r"solver/\w+/\w+/ov[01],.*conv=(\d) relres=([0-9.eE+-]+)", out)
+    assert solver_rows, f"no solver rows\n{out[-2000:]}"
+    for conv, relres in solver_rows:
+        assert conv == "1" and float(relres) <= 1e-6, (conv, relres)

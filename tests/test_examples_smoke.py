@@ -18,6 +18,7 @@ EXAMPLES = os.path.join(REPO, "examples")
 
 #: smoke-sized arguments per example (keep each file under ~1 minute)
 ARGS = {
+    "krylov_solve.py": [],
     "quickstart.py": [],
     "strategy_advisor.py": ["--messages", "32", "--nodes", "4", "--payload-width", "8"],
     "serve_lm.py": ["--batch", "1", "--prompt-len", "8", "--gen", "3"],
@@ -26,6 +27,7 @@ ARGS = {
 
 #: a line that must appear in stdout when the example succeeded
 EXPECT = {
+    "krylov_solve.py": "int8-compressed inter-pod reductions",
     "quickstart.py": "split",  # strategy table printed after execution
     "strategy_advisor.py": "best strategy",
     "serve_lm.py": "decode",

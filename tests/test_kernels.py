@@ -38,6 +38,7 @@ def test_spmv_ell_shapes(R, K, N, dtype):
     )
 
 
+@pytest.mark.slow
 @given(
     r=st.integers(1, 64),
     k=st.integers(1, 16),

@@ -113,6 +113,37 @@ def test_compute_cache_eviction_under_many_fingerprints(monkeypatch):
     assert len(spmv_mod._COMPUTE_CACHE) == 0  # registered external cache
 
 
+def test_split_cache_counts_and_clears(monkeypatch):
+    """_SPLIT_CACHE must be visible to cache_stats (split_hits/split_misses),
+    evict LRU-style at PLAN_CACHE_MAX, and reset under clear_caches."""
+    rng = np.random.default_rng(21)
+    topo = PodTopology(npods=2, ppn=2)
+    pats = [
+        random_pattern(rng, topo, local_size=4, p_connect=0.6, max_elems=2)
+        for _ in range(4)
+    ]
+    assert len({p.fingerprint() for p in pats}) == 4
+    comm_strategies.clear_caches()
+    monkeypatch.setattr(comm_strategies, "PLAN_CACHE_MAX", 3)
+    for p in pats:
+        comm_strategies._split_phase_cached(p)
+    stats = comm_strategies.cache_stats()
+    assert stats.split_misses == 4 and stats.split_hits == 0
+    assert len(comm_strategies._SPLIT_CACHE) == 3
+    # resident fingerprints hit; the evicted oldest re-misses
+    comm_strategies._split_phase_cached(pats[-1])
+    assert comm_strategies.cache_stats().split_hits == 1
+    comm_strategies._split_phase_cached(pats[0])
+    stats = comm_strategies.cache_stats()
+    assert stats.split_misses == 5 and stats.split_hits == 1
+    # the split cache never bleeds into the plan counters
+    assert stats.plan_misses == 0 and stats.plan_hits == 0
+    comm_strategies.clear_caches()
+    stats = comm_strategies.cache_stats()
+    assert stats.split_misses == 0 and stats.split_hits == 0
+    assert len(comm_strategies._SPLIT_CACHE) == 0
+
+
 @pytest.mark.slow
 def test_batched_plan_cache_keying_on_devices(subproc):
     """Distinct payload widths k must NOT thrash the plan/compile caches:

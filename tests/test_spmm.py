@@ -50,6 +50,7 @@ def test_spmm_ell_shapes(R, K, N, C, dtype):
     )
 
 
+@pytest.mark.slow
 @given(
     r=st.integers(1, 64),
     k=st.integers(1, 16),
@@ -68,6 +69,7 @@ def test_spmm_ell_property(r, k, n, c, seed):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @given(
     r=st.integers(1, 80),
     k=st.integers(1, 20),
