@@ -1,0 +1,127 @@
+"""Wire-codec sweep: codec x strategy x payload width x pods.
+
+Two views of the same lever (ISSUE 5's acceptance numbers):
+
+* **byte counters** (in-process, deterministic) -- for each (pods,
+  strategy, codec) the planner's padding-inclusive inter-pod wire bytes
+  next to the codec-scaled number `IrregularExchange.wire_bytes` reports.
+  ``reduction=`` is the acceptance metric: >= 2x for the 16-bit wires on
+  f32 payloads (the >= 1.8x bar with margin), ~3.9x for int8 (the float32
+  scales cost a little back).
+* **model crossovers** -- ``advise(..., wire="auto")`` per (pods, k):
+  which (strategy, transport, codec) the overlap-unaware model picks as k
+  widens the payload.  Latency-bound small-k points keep ``none``; byte
+  bound points flip to a codec.
+* **measured execution** (device subprocess) -- median wall time per
+  exchange for each codec on host devices, with parity checked before
+  timing: ``codec="none"`` must be bitwise identical to the codec-free
+  executor, lossy codecs must stay inside their pinned error bound
+  (``repro.comm.wire.REL_ERROR_BOUND``) and match the numpy oracle bit for
+  bit.  Host CPU collectives don't traverse a real DCI, so the timings
+  bound codec overhead rather than showing the bandwidth win -- the byte
+  counters are the reproduction target.
+
+``main(smoke=True)`` shrinks the sweep (2 pods, k <= 4, fewer iters) so
+``benchmarks/run.py --smoke`` keeps this section alive in tier-1.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_with_devices
+
+CODE = """
+import time, numpy as np
+from repro.comm import wire
+from repro.comm.exchange import execute_numpy, random_pattern
+from repro.comm.strategies import IrregularExchange, STRATEGY_NAMES
+from repro.comm.topology import PodTopology
+
+def med_us(fn, iters):
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter(); fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts)//2] * 1e6
+
+rng = np.random.default_rng(42)
+iters = 3 if SMOKE else 7
+topo = PodTopology(npods=NPODS, ppn=4)
+pat = random_pattern(rng, topo, local_size=8, p_connect=0.6, max_elems=5)
+local = rng.normal(size=(topo.nranks, 8)).astype(np.float32)
+ref = pat.reference(local)
+H = pat.max_recv_size()
+for strat in STRATEGY_NAMES:
+    ex0 = IrregularExchange(pat, strat, message_cap_bytes=64)
+    base = np.asarray(ex0(local))
+    _, inter0 = ex0.wire_bytes
+    for codec in wire.WIRE_CODECS:
+        ex = IrregularExchange(pat, strat, message_cap_bytes=64, wire=codec)
+        out = np.asarray(ex(local))
+        if codec == "none":
+            np.testing.assert_array_equal(out, base)  # bitwise acceptance
+        else:
+            np.testing.assert_array_equal(
+                out, execute_numpy(ex.plan, local, wire=codec)
+            )
+            bound = wire.REL_ERROR_BOUND[codec] * np.abs(local).max()
+            assert np.abs(out[:, :H] - ref[:, :H]).max() <= bound * (1 + 1e-6)
+        us = med_us(lambda: ex(local).block_until_ready(), iters)
+        _, inter = ex.wire_bytes
+        red = inter0 / inter if inter else 1.0
+        print(
+            f"RESULT,wire/{NPODS}p/{strat}/{codec},{us:.1f},"
+            f"inter_none_B={inter0} inter_wire_B={inter} "
+            f"reduction={red:.2f}x parity=ok"
+        )
+"""
+
+
+#: model-crossover scenarios: figure 4.3 generator args chosen so the k
+#: sweep exposes both a none-wins regime and a codec-wins regime (the same
+#: physics pinned in tests/test_advisor_regression.py::WIRE_PINS)
+MODEL_SCENARIOS = [
+    ("tiny", "tpu_v5e_pod", (256, 32, 4)),
+    ("mid", "lassen", (2048, 256, 16)),
+    ("big", "tpu_v5e_pod", (65536, 32, 4)),
+]
+
+
+def _emit_model_rows(ks) -> None:
+    from repro.core import advise, figure43_pattern
+
+    for name, machine, scenario in MODEL_SCENARIOS:
+        pat = figure43_pattern(*scenario)
+        for k in ks:
+            adv = advise(pat, machine=machine, payload_width=k, wire="auto")
+            best_none = min(
+                (r for r in adv.ranked if r.wire == "none"),
+                key=lambda r: r.predicted_time,
+            )
+            win = best_none.predicted_time / adv.best.predicted_time
+            print(
+                f"wiremodel/{name}/k{k},0.000,"
+                f"advised={adv.best.key} best_none={best_none.key} "
+                f"model_win={win:.2f}x"
+            )
+
+
+def main(smoke: bool = False) -> None:
+    print("name,us_per_call,derived")
+    pods = (2,) if smoke else (2, 4)
+    _emit_model_rows((1, 64) if smoke else (1, 8, 64))
+    for npods in pods:
+        out = run_with_devices(
+            f"SMOKE = {smoke!r}\nNPODS = {npods}\n" + CODE,
+            devices=npods * 4,
+        )
+        for line in out.splitlines():
+            if line.startswith("RESULT,"):
+                print(line[len("RESULT,"):])
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

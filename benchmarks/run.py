@@ -11,6 +11,7 @@ Sections:
   spmv        -- paper Figure 5.1 (SpMV strategies) + SpMM k-sweep
   overlap     -- split-phase overlap sweep (interior fraction x pods x k)
   solver      -- CG workload sweep (regime x strategy x overlap + amortized model)
+  wire        -- inter-pod wire codec sweep (codec x strategy x k x pods)
   planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
@@ -19,12 +20,57 @@ Sections:
 matrices/iterations/devices).  It exists so a tier-1 test can execute the
 benchmark scripts end to end and catch rot; absolute numbers from a smoke
 pass are meaningless.
+
+Every *full* run (all sections) also writes ``BENCH_exchange.json`` at the
+repo root (single-section runs leave it untouched) -- a
+machine-readable record of per-section wall times plus the wire-byte
+counters of a fixed reference exchange (the numbers
+``IrregularExchange.wire_bytes`` reports, per strategy x codec) -- so the
+perf trajectory is trackable across PRs; schema pinned by
+``tests/test_benchmarks_smoke.py``.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
+import time
 import traceback
+
+#: bump when the JSON layout changes (tests pin it)
+BENCH_SCHEMA = 1
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_exchange.json")
+
+
+def _wire_byte_counters() -> dict:
+    """Wire-byte counters of a fixed reference exchange, per strategy x codec.
+
+    Plan-level and jax-free: :func:`repro.comm.wire.scaled_wire_bytes` on
+    the planned (fused) program is exactly what
+    ``IrregularExchange.wire_bytes`` returns for the same arguments, so
+    these counters track the executor's reporting without needing
+    ``nranks`` devices in this process.
+    """
+    import numpy as np
+
+    from repro.comm import wire
+    from repro.comm.exchange import random_pattern
+    from repro.comm.strategies import STRATEGY_NAMES, planned
+    from repro.comm.topology import PodTopology
+
+    rng = np.random.default_rng(1234)
+    topo = PodTopology(npods=2, ppn=4)
+    pat = random_pattern(rng, topo, local_size=16, p_connect=0.5, max_elems=8)
+    out: dict = {"pattern_fingerprint": pat.fingerprint(), "codecs": {}}
+    for strategy in STRATEGY_NAMES:
+        sp = planned(pat, strategy, message_cap_bytes=512)
+        per_codec = {}
+        for codec in wire.WIRE_CODECS:
+            intra, inter = wire.scaled_wire_bytes(sp, codec)
+            per_codec[codec] = {"intra_pod_bytes": intra, "inter_pod_bytes": inter}
+        out["codecs"][strategy] = per_codec
+    return out
 
 
 def main() -> None:
@@ -38,6 +84,7 @@ def main() -> None:
         bench_roofline,
         bench_solver,
         bench_spmv,
+        bench_wire,
     )
 
     sections = {
@@ -47,6 +94,7 @@ def main() -> None:
         "spmv": bench_spmv.main,
         "overlap": bench_overlap.main,
         "solver": bench_solver.main,
+        "wire": bench_wire.main,
         "planning": bench_planning.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -55,14 +103,38 @@ def main() -> None:
     smoke = "--smoke" in args
     wanted = [a for a in args if not a.startswith("--")] or list(sections)
     failures = []
+    report = {
+        "schema": BENCH_SCHEMA,
+        "smoke": smoke,
+        "sections": {},
+    }
     for name in wanted:
         print(f"\n### section: {name}")
+        t0 = time.perf_counter()
         try:
             sections[name](smoke=smoke)
+            ok = True
         except Exception as e:  # noqa: BLE001
             failures.append(name)
+            ok = False
             traceback.print_exc()
             print(f"### section {name} FAILED: {e}")
+        report["sections"][name] = {
+            "elapsed_s": round(time.perf_counter() - t0, 3),
+            "ok": ok,
+        }
+    report["failures"] = failures
+    if set(wanted) == set(sections):
+        # only a full run may replace the tracked record: a single-section
+        # iteration must not clobber the cross-PR trajectory file (and only
+        # a full run pays for the counters it would otherwise discard)
+        report["wire_bytes"] = _wire_byte_counters()
+        with open(BENCH_JSON, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\n### wrote {BENCH_JSON}")
+    else:
+        print(f"\n### partial run ({wanted}); {BENCH_JSON} left untouched")
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")
 

@@ -14,9 +14,15 @@ local compute of ``t`` microseconds, ``f`` of it halo-independent, lets the
 split-phase pipeline hide the inter-node phase and ``+overlap`` variants
 enter the ranking.
 
+``--wire auto`` (or a codec name / comma list, e.g. ``none,bf16``) adds
+inter-pod wire-format variants: ``+wire:<codec>`` entries scale the
+inter-node byte terms by the codec's compression ratio and pay its
+encode+decode term, so bandwidth-bound sizes flip to a compressed wire.
+
     PYTHONPATH=src python examples/strategy_advisor.py --messages 256 --nodes 16
     PYTHONPATH=src python examples/strategy_advisor.py --payload-width 64
     PYTHONPATH=src python examples/strategy_advisor.py --compute-us 50 --interior-frac 0.9
+    PYTHONPATH=src python examples/strategy_advisor.py --wire auto
 """
 
 import argparse
@@ -39,9 +45,16 @@ def main() -> None:
                     help="per-step local compute in us; enables overlap ranking")
     ap.add_argument("--interior-frac", type=float, default=0.0,
                     help="fraction of compute that is halo-independent")
+    ap.add_argument("--wire", default=None,
+                    help="wire codec candidates: 'auto', a codec name, or a "
+                         "comma list like 'none,bf16'")
     args = ap.parse_args()
 
     from repro.core import ComputeProfile, advise, figure43_pattern
+
+    wire = args.wire
+    if wire and "," in wire:
+        wire = tuple(wire.split(","))
 
     compute = None
     if args.compute_us > 0.0:
@@ -53,7 +66,8 @@ def main() -> None:
           f"destination nodes={args.nodes}  duplicates={args.duplicate:.0%}  "
           f"payload_width={args.payload_width}"
           + (f"  compute={args.compute_us}us"
-             f" interior={args.interior_frac:.0%}" if compute else "") + "\n")
+             f" interior={args.interior_frac:.0%}" if compute else "")
+          + (f"  wire={args.wire}" if wire else "") + "\n")
     print(f"{'msg size':>10} | best strategy                     | predicted | runner-up")
     print("-" * 90)
     for logs in range(4, 21):
@@ -62,7 +76,8 @@ def main() -> None:
         adv = advise(pat, machine=args.machine,
                      duplicate_fraction=args.duplicate,
                      payload_width=args.payload_width,
-                     compute=compute)
+                     compute=compute,
+                     wire=wire)
         b, r = adv.ranked[0], adv.ranked[1]
         print(f"{size:>10} | {b.key:<33} | {b.predicted_time:.3e}s | "
               f"{r.key} ({r.predicted_time:.2e}s)")

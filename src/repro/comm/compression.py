@@ -1,12 +1,24 @@
-"""Gradient compression for the inter-pod (DCI) hop.
+"""Lossy compression for the inter-pod (DCI) hop: the ONE int8 quantizer.
 
-int8 linear quantization with a pod-agreed scale: every pod computes the max
-magnitude of its shard, ``pmax`` over the outer axis agrees on one scale, the
-int8 payload crosses DCI (4x fewer bytes than fp32), and the sum is
-dequantized on arrival.  Error feedback (the residual returned by
-``psum_hierarchical``) carries the quantization error into the next step so
-the scheme stays convergent (Karimireddy et al., 2019 -- standard practice;
-not from the reproduced paper, recorded as a beyond-paper optimization).
+Both lossy-int8 consumers in the repo route through the three primitives
+below, so scale arithmetic and round-trip semantics cannot drift apart:
+
+* :class:`Compressor` -- the error-feedback gradient/reduction compressor
+  (``psum_hierarchical`` / ``dot_hierarchical``): the scale is agreed
+  across pods via ``pmax`` and carries the *payload's* dtype so bf16
+  error-feedback residuals round-trip as bf16;
+* the exchange wire codec (``wire="int8"`` in
+  :mod:`repro.comm.strategies`): one float32 scale per wire block rides
+  the collective next to the int8 payload (no cross-pod agreement -- each
+  block is decoded with its sender's scale).
+
+int8 linear quantization with a shared scale: the payload's max magnitude
+picks ``scale = amax / qmax``, the int8 payload crosses DCI (4x fewer bytes
+than fp32), and values are dequantized on arrival.  Error feedback (the
+residual returned by ``psum_hierarchical``) carries the quantization error
+into the next step so the scheme stays convergent (Karimireddy et al.,
+2019 -- standard practice; not from the reproduced paper, recorded as a
+beyond-paper optimization).
 """
 
 from __future__ import annotations
@@ -16,6 +28,36 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def int8_scale(amax: jnp.ndarray, qmax: float) -> jnp.ndarray:
+    """Quantization scale for a payload of max magnitude ``amax``.
+
+    The scale keeps ``amax``'s dtype (callers choose: the payload dtype for
+    error-feedback round-trips, float32 for wire blocks).  The tiny-scale
+    guard against an all-zero payload uses ``finfo(amax.dtype)``: a
+    float32 constant would promote narrower scales out of their dtype, and
+    for float16 (min normal ~6e-5) a float32 tiny would flush to zero
+    inside the payload dtype anyway.
+    """
+    return jnp.maximum(amax / qmax, jnp.finfo(amax.dtype).tiny)
+
+
+def int8_quantize(x: jnp.ndarray, scale: jnp.ndarray, qmax: float) -> jnp.ndarray:
+    """Linear quantization to int8 under a precomputed ``scale``."""
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize an int8/int32 payload; the result carries ``scale.dtype``.
+
+    The multiply runs at float32-or-wider so an int32 *sum* of quantized
+    values stays exact (a bfloat16 product would round ``q`` itself once it
+    exceeds 256, e.g. summing near-saturated int8 over many pods) and only
+    the final result rounds to ``scale.dtype``.
+    """
+    wide = jnp.promote_types(scale.dtype, jnp.float32)
+    return (q.astype(wide) * scale.astype(wide)).astype(scale.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,29 +75,17 @@ class Compressor:
 
         The returned ``scale`` keeps ``x``'s floating dtype, so a
         bfloat16 payload round-trips through :meth:`decompress` as bfloat16
-        (error-feedback residuals must not silently upcast).  The tiny-scale
-        guard against an all-zero shard therefore uses ``finfo(x.dtype)``:
-        the old ``finfo(float32).tiny`` constant promoted the whole
-        ``maximum`` -- and with it ``scale`` -- to float32 for narrower
-        payloads, and for a float16 payload (min normal ~6e-5) a float32
-        tiny would flush to zero inside the payload dtype anyway.
+        (error-feedback residuals must not silently upcast); see
+        :func:`int8_scale` for the dtype-aware tiny guard.
         """
         amax = jnp.max(jnp.abs(x))
         amax = jax.lax.pmax(amax, outer_axis)
-        scale = jnp.maximum(amax / self.qmax, jnp.finfo(x.dtype).tiny)
-        q = jnp.clip(jnp.round(x / scale), -self.qmax, self.qmax).astype(jnp.int8)
-        return q, scale
+        scale = int8_scale(amax, self.qmax)
+        return int8_quantize(x, scale, self.qmax), scale
 
     def decompress(self, q_sum: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-        """Dequantize back to the payload's own dtype (``scale`` carries it).
-
-        The multiply runs at float32-or-wider so the int32 sum stays exact
-        (a bfloat16 product would round ``q_sum`` itself once it exceeds
-        256, e.g. summing near-saturated int8 over many pods) and only the
-        final result rounds to the payload dtype.
-        """
-        wide = jnp.promote_types(scale.dtype, jnp.float32)
-        return (q_sum.astype(wide) * scale.astype(wide)).astype(scale.dtype)
+        """Dequantize back to the payload's own dtype (``scale`` carries it)."""
+        return int8_dequantize(q_sum, scale)
 
     def wire_bytes(self, x: jnp.ndarray) -> int:
         """Bytes this leaf puts on the DCI per hop (vs 4*size uncompressed)."""

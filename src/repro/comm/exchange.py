@@ -50,6 +50,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.comm import wire as wire_codec
 from repro.comm.topology import PodTopology
 from repro.core.patterns import CommPattern, Message
 
@@ -221,6 +222,10 @@ class PermuteWorld:
     blks: Tuple[int, ...]
     #: sel[round] = [nranks, blks[round]] indices into ext (PAD = len(ext))
     sels: Tuple[np.ndarray, ...]
+    #: inter[round] = True iff every pair in the round crosses pods -- the
+    #: stage metadata wire codecs key on (a mixed round stays full
+    #: precision; ``None`` means unclassified and is treated as on-pod)
+    inter: Optional[Tuple[bool, ...]] = None
 
 
 Stage = object  # union of the four dataclasses above
@@ -410,12 +415,21 @@ def _take_fill(ext: np.ndarray, idx: np.ndarray) -> np.ndarray:
     return out
 
 
-def execute_numpy(plan: StagePlan, local: np.ndarray) -> np.ndarray:
+def execute_numpy(
+    plan: StagePlan, local: np.ndarray, wire: str = "none"
+) -> np.ndarray:
     """Execute a stage program in numpy: ``local [n, L, *feat] -> [n, H, *feat]``.
 
     Exact (bit-identical) data movement; no jax required.  Used to verify
     that fused and unfused programs deliver identical values.
+
+    ``wire`` selects the inter-pod codec (:mod:`repro.comm.wire`): payloads
+    crossing pods -- every non-diagonal ``A2APod`` block and every inter-pod
+    ``PermuteWorld`` round -- are encode/decode round-tripped exactly the
+    way the device executor would, while on-pod hops stay full precision.
+    ``wire="none"`` (the default) is the unchanged bit-exact movement.
     """
+    wire_codec.check_codec(wire)
     topo = plan.pattern.topo
     nranks, ppn, npods = topo.nranks, topo.ppn, topo.npods
     local = np.asarray(local)
@@ -438,14 +452,25 @@ def execute_numpy(plan: StagePlan, local: np.ndarray) -> np.ndarray:
             else:
                 blk = stage.buflen // npods
                 b = buf.reshape((npods, ppn, npods, blk) + feat)
+                # the inter-pod hop: round-trip off-diagonal blocks through
+                # the wire codec (diagonal blocks never cross DCI)
+                b = wire_codec.roundtrip_pod_blocks_np(b, wire)
                 buf = b.transpose((2, 1, 0, 3) + tuple(range(4, 4 + len(feat)))).reshape(
                     (nranks, stage.buflen) + feat
                 )
         elif isinstance(stage, PermuteWorld):
             ext = np.concatenate([buf, local], axis=1)
+            inters = (
+                stage.inter if stage.inter is not None else (False,) * len(stage.blks)
+            )
             parts = []
-            for perm, blk, sel in zip(stage.rounds, stage.blks, stage.sels):
+            for perm, blk, sel, inter in zip(
+                stage.rounds, stage.blks, stage.sels, inters
+            ):
                 send = _take_fill(ext, np.asarray(sel))
+                if inter:
+                    # one wire block per sending rank
+                    send = wire_codec.roundtrip_np(send, wire, block_ndim=send.ndim - 1)
                 out = np.zeros((nranks, blk) + feat, dtype=local.dtype)
                 if perm:
                     srcs = [s for s, _ in perm]
@@ -591,18 +616,21 @@ class _Planner:
     ) -> None:
         """``rounds[i][src] = (dst, codes)``: src sends those tokens to dst."""
         n = self.topo.nranks
-        perm_list, blks, sels = [], [], []
+        perm_list, blks, sels, inters = [], [], [], []
         for rnd in rounds:
             blk = max((len(c) for _, c in rnd.values()), default=0)
             blk = max(blk, 1)
             want = np.full((n, blk), PAD_CODE, dtype=np.int64)
             perm = []
+            crossings = []
             for s in sorted(rnd):
                 dst, codes = rnd[s]
                 perm.append((s, dst))
                 want[s, : len(codes)] = codes
                 payload = len(codes) * elem_bytes
-                if self.topo.pod_of(s) != self.topo.pod_of(dst):
+                crosses = self.topo.pod_of(s) != self.topo.pod_of(dst)
+                crossings.append(crosses)
+                if crosses:
                     self.inter_payload += payload
                     self.wire_inter += blk * elem_bytes
                 else:
@@ -611,8 +639,14 @@ class _Planner:
             perm_list.append(tuple(perm))
             blks.append(blk)
             sels.append(self._map_codes(want))
+            inters.append(bool(crossings) and all(crossings))
         self._apply(
-            PermuteWorld(rounds=tuple(perm_list), blks=tuple(blks), sels=tuple(sels))
+            PermuteWorld(
+                rounds=tuple(perm_list),
+                blks=tuple(blks),
+                sels=tuple(sels),
+                inter=tuple(inters),
+            )
         )
 
     # -- shared epilogue ---------------------------------------------------

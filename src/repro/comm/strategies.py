@@ -40,6 +40,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.comm import compression
+from repro.comm import wire as wire_mod
 from repro.comm.exchange import (
     A2ALocal,
     A2APod,
@@ -120,23 +122,69 @@ def _compile_program(sp: StagePlan) -> Tuple[Tuple, Tuple[np.ndarray, ...], int]
         elif isinstance(st, PermuteWorld):
             for sel in st.sels:
                 arrays.append(_rebase(sel, w, L, sentinel))
-            ops.append(("permute", st.rounds, st.blks))
+            inter = st.inter if st.inter is not None else (False,) * len(st.blks)
+            ops.append(("permute", st.rounds, st.blks, inter))
             w = sum(st.blks)
     return tuple(ops), tuple(arrays), w_max
 
 
+def _encode_blocks(blocks, codec: str):
+    """Encode leading-axis wire blocks for an inter-pod collective.
+
+    Returns ``(payload, aux)`` where ``aux`` is the per-block float32 scale
+    for the int8 codec (shipped through the same collective) or ``None``.
+    Only called when :func:`repro.comm.wire.applies` said yes.
+    """
+    if codec in ("bf16", "f16"):
+        # saturate instead of overflowing to inf (mirrors wire.roundtrip_np)
+        wdt = jnp.bfloat16 if codec == "bf16" else jnp.float16
+        fmax = float(jnp.finfo(wdt).max)
+        return jnp.clip(blocks, -fmax, fmax).astype(wdt), None
+    # int8: one scale per leading-axis block, shared quantizer core
+    f = blocks.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(f), axis=tuple(range(1, f.ndim)))
+    scale = compression.int8_scale(amax, wire_mod.QMAX)
+    bshape = (-1,) + (1,) * (f.ndim - 1)
+    q = compression.int8_quantize(f, scale.reshape(bshape), wire_mod.QMAX)
+    return q, scale
+
+
+def _decode_blocks(payload, aux, dtype):
+    """Inverse of :func:`_encode_blocks` after the collective moved it."""
+    if aux is None:
+        return payload.astype(dtype)
+    return compression.int8_dequantize(
+        payload, aux.reshape((-1,) + (1,) * (payload.ndim - 1))
+    ).astype(dtype)
+
+
 def _execute(
-    ops, topo: PodTopology, L: int, w_max: int, out_size: int, local, plan_arrays
+    ops,
+    topo: PodTopology,
+    L: int,
+    w_max: int,
+    out_size: int,
+    local,
+    plan_arrays,
+    codec: str = "none",
 ):
     """Ops interpreter; runs inside shard_map.  ``local`` is ``[1, L, *feat]``.
 
-    The scratch ``ext = [local | buf]`` is allocated once per call; stages
-    read/write the buf region in place instead of re-concatenating
-    ``[buf, local]`` per Gather/PermuteWorld round.
+    The scratch ``ext = [local | buf]`` is built with ONE fused pad per call
+    (no zeros buffer is materialized); stages read/write the buf region in
+    place instead of re-concatenating ``[buf, local]`` per round.
+
+    ``codec`` is the inter-pod wire format (:mod:`repro.comm.wire`): the
+    payload of an ``A2APod`` (off-diagonal blocks) or an inter-pod
+    ``PermuteWorld`` round is encoded right before the collective and
+    decoded right after it.  On-pod hops and the ``"none"`` codec run the
+    exact full-precision ops -- bitwise identical to the codec-free
+    executor.
     """
     x = local[0]
     feat = x.shape[1:]
-    ext = jnp.concatenate([x, jnp.zeros((w_max,) + feat, x.dtype)], axis=0)
+    ext = jnp.pad(x, ((0, w_max),) + ((0, 0),) * len(feat))
+    encode = codec != "none" and wire_mod.applies(codec, x.dtype)
     ai = 0
     for op in ops:
         kind = op[0]
@@ -159,21 +207,42 @@ def _execute(
                 if kind == "a2a_local"
                 else (topo.npods, POD_AXIS)
             )
-            res = jax.lax.all_to_all(
-                seg.reshape((groups, buflen // groups) + feat), axis, 0, 0, tiled=True
-            )
+            blocks = seg.reshape((groups, buflen // groups) + feat)
+            if kind == "a2a_pod" and encode:
+                payload, aux = _encode_blocks(blocks, codec)
+                moved = jax.lax.all_to_all(payload, axis, 0, 0, tiled=True)
+                if aux is not None:
+                    aux = jax.lax.all_to_all(aux, axis, 0, 0, tiled=True)
+                res = _decode_blocks(moved, aux, x.dtype)
+                # the own-pod block never crossed DCI: the all_to_all self
+                # slot holds this rank's own send block, so restore it at
+                # full precision
+                me = jax.lax.axis_index(axis)
+                keep = (jnp.arange(groups) == me).reshape(
+                    (groups,) + (1,) * (blocks.ndim - 1)
+                )
+                res = jnp.where(keep, blocks, res)
+            else:
+                res = jax.lax.all_to_all(blocks, axis, 0, 0, tiled=True)
             ext = ext.at[L : L + buflen].set(res.reshape((buflen,) + feat))
         elif kind == "permute":
-            _, rounds, blks = op
+            _, rounds, blks, inters = op
             parts = []
-            for perm, blk in zip(rounds, blks):
+            for perm, blk, inter in zip(rounds, blks, inters):
                 sel = plan_arrays[ai][0]
                 ai += 1
                 send = ext.at[sel].get(mode="fill", fill_value=0)
-                if perm:
-                    parts.append(jax.lax.ppermute(send, WORLD_AXES, list(perm)))
-                else:
+                if not perm:
                     parts.append(jnp.zeros_like(send))
+                elif inter and encode:
+                    payload, aux = _encode_blocks(send[None], codec)
+                    moved = jax.lax.ppermute(payload[0], WORLD_AXES, list(perm))
+                    if aux is not None:
+                        aux = jax.lax.ppermute(aux[0], WORLD_AXES, list(perm))
+                        aux = aux[None]
+                    parts.append(_decode_blocks(moved[None], aux, x.dtype)[0])
+                else:
+                    parts.append(jax.lax.ppermute(send, WORLD_AXES, list(perm)))
             width = sum(blks)
             if parts:
                 ext = ext.at[L : L + width].set(jnp.concatenate(parts))
@@ -323,8 +392,10 @@ def _mesh_key(mesh: jax.sharding.Mesh) -> tuple:
     )
 
 
-def _executor(sp: StagePlan, plan_key: tuple, mesh: jax.sharding.Mesh):
-    key = plan_key + _mesh_key(mesh)
+def _executor(
+    sp: StagePlan, plan_key: tuple, mesh: jax.sharding.Mesh, codec: str = "none"
+):
+    key = plan_key + (codec,) + _mesh_key(mesh)
 
     def build():
         topo = sp.pattern.topo
@@ -333,7 +404,9 @@ def _executor(sp: StagePlan, plan_key: tuple, mesh: jax.sharding.Mesh):
         L, out_size = sp.pattern.local_size, sp.out_size
 
         def run(local, *plan_arrays):
-            return _execute(ops, topo, L, w_max, out_size, local, plan_arrays)
+            return _execute(
+                ops, topo, L, w_max, out_size, local, plan_arrays, codec
+            )
 
         fn = jax.jit(
             shard_map(run, mesh=mesh, in_specs=specs, out_specs=P(WORLD_AXES))
@@ -455,6 +528,15 @@ class IrregularExchange:
       message_cap_bytes: Split's user cap (Algorithm 1 input).
       elem_bytes: element width used for cap arithmetic / byte accounting.
       fuse_program: run the :mod:`repro.comm.fusion` rewrites (default on).
+      wire: inter-pod wire codec, one of
+        :data:`repro.comm.wire.WIRE_CODECS` (``"none"`` | ``"bf16"`` |
+        ``"f16"`` | ``"int8"``).  Lossy codecs shrink only the DCI-crossing
+        bytes -- on-pod hops and the destination's own-pod ``A2APod``
+        blocks stay full precision -- with the per-element error bounds of
+        :data:`repro.comm.wire.REL_ERROR_BOUND`; ``"none"`` is bitwise
+        identical to the codec-free executor.  The plan is codec-independent
+        (one plan per fingerprint); the jitted executor is cached per
+        ``(plan, wire, mesh)``.
 
     Construction is cheap when an equal exchange was built before: the plan
     and the jitted executor come from module-level caches (see
@@ -484,8 +566,10 @@ class IrregularExchange:
     message_cap_bytes: int = 16384
     elem_bytes: int = 4
     fuse_program: bool = True
+    wire: str = "none"
 
     def __post_init__(self) -> None:
+        wire_mod.check_codec(self.wire)
         plan_key = _plan_key(
             self.pattern,
             self.strategy,
@@ -503,7 +587,9 @@ class IrregularExchange:
         )
         if self.mesh is None:
             self.mesh = _default_mesh(self.pattern.topo)
-        self._fn, self._arrays = _executor(self.plan, plan_key, self.mesh)
+        self._fn, self._arrays = _executor(
+            self.plan, plan_key, self.mesh, self.wire
+        )
         self._two_phase: Optional[tuple] = None
 
     # ------------------------------------------------------------------
@@ -542,6 +628,8 @@ class IrregularExchange:
         if self._two_phase is None:
             sp, merge = _split_phase_cached(self.pattern)
             self._two_phase = (
+                # the inter-pod phase inherits this exchange's wire codec;
+                # the on-pod phase is always full precision
                 IrregularExchange(
                     sp.remote,
                     self.strategy,
@@ -549,6 +637,7 @@ class IrregularExchange:
                     message_cap_bytes=self.message_cap_bytes,
                     elem_bytes=self.elem_bytes,
                     fuse_program=self.fuse_program,
+                    wire=self.wire,
                 ),
                 IrregularExchange(
                     sp.local,
@@ -571,8 +660,13 @@ class IrregularExchange:
 
     @property
     def wire_bytes(self) -> Tuple[int, int]:
-        """(intra-pod, inter-pod) bytes on the wire incl. padding."""
-        return (self.plan.wire_intra_pod_bytes, self.plan.wire_inter_pod_bytes)
+        """(intra-pod, inter-pod) bytes on the wire incl. padding.
+
+        Inter-pod bytes are costed at the wire codec's element width (plus
+        int8 scale side information); ``wire="none"`` reports the planner's
+        accounting verbatim (:func:`repro.comm.wire.scaled_wire_bytes`).
+        """
+        return wire_mod.scaled_wire_bytes(self.plan, self.wire, self.elem_bytes)
 
     @property
     def payload_bytes(self) -> Tuple[int, int]:

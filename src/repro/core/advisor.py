@@ -30,11 +30,13 @@ from typing import List, Optional, Sequence, Tuple
 from repro.core.hardware import MachineParams, get_machine
 from repro.core.patterns import CommPattern
 from repro.core.perfmodel import (
-    MODELED_PAIRS,
+    WIRE_MODELS,
     PatternStats,
     Strategy,
     Transport,
-    predict_all,
+    get_wire,
+    modeled_pairs,
+    predict,
     predict_overlapped,
     predict_solver,
 )
@@ -74,13 +76,17 @@ class ComputeProfile:
 
 class _StrategyKey:
     """Shared ``key`` spelling for per-call and whole-solve recommendations
-    (``strategy/transport`` with a ``+overlap`` suffix) -- one place to keep
-    the format the pinned regression grids assert on."""
+    (``strategy/transport`` with ``+overlap`` / ``+wire:<codec>`` suffixes)
+    -- one place to keep the format the pinned regression grids assert on."""
 
     @property
     def key(self) -> str:
         base = f"{self.strategy.value}/{self.transport.value}"
-        return base + "+overlap" if self.overlap else base
+        if self.overlap:
+            base += "+overlap"
+        if getattr(self, "wire", "none") != "none":
+            base += f"+wire:{self.wire}"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +96,8 @@ class Recommendation(_StrategyKey):
     predicted_time: float
     #: True when this entry models the split-phase (overlapped) execution
     overlap: bool = False
+    #: inter-pod wire codec this entry models ("none" = full precision)
+    wire: str = "none"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,22 +113,45 @@ class Advice:
         return self.ranked[0]
 
     def time_for(
-        self, strategy: Strategy, transport: Transport, overlap: bool = False
+        self,
+        strategy: Strategy,
+        transport: Transport,
+        overlap: bool = False,
+        wire: str = "none",
     ) -> float:
         for r in self.ranked:
             if (
                 r.strategy is strategy
                 and r.transport is transport
                 and r.overlap == overlap
+                and r.wire == wire
             ):
                 return r.predicted_time
-        raise KeyError((strategy, transport, overlap))
+        raise KeyError((strategy, transport, overlap, wire))
 
     def table(self) -> str:
         w = max(len(r.key) for r in self.ranked)
         lines = [f"{'strategy':<{w}}  predicted_s"]
         lines += [f"{r.key:<{w}}  {r.predicted_time:.3e}" for r in self.ranked]
         return "\n".join(lines)
+
+
+def _wire_codecs(wire) -> Tuple[str, ...]:
+    """Normalize the ``wire`` argument of :func:`advise` to codec names.
+
+    ``None`` keeps the paper's full-precision ranking; ``"auto"`` ranks
+    every executable codec; a single name or a sequence restricts the
+    candidates (``"none"`` is a valid explicit candidate).
+    """
+    if wire is None:
+        return ("none",)
+    if isinstance(wire, str):
+        codecs = tuple(WIRE_MODELS) if wire == "auto" else (wire,)
+    else:
+        codecs = tuple(wire)
+    for c in codecs:
+        get_wire(c)  # raises on unknown names
+    return codecs
 
 
 def advise_stats(
@@ -131,6 +162,7 @@ def advise_stats(
     exclude: Sequence[Tuple[Strategy, Transport]] = (),
     payload_width: int = 1,
     compute: Optional[ComputeProfile] = None,
+    wire: "str | Sequence[str] | None" = None,
 ) -> Advice:
     """Rank strategies for raw Table 7 stats.
 
@@ -149,33 +181,39 @@ def advise_stats(
     split-phase pipeline (:func:`~repro.core.perfmodel.predict_overlapped`),
     and the two variants compete in one ranking.  Without a compute profile
     the ranking is communication-only, as in the paper.
+
+    ``wire`` adds inter-pod codec variants (``+wire:<codec>`` keys, see
+    :func:`_wire_codecs`): each candidate codec scales the inter-node byte
+    terms by its compression ratio and pays the
+    :func:`~repro.core.perfmodel.t_codec` encode+decode term, so
+    bandwidth-bound patterns flip to a compressed wire while latency-bound
+    patterns keep ``none``.
     """
     m = get_machine(machine) if isinstance(machine, str) else machine
     stats = stats.widened(payload_width)
     keep = 1.0 - duplicate_fraction
+    codecs = _wire_codecs(wire)
     preds = {}
-    for (strategy, transport), t in predict_all(
-        m, stats, include_two_step_one=include_two_step_one
-    ).items():
+    for strategy, transport in modeled_pairs(include_two_step_one):
         if (strategy, transport) in exclude:
             continue
         stats_eff = stats
         if duplicate_fraction > 0.0 and strategy is not Strategy.STANDARD:
             stats_eff = stats.scaled(keep)
-            t = predict_all(m, stats_eff, include_two_step_one=True)[
-                (strategy, transport)
-            ]
-        if compute is None:
-            preds[(strategy, transport, False)] = t
-        else:
-            preds[(strategy, transport, False)] = t + compute.total
-            preds[(strategy, transport, True)] = predict_overlapped(
-                m, strategy, transport, stats_eff,
-                compute.t_interior, compute.t_boundary,
-            )
+        for codec in codecs:
+            wm = get_wire(codec)
+            t = predict(m, strategy, transport, stats_eff, wire=wm)
+            if compute is None:
+                preds[(strategy, transport, False, codec)] = t
+            else:
+                preds[(strategy, transport, False, codec)] = t + compute.total
+                preds[(strategy, transport, True, codec)] = predict_overlapped(
+                    m, strategy, transport, stats_eff,
+                    compute.t_interior, compute.t_boundary, wire=wm,
+                )
     ranked = tuple(
-        Recommendation(s, tr, t, overlap=ov)
-        for (s, tr, ov), t in sorted(preds.items(), key=lambda kv: kv[1])
+        Recommendation(s, tr, t, overlap=ov, wire=cd)
+        for (s, tr, ov, cd), t in sorted(preds.items(), key=lambda kv: kv[1])
     )
     return Advice(machine=m.name, stats=stats, ranked=ranked)
 
@@ -278,14 +316,8 @@ def advise_solver(
         raise ValueError(f"iters must be >= 1, got {iters}")
     m = get_machine(machine) if isinstance(machine, str) else machine
     wide = stats.widened(payload_width)
-    pairs = list(MODELED_PAIRS)
-    if include_two_step_one:
-        pairs += [
-            (Strategy.TWO_STEP_ONE, Transport.STAGED_HOST),
-            (Strategy.TWO_STEP_ONE, Transport.DEVICE_AWARE),
-        ]
     recs = []
-    for strategy, transport in pairs:
+    for strategy, transport in modeled_pairs(include_two_step_one):
         if (strategy, transport) in exclude:
             continue
         variants = [(False, 0.0, 0.0)]
@@ -328,11 +360,13 @@ def advise(
     duplicate_fraction: float = 0.0,
     payload_width: int = 1,
     compute: Optional[ComputeProfile] = None,
+    wire: "str | Sequence[str] | None" = None,
 ) -> Advice:
     """Rank strategies for a concrete communication pattern.
 
-    ``payload_width`` is the batched-payload column count ``k`` and
-    ``compute`` enables overlap-aware ranking (see :func:`advise_stats`).
+    ``payload_width`` is the batched-payload column count ``k``,
+    ``compute`` enables overlap-aware ranking, and ``wire`` adds inter-pod
+    codec variants with ``+wire:<codec>`` keys (see :func:`advise_stats`).
 
     >>> from repro.core import figure43_pattern
     >>> adv = advise(figure43_pattern(2048, 256, 16), machine="lassen")
@@ -348,4 +382,5 @@ def advise(
         duplicate_fraction=duplicate_fraction,
         payload_width=payload_width,
         compute=compute,
+        wire=wire,
     )

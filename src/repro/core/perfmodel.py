@@ -22,6 +22,15 @@ composite into its on-node and inter-node terms, and
 -- the split-phase pipeline where interior compute hides behind the
 inter-node phase (paper §4.6 closing discussion; Bienz et al., "Modeling
 Data Movement Performance on Heterogeneous Architectures").
+
+Wire codecs (:mod:`repro.comm.wire`) extend every composite with a third
+lever: a :class:`WireModel` scales the inter-node *byte* terms by its
+compression ratio (message counts and every on-node term are untouched --
+exactly the executor's behaviour, which encodes only DCI-crossing
+segments) and adds an unhideable encode+decode compute term to the local
+phase.  ``predict(..., wire=...)`` / ``predict_phases`` /
+``predict_overlapped`` stay mutually consistent:
+``predict_phases(...).total == predict(...)`` for every codec.
 """
 
 from __future__ import annotations
@@ -66,6 +75,21 @@ MODELED_PAIRS = [
     (Strategy.SPLIT_MD, Transport.STAGED_HOST),
     (Strategy.SPLIT_DD, Transport.STAGED_HOST),
 ]
+
+
+def modeled_pairs(
+    include_two_step_one: bool = False,
+) -> "list[Tuple[Strategy, Transport]]":
+    """The candidate (strategy, transport) pairs -- the ONE enumeration the
+    advisor and :func:`predict_all` share, so the optional best-case 2-Step
+    extension cannot drift between them."""
+    pairs = list(MODELED_PAIRS)
+    if include_two_step_one:
+        pairs += [
+            (Strategy.TWO_STEP_ONE, Transport.STAGED_HOST),
+            (Strategy.TWO_STEP_ONE, Transport.DEVICE_AWARE),
+        ]
+    return pairs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +150,71 @@ class PatternStats:
         if payload_width == 1:
             return self
         return self.scaled(float(payload_width))
+
+
+# ---------------------------------------------------------------------------
+# Wire codec models (inter-node byte compression, repro.comm.wire)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WireModel:
+    """Model parameters of one inter-pod wire codec.
+
+    Attributes:
+      codec: executable codec name (``repro.comm.wire.WIRE_CODECS``).
+      ratio: inter-node byte multiplier (0.5 for 16-bit wires; the int8
+        entry carries a little extra for the per-block float32 scales).
+      alpha: per-exchange encode+decode launch overhead, seconds.
+      beta: per-byte codec compute cost, seconds/byte, paid once for the
+        encode pass and once for the decode pass over the max node
+        injection volume ``s_node`` (the quantizer's extra amax sweep is
+        folded into the int8 beta).
+
+    The codec compute term is *unhideable*: encoding must finish before the
+    inter-node dispatch and decoding starts after arrival, so
+    :func:`predict_phases` charges it to the local phase and the split-phase
+    pipeline of :func:`predict_overlapped` cannot hide it.
+    """
+
+    codec: str
+    ratio: float
+    alpha: float
+    beta: float
+
+
+#: model constants per executable codec.  Recorded at pin time next to the
+#: machine registry numbers: 16-bit casts halve DCI bytes and stream the
+#: payload once per side at on-device memory bandwidth (~1 TB/s); int8
+#: quarters the bytes (plus ~1% for scales) but pays an extra amax sweep.
+WIRE_MODELS: Dict[str, WireModel] = {
+    "none": WireModel("none", 1.0, 0.0, 0.0),
+    "bf16": WireModel("bf16", 0.5, 1.0e-6, 1.0e-12),
+    "f16": WireModel("f16", 0.5, 1.0e-6, 1.0e-12),
+    "int8": WireModel("int8", 0.26, 1.0e-6, 2.0e-12),
+}
+
+
+def get_wire(wire: "WireModel | str | None") -> WireModel:
+    """Normalize a codec name / model / ``None`` to a :class:`WireModel`."""
+    if wire is None:
+        return WIRE_MODELS["none"]
+    if isinstance(wire, WireModel):
+        return wire
+    try:
+        return WIRE_MODELS[wire]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown wire codec {wire!r}; known: {sorted(WIRE_MODELS)}"
+        ) from e
+
+
+def t_codec(wire: "WireModel | str | None", s_node: float) -> float:
+    """Encode+decode compute of one exchange (0 for the ``none`` codec)."""
+    w = get_wire(wire)
+    if w.codec == "none":
+        return 0.0
+    return w.alpha + 2.0 * w.beta * float(s_node)
 
 
 # ---------------------------------------------------------------------------
@@ -239,8 +328,27 @@ def predict(
     strategy: Strategy,
     transport: Transport,
     stats: PatternStats,
+    wire: "WireModel | str | None" = None,
 ) -> float:
-    """Predicted time for one (strategy, transport) pair -- paper Table 6."""
+    """Predicted time for one (strategy, transport) pair -- paper Table 6.
+
+    ``wire`` selects an inter-node codec (:data:`WIRE_MODELS`): byte terms
+    of the inter-node phase scale by its compression ratio and the local
+    phase pays :func:`t_codec`; consistent with :func:`predict_phases` by
+    construction (``predict == predict_phases(...).total``).
+    """
+    w = get_wire(wire)
+    if w.codec != "none":
+        return predict_phases(machine, strategy, transport, stats, wire=w).total
+    return _predict_base(machine, strategy, transport, stats)
+
+
+def _predict_base(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+) -> float:
     ppn = machine.procs_per_node
 
     if strategy is Strategy.STANDARD:
@@ -327,16 +435,40 @@ def predict_phases(
     strategy: Strategy,
     transport: Transport,
     stats: PatternStats,
+    wire: "WireModel | str | None" = None,
 ) -> PhaseTimes:
     """Factor the Table 6 composite into (on-node, inter-node) terms.
 
     Invariant (pinned by tests): ``phases.local + phases.inter`` equals
-    :func:`predict` for every modeled pair.
+    :func:`predict` for every modeled pair and every wire codec.
+
+    With a ``wire`` codec the inter phase is evaluated on ratio-scaled byte
+    stats (message counts untouched -- the codec shrinks bytes, not
+    messages) and the local phase pays the unhideable :func:`t_codec`
+    encode+decode term.
     """
+    w = get_wire(wire)
+    base = _predict_phases_base(machine, strategy, transport, stats)
+    if w.codec == "none":
+        return base
+    inter = _predict_phases_base(
+        machine, strategy, transport, stats.scaled(w.ratio)
+    ).inter
+    return PhaseTimes(local=base.local + t_codec(w, stats.s_node), inter=inter)
+
+
+def _predict_phases_base(
+    machine: MachineParams,
+    strategy: Strategy,
+    transport: Transport,
+    stats: PatternStats,
+) -> PhaseTimes:
     ppn = machine.procs_per_node
 
     if strategy is Strategy.STANDARD:
-        return PhaseTimes(local=0.0, inter=predict(machine, strategy, transport, stats))
+        return PhaseTimes(
+            local=0.0, inter=_predict_base(machine, strategy, transport, stats)
+        )
 
     if strategy is Strategy.THREE_STEP:
         if transport is Transport.STAGED_HOST:
@@ -389,6 +521,7 @@ def predict_overlapped(
     stats: PatternStats,
     t_interior: float,
     t_boundary: float,
+    wire: "WireModel | str | None" = None,
 ) -> float:
     """Split-phase pipeline time with interior compute hiding the inter-node
     phase: ``T = T_local + max(T_inter, T_interior) + T_boundary``.
@@ -397,11 +530,14 @@ def predict_overlapped(
     local compute times in seconds (e.g. from a measured per-step compute
     time scaled by :attr:`repro.core.split_plan.RowPhaseSplit.interior_tile_fraction`).
     The non-overlapped counterpart of the same step is
-    ``predict(...) + t_interior + t_boundary``.
+    ``predict(...) + t_interior + t_boundary``.  A ``wire`` codec shrinks
+    the hideable inter phase but its :func:`t_codec` term lands in
+    ``T_local`` -- compression buys less once compute already hides the
+    inter-node time.
     """
     if t_interior < 0 or t_boundary < 0:
         raise ValueError("compute times must be non-negative")
-    ph = predict_phases(machine, strategy, transport, stats)
+    ph = predict_phases(machine, strategy, transport, stats, wire=wire)
     return ph.local + max(ph.inter, t_interior) + t_boundary
 
 
@@ -520,15 +656,12 @@ def predict_all(
     machine: MachineParams,
     stats: PatternStats,
     include_two_step_one: bool = False,
+    wire: "WireModel | str | None" = None,
 ) -> Dict[Tuple[Strategy, Transport], float]:
     """Evaluate every modeled (strategy, transport) pair for one pattern."""
     out: Dict[Tuple[Strategy, Transport], float] = {}
-    pairs = list(MODELED_PAIRS)
-    if include_two_step_one:
-        pairs += [
-            (Strategy.TWO_STEP_ONE, Transport.STAGED_HOST),
-            (Strategy.TWO_STEP_ONE, Transport.DEVICE_AWARE),
-        ]
-    for strategy, transport in pairs:
-        out[(strategy, transport)] = predict(machine, strategy, transport, stats)
+    for strategy, transport in modeled_pairs(include_two_step_one):
+        out[(strategy, transport)] = predict(
+            machine, strategy, transport, stats, wire=wire
+        )
     return out

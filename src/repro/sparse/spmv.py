@@ -211,6 +211,15 @@ class DistributedSpMV:
     :func:`repro.core.split_plan.split_rows`) runs after ``finish()``.
     Results are bit-compatible with the barrier path for every strategy.
 
+    ``wire`` selects the exchange's inter-pod codec
+    (:data:`repro.comm.wire.WIRE_CODECS`): halo values arriving from other
+    pods carry the codec's pinned error bound while on-pod halo values stay
+    full precision; ``wire="none"`` (the default) is bitwise identical to
+    the codec-free path.  ``wire="auto"`` lets the advisor rank
+    ``+wire:<codec>`` variants and picks the codec jointly with the
+    strategy (``strategy="auto"``) or the fastest codec for a fixed
+    strategy.
+
     Example (needs >= ``topo.nranks`` devices, e.g. via
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)::
 
@@ -234,17 +243,41 @@ class DistributedSpMV:
     fuse_program: bool = True
     payload_width: int = 1
     overlap: bool = False
+    wire: str = "none"
 
     def __post_init__(self) -> None:
         topo = self.partition.topo
-        if self.strategy == "auto":
+        if self.strategy == "auto" or self.wire == "auto":
             advice = advise(
                 self.partition.pattern.to_comm_pattern(),
                 machine="tpu_v5e_pod",
                 payload_width=self.payload_width,
+                # "auto" ranks every codec; a fixed codec constrains the
+                # candidate set; "none" keeps the paper's ranking
+                wire="auto" if self.wire == "auto" else (
+                    None if self.wire == "none" else self.wire
+                ),
             )
             self.advice = advice
-            self.strategy = _ADVISED[advice.best.strategy]
+            best = advice.best
+            if self.strategy != "auto":
+                # wire="auto" with a pinned strategy: fastest codec among
+                # this strategy's own variants
+                best = next(
+                    (
+                        r for r in advice.ranked
+                        if _ADVISED[r.strategy] == self.strategy
+                    ),
+                    None,
+                )
+                if best is None:
+                    raise ValueError(
+                        f"unknown strategy {self.strategy!r}; known: "
+                        f"{sorted(set(_ADVISED.values()))}"
+                    )
+            self.strategy = _ADVISED[best.strategy]
+            if self.wire == "auto":
+                self.wire = best.wire
         else:
             self.advice = None
         if self.mesh is None:
@@ -259,6 +292,7 @@ class DistributedSpMV:
             mesh=self.mesh,
             message_cap_bytes=self.message_cap_bytes,
             fuse_program=self.fuse_program,
+            wire=self.wire,
         )
         L = self.partition.rows_per_rank
         g = topo.nranks

@@ -174,6 +174,140 @@ def test_payload_width_flips_exist():
 
 
 # ---------------------------------------------------------------------------
+# Wire-codec crossovers (inter-pod compression, PR 5)
+# ---------------------------------------------------------------------------
+
+#: (machine, scenario, k, wire candidates) -> advised key.  The intended
+#: physics: latency-bound tiny patterns keep ``none`` (the codec's launch
+#: alpha cannot pay for bytes it barely shrinks); bandwidth-bound patterns
+#: flip to a compressed wire, sometimes flipping the *strategy* with it
+#: (compression substitutes for dedup: standard+wire overtakes node-aware
+#: variants whose unhideable on-node phases compression cannot shrink);
+#: Split keeps ``none`` longest because its inter phase is already spread
+#: over every on-pod rank (``s_node/ppn``).  Recorded from the models at
+#: pin time; a change here is a deliberate model change, not noise.
+NB = ("none", "bf16")
+WIRE_PINS = [
+    ("lassen", (2048, 256, 16), 1, "auto", "two_step/device_aware+wire:int8"),
+    ("lassen", (2048, 256, 16), 16, "auto", "two_step/device_aware+wire:int8"),
+    ("lassen", (512, 64, 4), 1, "auto", "standard/staged_host+wire:int8"),
+    ("lassen", (8192, 64, 16), 4, "auto", "standard/staged_host+wire:int8"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, "auto", "split_dd/staged_host"),
+    ("tpu_v5e_pod", (2048, 32, 4), 64, "auto", "standard/staged_host+wire:int8"),
+    ("tpu_v5e_pod", (256, 32, 4), 1, "auto", "standard/staged_host"),
+    ("tpu_v5e_pod", (256, 32, 4), 64, "auto", "standard/staged_host+wire:int8"),
+    # int8 excluded (accuracy budget): bf16 takes the same crossovers
+    ("lassen", (2048, 256, 16), 1, NB, "two_step/device_aware+wire:bf16"),
+    ("lassen", (2048, 256, 16), 16, NB, "three_step/device_aware+wire:bf16"),
+    ("lassen", (8192, 64, 16), 4, NB, "standard/staged_host+wire:bf16"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, NB, "split_dd/staged_host"),
+    ("tpu_v5e_pod", (256, 32, 4), 1, NB, "standard/staged_host"),
+    ("tpu_v5e_pod", (256, 32, 4), 64, NB, "standard/staged_host+wire:bf16"),
+]
+
+
+@pytest.mark.parametrize("machine,scenario,k,wire,expected", WIRE_PINS)
+def test_wire_advised_strategy_pinned(machine, scenario, k, wire, expected):
+    pat = figure43_pattern(*scenario)
+    adv = advise(pat, machine=machine, payload_width=k, wire=wire)
+    assert adv.best.key == expected, (
+        f"wire advisor drift for {machine}/{scenario}/k={k}/wire={wire}: "
+        f"got {adv.best.key}, pinned {expected}"
+    )
+
+
+def test_wire_pins_flip_with_width_and_candidates():
+    """The wire grid must contain both none-wins and codec-wins rows, and at
+    least one scenario that flips as k grows -- the codec crossover the
+    wire terms exist to model."""
+    auto = [p for p in WIRE_PINS if p[3] == "auto"]
+    assert any(p[4].endswith("+wire:int8") for p in auto)
+    assert any("+wire" not in p[4] for p in auto)
+    by_scen = {}
+    flips = 0
+    for machine, scenario, k, wire, expected in auto:
+        prev = by_scen.setdefault((machine, scenario), expected)
+        if prev != expected:
+            flips += 1
+    assert flips >= 1
+
+
+def test_wire_default_ranking_unchanged():
+    """Without a wire argument the ranking must not contain wire variants
+    (the paper's full-precision ranking is the default)."""
+    pat = figure43_pattern(2048, 256, 16)
+    adv = advise(pat, machine="lassen")
+    assert all(r.wire == "none" for r in adv.ranked)
+    assert all("+wire" not in r.key for r in adv.ranked)
+
+
+def test_wire_variants_cover_every_pair():
+    """wire="auto" ranks every (strategy, transport) x codec exactly once
+    and the none-variant times equal the default ranking."""
+    from repro.core import WIRE_MODELS
+
+    pat = figure43_pattern(8192, 64, 16)
+    base = advise(pat, machine="lassen")
+    adv = advise(pat, machine="lassen", wire="auto")
+    assert len(adv.ranked) == len(WIRE_MODELS) * len(base.ranked)
+    for r in base.ranked:
+        assert adv.time_for(r.strategy, r.transport) == pytest.approx(
+            r.predicted_time
+        )
+
+
+def test_wire_never_shrinks_messages_only_bytes():
+    """A wire codec must leave latency-bound terms alone: on a tiny
+    64-byte-message pattern every codec variant is strictly slower than
+    ``none`` (alpha terms untouched, codec launch overhead added)."""
+    from repro.core import WIRE_MODELS, get_machine, predict
+
+    m = get_machine("lassen")
+    stats = figure43_pattern(64, 64, 8).stats()
+    for s, tr in MODELED_PAIRS:
+        base = predict(m, s, tr, stats)
+        for codec in WIRE_MODELS:
+            if codec == "none":
+                assert predict(m, s, tr, stats, wire=codec) == base
+            else:
+                assert predict(m, s, tr, stats, wire=codec) > base, (s, tr, codec)
+
+
+def test_wire_phases_sum_to_predict():
+    """predict_phases(..., wire) must stay consistent with predict(..., wire)
+    for every codec -- the Table 6 factoring invariant extended."""
+    from repro.core import WIRE_MODELS
+
+    for machine in ("lassen", "tpu_v5e_pod"):
+        m = get_machine(machine)
+        for scenario in [(2048, 256, 16), (65536, 32, 4)]:
+            stats = figure43_pattern(*scenario).stats()
+            for s, tr in MODELED_PAIRS:
+                for codec in WIRE_MODELS:
+                    ph = predict_phases(m, s, tr, stats, wire=codec)
+                    assert ph.total == pytest.approx(
+                        predict(m, s, tr, stats, wire=codec), rel=1e-12
+                    )
+
+
+def test_wire_overlap_codec_compute_is_unhideable():
+    """In the overlapped pipeline the codec's encode+decode term lands in
+    T_local: with interior compute large enough to hide every inter phase,
+    the wired variant is *slower* than none by exactly t_codec."""
+    from repro.core import t_codec
+
+    m = get_machine("lassen")
+    stats = figure43_pattern(8192, 64, 16).stats()
+    big = 1.0  # hides any inter phase
+    for s, tr in MODELED_PAIRS:
+        t_none = predict_overlapped(m, s, tr, stats, big, 0.0)
+        t_bf16 = predict_overlapped(m, s, tr, stats, big, 0.0, wire="bf16")
+        assert t_bf16 - t_none == pytest.approx(
+            t_codec("bf16", stats.s_node), rel=1e-9
+        )
+
+
+# ---------------------------------------------------------------------------
 # Iteration-amortized (solver) crossovers -- PR 4
 # ---------------------------------------------------------------------------
 

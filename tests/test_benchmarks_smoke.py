@@ -2,11 +2,14 @@
 
 Benchmark code is not imported by the library, so without this test it can
 rot silently (stale imports, renamed APIs).  The smoke pass runs every
-section in a reduced configuration and this test asserts the run succeeds
-and that the load-bearing rows -- including the SpMM k-sweep with its
-fused-beats-looped claim -- are present.
+section in a reduced configuration and this test asserts the run succeeds,
+that the load-bearing rows -- including the SpMM k-sweep with its
+fused-beats-looped claim and the wire-codec byte reductions -- are
+present, and that the machine-readable ``BENCH_exchange.json`` record has
+the pinned schema.
 """
 
+import json
 import os
 import re
 import subprocess
@@ -16,6 +19,7 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+BENCH_JSON = os.path.join(REPO, "BENCH_exchange.json")
 
 
 @pytest.mark.slow
@@ -48,6 +52,11 @@ def test_benchmarks_run_smoke():
         "solver/thermal_like/two_step/ov1",  # solver: CG workload sweep
         "solver/random_block/standard/ov0",
         "solver/audikw_like/advisor",
+        "wiremodel/tiny/k1",  # wire: model crossover sweep
+        "wiremodel/big/k1",
+        "wire/2p/standard/none",  # wire: measured codec sweep
+        "wire/2p/two_step/bf16",
+        "wire/2p/split/int8",
         "planning/8r/",  # planning
         "kernel/spmm_ell/interpret/k4",  # kernels
     ):
@@ -75,3 +84,38 @@ def test_benchmarks_run_smoke():
     assert solver_rows, f"no solver rows\n{out[-2000:]}"
     for conv, relres in solver_rows:
         assert conv == "1" and float(relres) <= 1e-6, (conv, relres)
+
+    # the wire sweep's acceptance property in miniature: every measured
+    # codec row passed its parity check, and the bf16 wire reports >= 1.8x
+    # inter-pod byte reduction for every strategy
+    wire_rows = re.findall(
+        r"wire/2p/(\w+)/(\w+),.*reduction=([0-9.]+)x parity=ok", out
+    )
+    assert len(wire_rows) >= 16, f"missing wire rows\n{out[-2000:]}"
+    for strat, codec, red in wire_rows:
+        if codec == "bf16":
+            assert float(red) >= 1.8, (strat, codec, red)
+        if codec == "none":
+            assert float(red) == 1.0, (strat, red)
+
+    # machine-readable record: schema, per-section timings, wire counters
+    with open(BENCH_JSON) as f:
+        report = json.load(f)
+    assert report["schema"] == 1
+    assert report["smoke"] is True
+    assert report["failures"] == []
+    for name, sec in report["sections"].items():
+        assert sec["ok"] is True, name
+        assert sec["elapsed_s"] >= 0.0
+    assert set(report["sections"]) >= {"params", "spmv", "overlap", "solver", "wire"}
+    counters = report["wire_bytes"]["codecs"]
+    assert set(counters) == {"standard", "two_step", "three_step", "split"}
+    for strat, per_codec in counters.items():
+        none = per_codec["none"]
+        assert set(per_codec) == {"none", "bf16", "f16", "int8"}
+        for codec, c in per_codec.items():
+            # codecs never touch intra-pod bytes
+            assert c["intra_pod_bytes"] == none["intra_pod_bytes"], (strat, codec)
+        assert (
+            none["inter_pod_bytes"] / per_codec["bf16"]["inter_pod_bytes"] >= 1.8
+        ), strat

@@ -144,6 +144,39 @@ def test_split_cache_counts_and_clears(monkeypatch):
     assert len(comm_strategies._SPLIT_CACHE) == 0
 
 
+def _flat_prims(jaxpr, out):
+    for e in jaxpr.eqns:
+        out[e.primitive.name] = out.get(e.primitive.name, 0) + 1
+        for v in e.params.values():
+            if hasattr(v, "jaxpr"):
+                _flat_prims(v.jaxpr, out)
+    return out
+
+
+@pytest.mark.parametrize("feat", [(), (3,)])
+def test_execute_scratch_is_one_fused_pad(feat):
+    """The executor's ``ext = [local | buf]`` scratch must be built with a
+    single fused pad -- no zeros buffer materialized and concatenated per
+    call.  Pinned on a collective-free (gather-only) program so the op
+    census is exact: one ``pad``, zero ``concatenate``."""
+    import jax
+
+    from repro.comm.strategies import _execute
+
+    topo = PodTopology(npods=2, ppn=2)
+    L, w_max, out_size = 4, 6, 5
+    ops = (("gather", 6), ("gather", 5))
+    i1 = np.zeros((1, 6), np.int32)
+    i2 = np.zeros((1, 5), np.int32)
+    x = np.zeros((1, L) + feat, np.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda l, a, b: _execute(ops, topo, L, w_max, out_size, l, (a, b))
+    )(x, i1, i2)
+    prims = _flat_prims(jaxpr.jaxpr, {})
+    assert prims.get("pad", 0) == 1, prims
+    assert prims.get("concatenate", 0) == 0, prims
+
+
 @pytest.mark.slow
 def test_batched_plan_cache_keying_on_devices(subproc):
     """Distinct payload widths k must NOT thrash the plan/compile caches:
