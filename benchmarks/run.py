@@ -21,8 +21,9 @@ matrices/iterations/devices).  It exists so a tier-1 test can execute the
 benchmark scripts end to end and catch rot; absolute numbers from a smoke
 pass are meaningless.
 
-Every *full* run (all sections) also writes ``BENCH_exchange.json`` at the
-repo root (single-section runs leave it untouched) -- a
+Every full *passing* run (all sections, no failures) also writes
+``BENCH_exchange.json`` at the repo root (single-section runs and runs
+with failed sections leave it untouched) -- a
 machine-readable record of per-section wall times plus the wire-byte
 counters of a fixed reference exchange (the numbers
 ``IrregularExchange.wire_bytes`` reports, per strategy x codec) -- so the
@@ -71,6 +72,31 @@ def _wire_byte_counters() -> dict:
             per_codec[codec] = {"intra_pod_bytes": intra, "inter_pod_bytes": inter}
         out["codecs"][strategy] = per_codec
     return out
+
+
+def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JSON) -> bool:
+    """Write the tracked record iff this was a FULL, PASSING run.
+
+    The record's contract (``tests/test_benchmarks_smoke.py``) is
+    ``failures == []`` with every section ok, so a broken environment must
+    never clobber the healthy committed trajectory file; likewise a
+    single-section iteration must not replace the cross-PR record (and only
+    a full run pays for the wire counters it would otherwise discard).
+    """
+    failures = report["failures"]
+    not_ok = [n for n, s in report["sections"].items() if not s["ok"]]
+    if failures or not_ok:
+        print(f"\n### sections failed ({failures or not_ok}); {path} left untouched")
+        return False
+    if set(wanted) != set(section_names):
+        print(f"\n### partial run ({wanted}); {path} left untouched")
+        return False
+    report["wire_bytes"] = _wire_byte_counters()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"\n### wrote {path}")
+    return True
 
 
 def main() -> None:
@@ -124,17 +150,7 @@ def main() -> None:
             "ok": ok,
         }
     report["failures"] = failures
-    if set(wanted) == set(sections):
-        # only a full run may replace the tracked record: a single-section
-        # iteration must not clobber the cross-PR trajectory file (and only
-        # a full run pays for the counters it would otherwise discard)
-        report["wire_bytes"] = _wire_byte_counters()
-        with open(BENCH_JSON, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"\n### wrote {BENCH_JSON}")
-    else:
-        print(f"\n### partial run ({wanted}); {BENCH_JSON} left untouched")
+    maybe_write_record(report, wanted, sections)
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")
 

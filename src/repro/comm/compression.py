@@ -19,6 +19,23 @@ residual returned by ``psum_hierarchical``) carries the quantization error
 into the next step so the scheme stays convergent (Karimireddy et al.,
 2019 -- standard practice; not from the reproduced paper, recorded as a
 beyond-paper optimization).
+
+Non-finite payloads never poison their finite neighbors: the scale is
+taken over *finite* magnitudes (:func:`finite_amax` -- an ``inf`` amax
+would quantize every element to 0 and dequantize it to ``0 * inf = nan``),
+and :func:`int8_quantize` masks non-finite elements out of the division.
+What a non-finite element itself becomes depends on how the payload moves:
+
+* *permutation-moved* payloads (the exchange wire) pass a reserved
+  ``nonfinite_code`` (outside the symmetric ``[-qmax, qmax]`` range) that
+  :func:`int8_dequantize` decodes to ``nan``, so divergence stays visible
+  to downstream ``isfinite`` guards;
+* *summed* payloads (:class:`Compressor`, whose codes cross pods through a
+  ``psum``) cannot carry a reserved code through the sum, so ``+/-inf``
+  saturates to ``sign(x) * qmax`` and ``nan`` contributes 0 -- the
+  non-finiteness is not lost: the error-feedback residual
+  (``shard - decompress(q)``) stays ``inf``/``nan`` at exactly those
+  elements and re-enters the next step.
 """
 
 from __future__ import annotations
@@ -28,6 +45,17 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def finite_amax(x: jnp.ndarray, axis=None, keepdims: bool = False) -> jnp.ndarray:
+    """Max magnitude over the *finite* elements of ``x`` (0 where none are).
+
+    The quantization scale must come from this, never from a plain
+    ``max(abs(x))``: one ``inf``/``nan`` element would otherwise inflate
+    the scale to ``inf`` and destroy every finite neighbor in the block.
+    """
+    mag = jnp.where(jnp.isfinite(x), jnp.abs(x), 0)
+    return jnp.max(mag, axis=axis, keepdims=keepdims)
 
 
 def int8_scale(amax: jnp.ndarray, qmax: float) -> jnp.ndarray:
@@ -43,21 +71,43 @@ def int8_scale(amax: jnp.ndarray, qmax: float) -> jnp.ndarray:
     return jnp.maximum(amax / qmax, jnp.finfo(amax.dtype).tiny)
 
 
-def int8_quantize(x: jnp.ndarray, scale: jnp.ndarray, qmax: float) -> jnp.ndarray:
-    """Linear quantization to int8 under a precomputed ``scale``."""
-    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+def int8_quantize(
+    x: jnp.ndarray, scale: jnp.ndarray, qmax: float, nonfinite_code: "int | None" = None
+) -> jnp.ndarray:
+    """Linear quantization to int8 under a precomputed ``scale``.
+
+    Non-finite elements are masked out of the division (``inf / scale``
+    would survive the clip as a spurious ``+/-qmax`` and ``nan`` would hit
+    an undefined float->int cast) and become ``nonfinite_code`` when one is
+    given (permutation-moved wire payloads), else ``sign(x) * qmax`` with
+    ``nan -> 0`` (summable payloads; see the module docstring).
+    """
+    finite = jnp.isfinite(x)
+    q = jnp.clip(jnp.round(jnp.where(finite, x, 0) / scale), -qmax, qmax)
+    if nonfinite_code is None:
+        fallback = jnp.where(jnp.isnan(x), 0.0, jnp.sign(x) * qmax)
+    else:
+        fallback = jnp.asarray(float(nonfinite_code))
+    return jnp.where(finite, q, fallback).astype(jnp.int8)
 
 
-def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+def int8_dequantize(
+    q: jnp.ndarray, scale: jnp.ndarray, nonfinite_code: "int | None" = None
+) -> jnp.ndarray:
     """Dequantize an int8/int32 payload; the result carries ``scale.dtype``.
 
     The multiply runs at float32-or-wider so an int32 *sum* of quantized
     values stays exact (a bfloat16 product would round ``q`` itself once it
     exceeds 256, e.g. summing near-saturated int8 over many pods) and only
-    the final result rounds to ``scale.dtype``.
+    the final result rounds to ``scale.dtype``.  With ``nonfinite_code``,
+    elements carrying that code decode to ``nan`` (the inverse of
+    :func:`int8_quantize`'s wire-payload mode).
     """
     wide = jnp.promote_types(scale.dtype, jnp.float32)
-    return (q.astype(wide) * scale.astype(wide)).astype(scale.dtype)
+    deq = q.astype(wide) * scale.astype(wide)
+    if nonfinite_code is not None:
+        deq = jnp.where(q == nonfinite_code, jnp.nan, deq)
+    return deq.astype(scale.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,10 +126,12 @@ class Compressor:
         The returned ``scale`` keeps ``x``'s floating dtype, so a
         bfloat16 payload round-trips through :meth:`decompress` as bfloat16
         (error-feedback residuals must not silently upcast); see
-        :func:`int8_scale` for the dtype-aware tiny guard.
+        :func:`int8_scale` for the dtype-aware tiny guard and
+        :func:`finite_amax` for why one inf/nan element must not set the
+        scale (its non-finiteness survives in the error-feedback residual,
+        not in the summed codes).
         """
-        amax = jnp.max(jnp.abs(x))
-        amax = jax.lax.pmax(amax, outer_axis)
+        amax = jax.lax.pmax(finite_amax(x), outer_axis)
         scale = int8_scale(amax, self.qmax)
         return int8_quantize(x, scale, self.qmax), scale
 

@@ -136,16 +136,24 @@ def _encode_blocks(blocks, codec: str):
     Only called when :func:`repro.comm.wire.applies` said yes.
     """
     if codec in ("bf16", "f16"):
-        # saturate instead of overflowing to inf (mirrors wire.roundtrip_np)
+        # saturate finite overflow only; true inf/nan propagate through the
+        # cast (mirrors wire.roundtrip_np)
         wdt = jnp.bfloat16 if codec == "bf16" else jnp.float16
         fmax = float(jnp.finfo(wdt).max)
-        return jnp.clip(blocks, -fmax, fmax).astype(wdt), None
+        sat = jnp.where(
+            jnp.isfinite(blocks), jnp.clip(blocks, -fmax, fmax), blocks
+        )
+        return sat.astype(wdt), None
     # int8: one scale per leading-axis block, shared quantizer core
+    # (finite-aware scale + reserved-code non-finite handling live in
+    # repro.comm.compression; wire.roundtrip_np is the numpy oracle)
     f = blocks.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(f), axis=tuple(range(1, f.ndim)))
+    amax = compression.finite_amax(f, axis=tuple(range(1, f.ndim)))
     scale = compression.int8_scale(amax, wire_mod.QMAX)
     bshape = (-1,) + (1,) * (f.ndim - 1)
-    q = compression.int8_quantize(f, scale.reshape(bshape), wire_mod.QMAX)
+    q = compression.int8_quantize(
+        f, scale.reshape(bshape), wire_mod.QMAX, nonfinite_code=wire_mod.INT8_NONFINITE
+    )
     return q, scale
 
 
@@ -154,7 +162,9 @@ def _decode_blocks(payload, aux, dtype):
     if aux is None:
         return payload.astype(dtype)
     return compression.int8_dequantize(
-        payload, aux.reshape((-1,) + (1,) * (payload.ndim - 1))
+        payload,
+        aux.reshape((-1,) + (1,) * (payload.ndim - 1)),
+        nonfinite_code=wire_mod.INT8_NONFINITE,
     ).astype(dtype)
 
 

@@ -19,19 +19,26 @@ Codecs
            (bitwise identical delivery).
 ``bf16``   ``f32 -> bfloat16`` truncation on the wire (2x fewer DCI bytes
            for f32 payloads).  Exact for bf16-representable values;
-           otherwise relative error <= ``2**-8`` per element.  Finite f32
-           magnitudes above bf16's max (~3.39e38) saturate to it (no
-           infinities on the wire).
+           otherwise relative error <= ``2**-8`` per element.  *Finite*
+           f32 magnitudes above bf16's max (~3.39e38) saturate to it so a
+           large-but-valid value never overflows on the wire; true
+           ``+/-inf`` and ``nan`` are bf16-representable and propagate
+           bit-faithfully (divergence must stay visible to ``isfinite``
+           guards downstream).
 ``f16``    ``f32 -> float16`` (2x).  Relative error <= ``2**-11`` for
-           values in f16's normal range; magnitudes beyond f16's max
-           saturate to ``+/-65504`` on the wire (no infinities), values
-           below the normal range degrade to the absolute subnormal step
-           ``2**-24``.
+           values in f16's normal range; *finite* magnitudes beyond f16's
+           max saturate to ``+/-65504`` on the wire while ``+/-inf`` and
+           ``nan`` propagate, values below the normal range degrade to
+           the absolute subnormal step ``2**-24``.
 ``int8``   blockwise linear int8 quantization with one float32 scale per
            wire block (an ``A2APod`` destination block or a
            ``PermuteWorld`` send block): ~4x fewer DCI bytes for f32.
            Absolute error <= ``scale/2``, i.e. relative to the block's max
-           magnitude at most ``0.5/127`` -- the pinned bound below.
+           magnitude at most ``0.5/127`` -- the pinned bound below.  The
+           scale is taken over the block's *finite* magnitudes; non-finite
+           elements ship as the reserved code :data:`INT8_NONFINITE` and
+           decode to ``nan`` (int8 cannot carry ``inf``), so one diverging
+           element never poisons its finite neighbors.
 
 A codec only *applies* to floating payloads wider than its wire type
 (:func:`applies`): a bfloat16 payload rides a ``bf16`` wire untouched, and
@@ -61,6 +68,10 @@ QMAX = 127.0
 
 #: bytes of side information (the float32 scale) shipped per int8 wire block
 INT8_SCALE_BYTES = 4
+
+#: reserved int8 wire code for a non-finite element (outside the symmetric
+#: quantization range [-QMAX, QMAX]); decodes to ``nan``
+INT8_NONFINITE = -128
 
 #: pinned per-element error bounds (see module docstring): casts are
 #: relative to |x|, int8 is relative to the wire block's max magnitude
@@ -167,22 +178,37 @@ def roundtrip_np(x: np.ndarray, codec: str, block_ndim: int) -> np.ndarray:
     >>> x = np.float32([[1.0, 1e-4]])
     >>> abs(roundtrip_np(x, "int8", 1)[0, 1]) <= 0.5 / 127
     True
+    >>> roundtrip_np(np.float32([np.inf, 1.5]), "bf16", 1).tolist()
+    [inf, 1.5]
+    >>> rt = roundtrip_np(np.float32([[-np.inf, 2.0]]), "int8", 1)
+    >>> bool(np.isnan(rt[0, 0])), float(rt[0, 1])
+    (True, 2.0)
     """
     if not applies(codec, x.dtype):
         return x
     if codec in ("bf16", "f16"):
-        # saturate: an overflowing cast would put infinities on the wire
-        # (f32 values above bf16's max ~3.39e38 exist; far more above f16's)
+        # saturate finite overflow only: a finite f32 above the wire max
+        # must not become inf, but a true inf/nan must stay non-finite
+        # (both wire types represent them) so divergence remains visible
         wdt = _cast_dtype(codec)
         fmax = float(ml_finfo_max(wdt))
-        return np.clip(x, -fmax, fmax).astype(wdt).astype(x.dtype)
-    # int8: one float32 scale per block
+        sat = np.where(np.isfinite(x), np.clip(x, -fmax, fmax), x)
+        return sat.astype(wdt).astype(x.dtype)
+    # int8: one float32 scale per block, taken over finite magnitudes so a
+    # single inf/nan cannot poison the block; non-finite elements ship as
+    # the reserved INT8_NONFINITE code and decode to nan
     f = x.astype(np.float32)
     axes = tuple(range(x.ndim - block_ndim, x.ndim))
-    amax = np.max(np.abs(f), axis=axes, keepdims=True) if f.size else f
+    finite = np.isfinite(f)
+    mag = np.where(finite, np.abs(f), 0.0)
+    amax = np.max(mag, axis=axes, keepdims=True) if f.size else f
     scale = np.maximum(amax / QMAX, np.finfo(np.float32).tiny)
-    q = np.clip(np.round(f / scale), -QMAX, QMAX).astype(np.int8)
-    return (q.astype(np.float32) * scale).astype(x.dtype)
+    q = np.clip(np.round(np.where(finite, f, 0.0) / scale), -QMAX, QMAX)
+    q = np.where(finite, q, INT8_NONFINITE).astype(np.int8)
+    deq = np.where(
+        q == INT8_NONFINITE, np.float32(np.nan), q.astype(np.float32) * scale
+    )
+    return deq.astype(x.dtype)
 
 
 def roundtrip_pod_blocks_np(b: np.ndarray, codec: str) -> np.ndarray:

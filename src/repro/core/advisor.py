@@ -149,8 +149,13 @@ def _wire_codecs(wire) -> Tuple[str, ...]:
         codecs = tuple(WIRE_MODELS) if wire == "auto" else (wire,)
     else:
         codecs = tuple(wire)
+    if not codecs:
+        raise ValueError(
+            "wire= must name at least one codec (or None / 'auto'); "
+            "an empty sequence would produce an empty ranking"
+        )
     for c in codecs:
-        get_wire(c)  # raises on unknown names
+        get_wire(c)  # raises ValueError on unknown names
     return codecs
 
 

@@ -204,7 +204,10 @@ def get_wire(wire: "WireModel | str | None") -> WireModel:
     try:
         return WIRE_MODELS[wire]
     except KeyError as e:
-        raise KeyError(
+        # ValueError to match the executor-side validation (wire.check_codec,
+        # IrregularExchange, execute_numpy): callers catch one exception type
+        # for a bad user-supplied codec name
+        raise ValueError(
             f"unknown wire codec {wire!r}; known: {sorted(WIRE_MODELS)}"
         ) from e
 

@@ -241,6 +241,24 @@ def test_wire_default_ranking_unchanged():
     assert all("+wire" not in r.key for r in adv.ranked)
 
 
+def test_wire_bad_arguments_raise_value_error():
+    """Codec validation matches the executor side (ValueError, not
+    KeyError): a typo'd ``wire=`` name fails the same way for the advisor,
+    ``IrregularExchange`` and ``execute_numpy``; an explicit empty
+    candidate set is rejected instead of producing an empty ranking whose
+    ``best`` would IndexError."""
+    from repro.core import get_wire
+
+    pat = figure43_pattern(2048, 256, 16)
+    for bad in ("zstd", ("bf16", "zstd")):
+        with pytest.raises(ValueError, match="unknown wire codec"):
+            advise(pat, machine="lassen", wire=bad)
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        get_wire("zstd")
+    with pytest.raises(ValueError, match="at least one codec"):
+        advise(pat, machine="lassen", wire=())
+
+
 def test_wire_variants_cover_every_pair():
     """wire="auto" ranks every (strategy, transport) x codec exactly once
     and the none-variant times equal the default ranking."""

@@ -22,6 +22,55 @@ SRC = os.path.join(REPO, "src")
 BENCH_JSON = os.path.join(REPO, "BENCH_exchange.json")
 
 
+def test_record_never_written_by_failing_or_partial_runs(tmp_path):
+    """The tracked record's contract is failures == [] with every section
+    ok, so a broken environment (or a single-section iteration) must leave
+    the committed trajectory file untouched -- only a full passing run may
+    replace it.  (A full run in a broken environment once clobbered the
+    record with 7 failed sections; this pins the guard.)"""
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.run import maybe_write_record
+    finally:
+        sys.path.remove(REPO)
+
+    path = str(tmp_path / "BENCH_exchange.json")
+    every = ["params", "spmv"]
+
+    # failing run, even a full one: no write
+    report = {"schema": 1, "smoke": True, "sections": {}, "failures": ["spmv"]}
+    assert maybe_write_record(report, every, every, path=path) is False
+    assert not os.path.exists(path)
+
+    # a not-ok section must block the write even if failures[] is out of
+    # sync with it (the guard enforces the record contract directly)
+    report = {
+        "schema": 1,
+        "smoke": True,
+        "sections": {"spmv": {"elapsed_s": 0.1, "ok": False}},
+        "failures": [],
+    }
+    assert maybe_write_record(report, every, every, path=path) is False
+    assert not os.path.exists(path)
+
+    # passing but partial run: no write
+    report = {"schema": 1, "smoke": True, "sections": {}, "failures": []}
+    assert maybe_write_record(report, ["params"], every, path=path) is False
+    assert not os.path.exists(path)
+
+    # full passing run: writes, with the wire counters attached
+    assert maybe_write_record(report, every, every, path=path) is True
+    with open(path) as f:
+        written = json.load(f)
+    assert written["failures"] == []
+    assert set(written["wire_bytes"]["codecs"]) == {
+        "standard",
+        "two_step",
+        "three_step",
+        "split",
+    }
+
+
 @pytest.mark.slow
 def test_benchmarks_run_smoke():
     env = dict(os.environ)

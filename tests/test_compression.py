@@ -65,6 +65,25 @@ def test_all_zero_payload_is_finite(dtype):
     np.testing.assert_array_equal(np.asarray(res, np.float32), 0.0)
 
 
+def test_nonfinite_element_never_poisons_neighbors():
+    """One inf/nan in the shard must not set the quantization scale (an inf
+    scale decodes EVERY element to nan): finite neighbors keep the normal
+    error bound, inf saturates sign-preserved at the finite amax, nan
+    contributes 0 -- and the error-feedback residual keeps the
+    non-finiteness at exactly those elements so divergence is not lost."""
+    x = np.linspace(-3.0, 3.0, 32).astype(np.float32)
+    x[4], x[9], x[20] = np.inf, -np.inf, np.nan
+    out, res = _round_trip(jnp.asarray(x))
+    out, res = np.asarray(out), np.asarray(res)
+    finite = np.isfinite(x)
+    assert np.isfinite(out).all()  # summed codes cannot carry non-finite
+    np.testing.assert_allclose(out[finite], x[finite], atol=3.0 / 127)
+    assert out[4] > 0 and out[9] < 0 and out[4] == -out[9] == np.abs(out[finite]).max()
+    assert out[20] == 0.0
+    assert np.isposinf(res[4]) and np.isneginf(res[9]) and np.isnan(res[20])
+    np.testing.assert_allclose(out[finite] + res[finite], x[finite], rtol=1e-6, atol=1e-6)
+
+
 def test_decompress_multiplies_at_full_precision():
     """Multi-pod int32 sums exceed bf16's exact-integer range (256); the
     dequantize multiply must run at float32-or-wider and round only the

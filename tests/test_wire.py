@@ -127,6 +127,52 @@ def test_cast_codecs_saturate_instead_of_overflowing():
         assert float(np.abs(rt).max()) <= fmax
 
 
+def test_cast_codecs_propagate_true_nonfinite():
+    """Saturation is for *finite* overflow only: a genuine inf/nan payload
+    (a diverging solve) must cross the wire non-finite so downstream
+    ``isfinite`` guards still fire -- bf16/f16 both represent inf/nan."""
+    x = np.float32([np.inf, -np.inf, np.nan, 1.0, 3.402e38])
+    for codec in ("bf16", "f16"):
+        rt = wire.roundtrip_np(x, codec, 1)
+        assert np.isposinf(rt[0]) and np.isneginf(rt[1]) and np.isnan(rt[2]), (codec, rt)
+        assert rt[3] == 1.0
+        # the finite out-of-range magnitude still saturates, never overflows
+        assert np.isfinite(rt[4]), (codec, rt)
+
+
+def test_int8_nonfinite_never_poisons_the_block():
+    """One inf/nan in a wire block decodes to nan (the reserved
+    INT8_NONFINITE code; int8 cannot carry inf) while every finite
+    neighbor keeps the pinned bound against the block's *finite* max."""
+    x = np.float32([[np.inf, 1.0, 2.0], [np.nan, 0.5, -np.inf]])
+    rt = wire.roundtrip_np(x, "int8", 1)
+    nonfinite = ~np.isfinite(x)
+    assert np.isnan(rt[nonfinite]).all(), rt
+    bound = wire.REL_ERROR_BOUND["int8"]
+    finite_amax = np.max(np.where(nonfinite, 0.0, np.abs(x)), axis=1, keepdims=True)
+    err = np.abs(rt - x)[~nonfinite]
+    assert (err <= bound * np.broadcast_to(finite_amax, x.shape)[~nonfinite] * (1 + 1e-6)).all()
+    # an all-non-finite block is all nan, not an error
+    assert np.isnan(wire.roundtrip_np(np.float32([[np.nan, np.inf]]), "int8", 1)).all()
+
+
+def test_device_encode_decode_matches_oracle_on_nonfinite():
+    """The executor's jnp encode/decode pair is bit-identical to the numpy
+    oracle for payloads containing inf/nan (the lockstep the 8-device
+    parity test relies on, checked here without devices)."""
+    import jax.numpy as jnp
+
+    from repro.comm import strategies as S
+
+    x = np.float32(
+        [[np.inf, 1.0, -2.0], [np.nan, 0.5, -np.inf], [1.0, 2.0, 3.0], [0.0, 0.0, 0.0]]
+    )
+    for codec in LOSSY:
+        payload, aux = S._encode_blocks(jnp.asarray(x), codec)
+        dec = np.asarray(S._decode_blocks(payload, aux, jnp.float32))
+        np.testing.assert_array_equal(dec, wire.roundtrip_np(x, codec, block_ndim=1))
+
+
 def test_int8_zero_blocks_stay_zero():
     """All-PAD / all-zero wire blocks must decode to exact zeros (the
     executor's PAD handling relies on it)."""
