@@ -1,0 +1,163 @@
+"""Chaos sweep: recovery rate + verify-mode overhead per strategy x codec.
+
+Two views of the fault-hardening layer (ISSUE 6's acceptance numbers):
+
+* **recovery rate** (deterministic, jax-free) -- for each (strategy, codec)
+  a bank of seeded :class:`repro.comm.faults.FaultPlan` scenarios (transient
+  corruption, persistent lossy-codec corruption, persistent per-strategy
+  corruption, dropped blocks) runs through the retry -> demote -> re-advise
+  ladder on the numpy executor.  ``recovered=N/N`` is the acceptance
+  metric: every scenario must end in a correct halo buffer, and the row
+  records which rung cured what (``retry=/demote=/readvise=``).
+* **verify overhead** (numpy timings) -- median wall time per exchange with
+  ``verify=False`` vs ``verify=True``.  Host numpy timings bound the check
+  arithmetic's cost, not DCI wire time; the acceptance property is that the
+  fault-free ``verify=False`` path is byte-identical to the unguarded
+  executor (asserted before timing).
+
+``main(smoke=True)`` shrinks the sweep (two strategies, one lossy codec,
+fewer timing iters) so ``benchmarks/run.py --smoke`` keeps this section
+alive in tier-1.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+#: the seeded chaos scenarios each (strategy, codec) pair must survive;
+#: (name, FaultSpec kwargs, active_calls) -- see chaos_outcomes()
+SCENARIOS = (
+    ("transient_nan", {"kind": "corrupt"}, (0,)),
+    ("lossy_bits", {"kind": "perturb", "codecs": ("lossy",)}, None),
+    ("sticky_strategy", {"kind": "corrupt", "strategies": None}, None),
+    ("dropped_block", {"kind": "zero", "prob": 0.5}, (0,)),
+)
+
+
+def _reference(seed=1234):
+    from repro.comm.exchange import random_pattern
+    from repro.comm.topology import PodTopology
+
+    rng = np.random.default_rng(seed)
+    topo = PodTopology(npods=2, ppn=4)
+    pat = random_pattern(rng, topo, local_size=16, p_connect=0.5, max_elems=8)
+    local = rng.normal(size=(topo.nranks, 16)).astype(np.float32)
+    return pat, local
+
+
+def chaos_outcomes(strategies, codecs, seeds=(7,)) -> dict:
+    """Run the scenario bank through the numpy ladder; returns the
+    per-(strategy, codec) recovery tally.  Deterministic and jax-free --
+    run.py records this dict in ``BENCH_exchange.json``."""
+    from repro.comm import faults as F
+    from repro.comm.exchange import execute_numpy, plan
+
+    pat, local = _reference()
+    out: dict = {}
+    for strategy in strategies:
+        clean = execute_numpy(plan(strategy, pat, message_cap_bytes=512), local)
+        for codec in codecs:
+            tally = {"retry": 0, "demote": 0, "readvise": 0, "clean_pass": 0}
+            attempts, recovered = 0, 0
+            for seed in seeds:
+                for name, spec_kw, calls in SCENARIOS:
+                    kw = dict(spec_kw)
+                    if kw.get("strategies", "unset") is None:
+                        kw["strategies"] = (strategy,)
+                    fp = F.FaultPlan(
+                        seed=seed, specs=(F.FaultSpec(**kw),), active_calls=calls
+                    )
+                    counter = {"n": 0}
+
+                    def attempt(s, w):
+                        idx = counter["n"]
+                        counter["n"] += 1
+                        sp = plan(s, pat, message_cap_bytes=512)
+                        return execute_numpy(
+                            sp, local, wire=w, faults=fp,
+                            fault_call=idx, verify=True,
+                        )
+
+                    attempts += 1
+                    try:
+                        value, path = F.run_ladder(
+                            attempt,
+                            strategy=strategy,
+                            wire=codec,
+                            health=F.HealthTracker(),
+                            choose_alternative=F.advise_alternative(pat),
+                        )
+                    except F.ExchangeIntegrityError:
+                        continue
+                    # a recovery only counts if the healed buffer is right:
+                    # bitwise vs the clean full-precision exchange whenever
+                    # the ladder landed on wire="none"
+                    landed_wire = path.wire if path is not None else codec
+                    if landed_wire == "none" and not np.array_equal(value, clean):
+                        continue
+                    recovered += 1
+                    tally["clean_pass" if path is None else path.action] += 1
+            out[f"{strategy}/{codec}"] = {
+                "attempts": attempts,
+                "recovered": recovered,
+                **tally,
+            }
+    return out
+
+
+def _med_us(fn, iters: int) -> float:
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def main(smoke: bool = False) -> None:
+    from repro.comm import wire
+    from repro.comm.exchange import execute_numpy, plan
+    from repro.comm.strategies import STRATEGY_NAMES
+
+    print("name,us_per_call,derived")
+    strategies = ("two_step", "split") if smoke else STRATEGY_NAMES
+    codecs = ("bf16",) if smoke else tuple(c for c in wire.WIRE_CODECS if c != "none")
+    iters = 3 if smoke else 9
+
+    outcomes = chaos_outcomes(strategies, codecs)
+    for key, o in outcomes.items():
+        assert o["recovered"] == o["attempts"], (key, o)
+        print(
+            f"chaos/{key},0.000,"
+            f"recovered={o['recovered']}/{o['attempts']} "
+            f"retry={o['retry']} demote={o['demote']} "
+            f"readvise={o['readvise']} clean={o['clean_pass']}"
+        )
+
+    pat, local = _reference()
+    for strategy in strategies:
+        sp = plan(strategy, pat, message_cap_bytes=512)
+        for codec in codecs:
+            base = execute_numpy(sp, local, wire=codec)
+            checked = execute_numpy(sp, local, wire=codec, verify=True)
+            np.testing.assert_array_equal(base, checked)  # bitwise acceptance
+            t_base = _med_us(lambda: execute_numpy(sp, local, wire=codec), iters)
+            t_ver = _med_us(
+                lambda: execute_numpy(sp, local, wire=codec, verify=True), iters
+            )
+            over = (t_ver / t_base - 1.0) * 100.0 if t_base else 0.0
+            print(
+                f"chaosverify/{strategy}/{codec},{t_ver:.1f},"
+                f"base_us={t_base:.1f} verify_us={t_ver:.1f} "
+                f"overhead={over:.0f}% parity=ok"
+            )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

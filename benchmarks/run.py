@@ -15,6 +15,7 @@ Sections:
   planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
+  chaos       -- fault-injection recovery rate + verify-mode overhead
 
 ``--smoke`` runs every requested section in a reduced configuration (fewer
 matrices/iterations/devices).  It exists so a tier-1 test can execute the
@@ -26,9 +27,10 @@ Every full *passing* run (all sections, no failures) also writes
 with failed sections leave it untouched) -- a
 machine-readable record of per-section wall times plus the wire-byte
 counters of a fixed reference exchange (the numbers
-``IrregularExchange.wire_bytes`` reports, per strategy x codec) -- so the
-perf trajectory is trackable across PRs; schema pinned by
-``tests/test_benchmarks_smoke.py``.
+``IrregularExchange.wire_bytes`` reports, per strategy x codec) and the
+chaos-recovery tally (schema 2: which ladder rung cured each seeded fault
+scenario, per strategy x codec) -- so the perf trajectory is trackable
+across PRs; schema pinned by ``tests/test_benchmarks_smoke.py``.
 """
 
 from __future__ import annotations
@@ -40,7 +42,7 @@ import time
 import traceback
 
 #: bump when the JSON layout changes (tests pin it)
-BENCH_SCHEMA = 1
+BENCH_SCHEMA = 2
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_exchange.json")
 
 
@@ -74,6 +76,23 @@ def _wire_byte_counters() -> dict:
     return out
 
 
+def _chaos_counters() -> dict:
+    """Chaos-recovery tally on the same fixed reference pattern (schema 2).
+
+    Deterministic and jax-free (numpy ladder): for each strategy x lossy
+    codec, which ladder rung (retry/demote/readvise) cured each seeded
+    fault scenario.  A regression that breaks a recovery path shows up as
+    a diff in this committed record before any test names it.
+    """
+    from benchmarks.bench_chaos import chaos_outcomes
+
+    from repro.comm import wire
+    from repro.comm.strategies import STRATEGY_NAMES
+
+    lossy = tuple(c for c in wire.WIRE_CODECS if c != "none")
+    return chaos_outcomes(STRATEGY_NAMES, lossy)
+
+
 def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JSON) -> bool:
     """Write the tracked record iff this was a FULL, PASSING run.
 
@@ -92,6 +111,7 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
         print(f"\n### partial run ({wanted}); {path} left untouched")
         return False
     report["wire_bytes"] = _wire_byte_counters()
+    report["chaos_recovery"] = _chaos_counters()
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -101,6 +121,7 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
 
 def main() -> None:
     from benchmarks import (
+        bench_chaos,
         bench_kernels,
         bench_model_validation,
         bench_modeled_performance,
@@ -124,6 +145,7 @@ def main() -> None:
         "planning": bench_planning.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
+        "chaos": bench_chaos.main,
     }
     args = sys.argv[1:]
     smoke = "--smoke" in args

@@ -416,7 +416,13 @@ def _take_fill(ext: np.ndarray, idx: np.ndarray) -> np.ndarray:
 
 
 def execute_numpy(
-    plan: StagePlan, local: np.ndarray, wire: str = "none"
+    plan: StagePlan,
+    local: np.ndarray,
+    wire: str = "none",
+    *,
+    faults=None,
+    fault_call: int = 0,
+    verify: bool = False,
 ) -> np.ndarray:
     """Execute a stage program in numpy: ``local [n, L, *feat] -> [n, H, *feat]``.
 
@@ -428,14 +434,31 @@ def execute_numpy(
     ``PermuteWorld`` round -- are encode/decode round-tripped exactly the
     way the device executor would, while on-pod hops stay full precision.
     ``wire="none"`` (the default) is the unchanged bit-exact movement.
+
+    ``faults`` (a :class:`repro.comm.faults.FaultPlan`) injects seeded
+    deterministic corruption into the decoded DCI-crossing wire blocks --
+    bitwise identical to the device executor under the same plan --
+    gated by ``faults.active(fault_call)``.  ``verify=True`` computes the
+    per-wire-block check values of :mod:`repro.comm.faults` before the
+    codec round-trip and validates them after decode+injection, raising a
+    structured :class:`repro.comm.faults.ExchangeIntegrityError` at the
+    first violating hop; fault-free verified runs return the same values
+    as unverified ones.
     """
     wire_codec.check_codec(wire)
+    # local import: repro.comm.faults imports this module's stage types
+    from repro.comm import faults as faults_mod
+
+    cf = None
+    if faults is not None and faults.active(fault_call):
+        cf = faults_mod.compile_faults(plan, wire, faults)
     topo = plan.pattern.topo
     nranks, ppn, npods = topo.nranks, topo.ppn, topo.npods
     local = np.asarray(local)
     feat = local.shape[2:]
+    encoded = wire_codec.applies(wire, local.dtype)
     buf = np.zeros((nranks, 0) + feat, dtype=local.dtype)
-    for stage in plan.stages:
+    for op_i, stage in enumerate(plan.stages):
         if isinstance(stage, Gather):
             buf = _take_fill(np.concatenate([buf, local], axis=1), np.asarray(stage.idx))
         elif isinstance(stage, (A2ALocal, A2APod)):
@@ -452,9 +475,26 @@ def execute_numpy(
             else:
                 blk = stage.buflen // npods
                 b = buf.reshape((npods, ppn, npods, blk) + feat)
+                axes = tuple(range(3, b.ndim))
+                pre = faults_mod.block_check_np(b, axes) if verify else None
                 # the inter-pod hop: round-trip off-diagonal blocks through
                 # the wire codec (diagonal blocks never cross DCI)
                 b = wire_codec.roundtrip_pod_blocks_np(b, wire)
+                if cf is not None:
+                    for inj in cf.for_hop(op_i, None):
+                        b = faults_mod.apply_injection_np(
+                            b, inj.np_mask, inj.kind, inj.value
+                        )
+                if verify:
+                    post = faults_mod.block_check_np(b, axes)
+                    nelem = blk * int(np.prod(feat, dtype=np.int64))
+                    faults_mod.raise_if_violated(
+                        faults_mod.check_violation(pre, post, nelem, wire, encoded),
+                        strategy=plan.strategy,
+                        codec=wire,
+                        stage_kind="a2a_pod",
+                        op_index=op_i,
+                    )
                 buf = b.transpose((2, 1, 0, 3) + tuple(range(4, 4 + len(feat)))).reshape(
                     (nranks, stage.buflen) + feat
                 )
@@ -464,13 +504,32 @@ def execute_numpy(
                 stage.inter if stage.inter is not None else (False,) * len(stage.blks)
             )
             parts = []
-            for perm, blk, sel, inter in zip(
-                stage.rounds, stage.blks, stage.sels, inters
+            for ri, (perm, blk, sel, inter) in enumerate(
+                zip(stage.rounds, stage.blks, stage.sels, inters)
             ):
                 send = _take_fill(ext, np.asarray(sel))
                 if inter:
+                    check = verify and bool(perm)
+                    axes = tuple(range(1, send.ndim))
+                    pre = faults_mod.block_check_np(send, axes) if check else None
                     # one wire block per sending rank
                     send = wire_codec.roundtrip_np(send, wire, block_ndim=send.ndim - 1)
+                    if cf is not None:
+                        for inj in cf.for_hop(op_i, ri):
+                            send = faults_mod.apply_injection_np(
+                                send, inj.np_mask, inj.kind, inj.value
+                            )
+                    if check:
+                        post = faults_mod.block_check_np(send, axes)
+                        nelem = blk * int(np.prod(feat, dtype=np.int64))
+                        faults_mod.raise_if_violated(
+                            faults_mod.check_violation(pre, post, nelem, wire, encoded),
+                            strategy=plan.strategy,
+                            codec=wire,
+                            stage_kind="permute",
+                            op_index=op_i,
+                            round_index=ri,
+                        )
                 out = np.zeros((nranks, blk) + feat, dtype=local.dtype)
                 if perm:
                     srcs = [s for s, _ in perm]
@@ -484,6 +543,10 @@ def execute_numpy(
             )
         else:
             raise TypeError(f"unknown stage {stage!r}")
+    if cf is not None and cf.delay_s > 0.0:
+        import time
+
+        time.sleep(cf.delay_s)  # the injected slow-hop latency
     return buf[:, : plan.out_size]
 
 

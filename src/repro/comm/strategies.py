@@ -31,8 +31,9 @@ Setup cost is amortized twice over:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.comm import compression
+from repro.comm import faults as faults_mod
 from repro.comm import wire as wire_mod
 from repro.comm.exchange import (
     A2ALocal,
@@ -168,6 +170,42 @@ def _decode_blocks(payload, aux, dtype):
     ).astype(dtype)
 
 
+def _wire_check(x, axes):
+    """Device twin of :func:`repro.comm.faults.block_check_np`: the
+    ``(sum |finite x|, nonfinite count, finite amax)`` triple per wire
+    block, stacked on a trailing axis (``[..., 3]`` float32)."""
+    f = x.astype(jnp.float32)
+    finite = jnp.isfinite(f)
+    mag = jnp.where(finite, jnp.abs(f), jnp.float32(0.0))
+    s = jnp.sum(mag, axis=axes)
+    c = jnp.sum((~finite).astype(jnp.float32), axis=axes)
+    a = jnp.max(mag, axis=axes, initial=0.0)
+    return jnp.stack([s, c, a], axis=-1)
+
+
+def _check_violation(chk_pre, chk_moved_post, nelem: int, codec: str, encoded: bool):
+    """Device twin of :func:`repro.comm.faults.check_violation`, reduced to
+    one scalar per hop (the max violation over this shard's blocks)."""
+    s0, c0, a0 = chk_pre[..., 0], chk_pre[..., 1], chk_pre[..., 2]
+    s1, c1 = chk_moved_post[..., 0], chk_moved_post[..., 1]
+    tol = faults_mod.sum_tolerance(codec, nelem, a0, s0, encoded)
+    drift = jnp.abs(s1 - s0) - tol
+    viol = jnp.where(c1 != c0, jnp.float32(jnp.inf), drift.astype(jnp.float32))
+    return jnp.max(viol) if viol.ndim else viol
+
+
+def _apply_injection(x, mask, kind: str, value: float):
+    """Device twin of :func:`repro.comm.faults.apply_injection_np`."""
+    m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+    if kind == "zero":
+        return jnp.where(m, jnp.zeros((), x.dtype), x)
+    if kind == "corrupt":
+        return jnp.where(m, jnp.asarray(value, x.dtype), x)
+    if kind == "perturb":
+        return jnp.where(m, x * jnp.asarray(value, x.dtype), x)
+    raise ValueError(f"unknown injection kind {kind!r}")
+
+
 def _execute(
     ops,
     topo: PodTopology,
@@ -177,6 +215,8 @@ def _execute(
     local,
     plan_arrays,
     codec: str = "none",
+    verify: bool = False,
+    fault_ops: Optional[Dict] = None,
 ):
     """Ops interpreter; runs inside shard_map.  ``local`` is ``[1, L, *feat]``.
 
@@ -190,13 +230,29 @@ def _execute(
     decoded right after it.  On-pod hops and the ``"none"`` codec run the
     exact full-precision ops -- bitwise identical to the codec-free
     executor.
+
+    ``verify`` ships the :func:`_wire_check` triple of every inter-pod
+    payload through the same collective and recomputes it after
+    decode+injection; the per-hop max violations are returned alongside the
+    output.  ``fault_ops`` maps ``(op index, permute round | None)`` to
+    ``(kind, dev_mask, value)`` injections (compiled by
+    :func:`repro.comm.faults.compile_faults`); each mask is indexed by this
+    shard's world rank and applied to the decoded receive blocks, mirroring
+    :func:`repro.comm.exchange.execute_numpy` bitwise.
+
+    Returns ``(out [1, out_size, *feat], viols)`` where ``viols`` is a list
+    of per-hop violation scalars (empty unless ``verify``).
     """
     x = local[0]
     feat = x.shape[1:]
     ext = jnp.pad(x, ((0, w_max),) + ((0, 0),) * len(feat))
     encode = codec != "none" and wire_mod.applies(codec, x.dtype)
+    viols = []
+    rank = None
+    if fault_ops:
+        rank = jax.lax.axis_index(POD_AXIS) * topo.ppn + jax.lax.axis_index(LOCAL_AXIS)
     ai = 0
-    for op in ops:
+    for op_i, op in enumerate(ops):
         kind = op[0]
         if kind == "gather":
             _, width = op
@@ -218,6 +274,10 @@ def _execute(
                 else (topo.npods, POD_AXIS)
             )
             blocks = seg.reshape((groups, buflen // groups) + feat)
+            check = verify and kind == "a2a_pod"
+            if check:
+                chk = _wire_check(blocks, tuple(range(1, blocks.ndim)))
+                chk_moved = jax.lax.all_to_all(chk, axis, 0, 0, tiled=True)
             if kind == "a2a_pod" and encode:
                 payload, aux = _encode_blocks(blocks, codec)
                 moved = jax.lax.all_to_all(payload, axis, 0, 0, tiled=True)
@@ -234,31 +294,57 @@ def _execute(
                 res = jnp.where(keep, blocks, res)
             else:
                 res = jax.lax.all_to_all(blocks, axis, 0, 0, tiled=True)
+            if kind == "a2a_pod" and fault_ops:
+                for fkind, mask, value in fault_ops.get((op_i, None), ()):
+                    res = _apply_injection(res, mask[rank], fkind, value)
+            if check:
+                chk_post = _wire_check(res, tuple(range(1, res.ndim)))
+                nelem = int(np.prod(blocks.shape[1:], dtype=np.int64))
+                viols.append(
+                    _check_violation(chk_moved, chk_post, nelem, codec, encode)
+                )
             ext = ext.at[L : L + buflen].set(res.reshape((buflen,) + feat))
         elif kind == "permute":
             _, rounds, blks, inters = op
             parts = []
-            for perm, blk, inter in zip(rounds, blks, inters):
+            for ri, (perm, blk, inter) in enumerate(zip(rounds, blks, inters)):
                 sel = plan_arrays[ai][0]
                 ai += 1
                 send = ext.at[sel].get(mode="fill", fill_value=0)
                 if not perm:
                     parts.append(jnp.zeros_like(send))
-                elif inter and encode:
+                    continue
+                check = verify and inter
+                if check:
+                    chk = _wire_check(send, tuple(range(send.ndim)))
+                    chk_moved = jax.lax.ppermute(chk, WORLD_AXES, list(perm))
+                if inter and encode:
                     payload, aux = _encode_blocks(send[None], codec)
                     moved = jax.lax.ppermute(payload[0], WORLD_AXES, list(perm))
                     if aux is not None:
                         aux = jax.lax.ppermute(aux[0], WORLD_AXES, list(perm))
                         aux = aux[None]
-                    parts.append(_decode_blocks(moved[None], aux, x.dtype)[0])
+                    part = _decode_blocks(moved[None], aux, x.dtype)[0]
                 else:
-                    parts.append(jax.lax.ppermute(send, WORLD_AXES, list(perm)))
+                    part = jax.lax.ppermute(send, WORLD_AXES, list(perm))
+                if fault_ops:
+                    for fkind, mask, value in fault_ops.get((op_i, ri), ()):
+                        part = _apply_injection(part, mask[rank], fkind, value)
+                if check:
+                    chk_post = _wire_check(part, tuple(range(part.ndim)))
+                    nelem = int(np.prod(send.shape, dtype=np.int64))
+                    viols.append(
+                        _check_violation(
+                            chk_moved, chk_post, nelem, codec, inter and encode
+                        )
+                    )
+                parts.append(part)
             width = sum(blks)
             if parts:
                 ext = ext.at[L : L + width].set(jnp.concatenate(parts))
         else:
             raise TypeError(f"unknown op {op!r}")
-    return ext[L : L + out_size][None]
+    return ext[L : L + out_size][None], viols
 
 
 # ---------------------------------------------------------------------------
@@ -402,26 +488,79 @@ def _mesh_key(mesh: jax.sharding.Mesh) -> tuple:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class _ExecMeta:
+    """Sidecar of a built executor: verify-output layout + injected delay.
+
+    ``checks[j] = (hop ordinal, op_index, stage_kind, round_index)`` names
+    the DCI hop behind column ``j`` of the executor's violation output.
+    """
+
+    emit_checks: bool
+    checks: Tuple[tuple, ...]
+    delay_s: float
+
+
 def _executor(
-    sp: StagePlan, plan_key: tuple, mesh: jax.sharding.Mesh, codec: str = "none"
+    sp: StagePlan,
+    plan_key: tuple,
+    mesh: jax.sharding.Mesh,
+    codec: str = "none",
+    verify: bool = False,
+    faults=None,
 ):
-    key = plan_key + (codec,) + _mesh_key(mesh)
+    """Build (or fetch) the jitted executor for one plan/codec/mesh.
+
+    Returns ``(fn, arrays, meta)`` where ``meta`` is an :class:`_ExecMeta`.
+    With ``verify`` on and the plan containing inter-pod hops, ``fn``
+    returns ``(out, viols [nranks, n_checks])`` -- one max-violation scalar
+    per DCI hop, in the program order of ``meta.checks``.  ``faults`` bakes
+    a compiled :class:`repro.comm.faults.FaultPlan`'s injection masks into
+    the traced program (the per-call active gating is the caller's job: it
+    picks this executor or the fault-free twin per call).
+    """
+    fp = faults.fingerprint() if faults is not None else None
+    key = plan_key + (codec, verify, fp) + _mesh_key(mesh)
 
     def build():
         topo = sp.pattern.topo
         ops, arrays, w_max = _compile_program(sp)
-        specs = (P(WORLD_AXES),) * (1 + len(arrays))
         L, out_size = sp.pattern.local_size, sp.out_size
+        checks = tuple(
+            (ordinal, op_index, stage_kind, round_index)
+            for ordinal, op_index, stage_kind, round_index, _, _ in (
+                faults_mod.iter_inter_hops(sp)
+            )
+        )
+        emit = verify and bool(checks)
+        fault_ops: Optional[Dict] = None
+        delay_s = 0.0
+        if faults is not None:
+            cf = faults_mod.compile_faults(sp, codec, faults)
+            delay_s = cf.delay_s
+            grouped: Dict[tuple, list] = {}
+            for inj in cf.injections:
+                grouped.setdefault((inj.op_index, inj.round_index), []).append(
+                    (inj.kind, jnp.asarray(inj.dev_mask), inj.value)
+                )
+            fault_ops = {k: tuple(v) for k, v in grouped.items()} or None
+        specs = (P(WORLD_AXES),) * (1 + len(arrays))
+        out_specs = (P(WORLD_AXES), P(WORLD_AXES)) if emit else P(WORLD_AXES)
 
         def run(local, *plan_arrays):
-            return _execute(
-                ops, topo, L, w_max, out_size, local, plan_arrays, codec
+            out, viols = _execute(
+                ops, topo, L, w_max, out_size, local, plan_arrays, codec,
+                verify=emit, fault_ops=fault_ops,
             )
+            if emit:
+                return out, jnp.stack(viols)[None]
+            return out
 
         fn = jax.jit(
-            shard_map(run, mesh=mesh, in_specs=specs, out_specs=P(WORLD_AXES))
+            shard_map(run, mesh=mesh, in_specs=specs, out_specs=out_specs)
         )
-        return fn, tuple(jnp.asarray(a) for a in arrays)
+        meta = _ExecMeta(emit_checks=emit, checks=checks, delay_s=delay_s)
+        return fn, tuple(jnp.asarray(a) for a in arrays), meta
 
     val, hit = _lru_get(_EXEC_CACHE, key, EXEC_CACHE_MAX, build)
     if hit:
@@ -577,6 +716,17 @@ class IrregularExchange:
     elem_bytes: int = 4
     fuse_program: bool = True
     wire: str = "none"
+    #: opt-in wire integrity verification (repro.comm.faults check values);
+    #: a failed check raises ExchangeIntegrityError and engages the
+    #: retry -> codec-demotion -> strategy-re-advise recovery ladder
+    verify: bool = False
+    #: seeded deterministic fault injection (repro.comm.faults.FaultPlan)
+    faults: Optional[faults_mod.FaultPlan] = None
+    #: shared health tracker for the ladder / advisor / watchdog; created
+    #: on demand when verify or faults are set
+    health: Optional[faults_mod.HealthTracker] = None
+    max_retries: int = 1
+    fallback: bool = True
 
     def __post_init__(self) -> None:
         wire_mod.check_codec(self.wire)
@@ -597,10 +747,23 @@ class IrregularExchange:
         )
         if self.mesh is None:
             self.mesh = _default_mesh(self.pattern.topo)
-        self._fn, self._arrays = _executor(
-            self.plan, plan_key, self.mesh, self.wire
+        self._fn, self._arrays, self._meta = _executor(
+            self.plan, plan_key, self.mesh, self.wire, verify=self.verify
         )
+        if self.faults is not None:
+            self._fn_faulty, _, self._meta_faulty = _executor(
+                self.plan, plan_key, self.mesh, self.wire,
+                verify=self.verify, faults=self.faults,
+            )
+        else:
+            self._fn_faulty, self._meta_faulty = self._fn, self._meta
+        if self.health is None and (self.verify or self.faults is not None):
+            self.health = faults_mod.HealthTracker()
         self._two_phase: Optional[tuple] = None
+        self._variants: Dict[tuple, "IrregularExchange"] = {}
+        self._calls = 0
+        #: RecoveryPath.key of the most recent recovered call, or None
+        self.last_recovery: Optional[str] = None
 
     # ------------------------------------------------------------------
     def __call__(self, local: jax.Array) -> jax.Array:
@@ -608,13 +771,98 @@ class IrregularExchange:
 
         Trailing feature dims (multi-vector SpMM ``k``, per-token features)
         ride along under the same plan; jit specializes per trailing shape.
+
+        With ``verify`` or ``faults`` configured, calls run through the
+        recovery ladder (:func:`repro.comm.faults.run_ladder`): a failed
+        integrity check is retried up to ``max_retries`` times, then the
+        lossy codec is demoted to ``"none"``, then the strategy is
+        re-advised with the offending hop marked degraded; the final
+        failure re-raises :class:`repro.comm.faults.ExchangeIntegrityError`.
+        The fault-free default path is the unchanged direct dispatch.
         """
         n, L = self.pattern.topo.nranks, self.pattern.local_size
         if local.ndim < 2 or local.shape[:2] != (n, L):
             raise ValueError(
                 f"expected [{n}, {L}, *feat], got {tuple(local.shape)}"
             )
-        return self._fn(local, *self._arrays)
+        if self.faults is None and not self.verify:
+            return self._fn(local, *self._arrays)
+        return self._guarded_call(local)
+
+    # -- verification + recovery ---------------------------------------
+    def _raw_call(self, local: jax.Array, call_index: int) -> jax.Array:
+        """One physical attempt: pick the faulted or clean executor by the
+        FaultPlan's call gating, surface check violations as errors."""
+        active = self.faults is not None and self.faults.active(call_index)
+        fn, meta = (
+            (self._fn_faulty, self._meta_faulty) if active else (self._fn, self._meta)
+        )
+        out = fn(local, *self._arrays)
+        if active and meta.delay_s > 0.0:
+            time.sleep(meta.delay_s)  # the injected slow-hop latency
+        if meta.emit_checks:
+            out, viols = out
+            self._raise_from_viols(np.asarray(viols), meta.checks)
+        return out
+
+    def _raise_from_viols(self, viols: np.ndarray, checks) -> None:
+        bad = (viols > 0.0).any(axis=0)
+        if not bad.any():
+            return
+        j = int(np.argmax(bad))
+        _, op_index, stage_kind, round_index = checks[j]
+        raise faults_mod.ExchangeIntegrityError(
+            strategy=self.plan.strategy,
+            codec=self.wire,
+            stage_kind=stage_kind,
+            op_index=op_index,
+            round_index=round_index,
+            violation=float(viols[:, j].max()),
+        )
+
+    def _variant(self, strategy: str, wire: str) -> "IrregularExchange":
+        if strategy == self.strategy and wire == self.wire:
+            return self
+        key = (strategy, wire)
+        v = self._variants.get(key)
+        if v is None:
+            v = IrregularExchange(
+                self.pattern,
+                strategy,
+                mesh=self.mesh,
+                message_cap_bytes=self.message_cap_bytes,
+                elem_bytes=self.elem_bytes,
+                fuse_program=self.fuse_program,
+                wire=wire,
+                verify=self.verify,
+                faults=self.faults,
+                health=self.health,
+                max_retries=0,
+                fallback=False,
+            )
+            self._variants[key] = v
+        return v
+
+    def _guarded_call(self, local: jax.Array) -> jax.Array:
+        def attempt(strategy: str, wire: str):
+            idx = self._calls
+            self._calls += 1
+            return self._variant(strategy, wire)._raw_call(local, idx)
+
+        out, path = faults_mod.run_ladder(
+            attempt,
+            strategy=self.strategy,
+            wire=self.wire,
+            health=self.health,
+            max_retries=self.max_retries,
+            fallback=self.fallback,
+            choose_alternative=faults_mod.advise_alternative(
+                self.pattern, self.elem_bytes
+            ),
+        )
+        if path is not None:
+            self.last_recovery = path.key
+        return out
 
     # ------------------------------------------------------------------
     def start(self, local: jax.Array) -> ExchangeHandle:
@@ -648,6 +896,13 @@ class IrregularExchange:
                     elem_bytes=self.elem_bytes,
                     fuse_program=self.fuse_program,
                     wire=self.wire,
+                    # faults only ever hit DCI-crossing segments, so the
+                    # guard rails ride on the inter-pod phase alone
+                    verify=self.verify,
+                    faults=self.faults,
+                    health=self.health,
+                    max_retries=self.max_retries,
+                    fallback=self.fallback,
                 ),
                 IrregularExchange(
                     sp.local,

@@ -42,6 +42,19 @@ from repro.core.perfmodel import (
 )
 
 
+#: model-enum -> executable strategy name (repro.comm.strategies); the
+#: mapping the fault ladder uses to translate advisor rankings into
+#: runnable exchanges when re-advising around a degraded hop
+EXECUTABLE_STRATEGY = {
+    Strategy.STANDARD: "standard",
+    Strategy.TWO_STEP: "two_step",
+    Strategy.TWO_STEP_ONE: "two_step",
+    Strategy.THREE_STEP: "three_step",
+    Strategy.SPLIT_MD: "split",
+    Strategy.SPLIT_DD: "split",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class ComputeProfile:
     """Per-step local compute, split by halo dependence (seconds).
@@ -168,6 +181,7 @@ def advise_stats(
     payload_width: int = 1,
     compute: Optional[ComputeProfile] = None,
     wire: "str | Sequence[str] | None" = None,
+    health=None,
 ) -> Advice:
     """Rank strategies for raw Table 7 stats.
 
@@ -193,6 +207,12 @@ def advise_stats(
     :func:`~repro.core.perfmodel.t_codec` encode+decode term, so
     bandwidth-bound patterns flip to a compressed wire while latency-bound
     patterns keep ``none``.
+
+    ``health`` (a :class:`repro.comm.faults.HealthTracker`, or anything with
+    its ``penalty(strategy, wire)`` contract) multiplies each prediction by
+    the tracker's degradation penalty for the executable (strategy, codec)
+    pair, so variants that failed integrity checks sink in the ranking while
+    a ``None`` tracker leaves the paper's rankings untouched.
     """
     m = get_machine(machine) if isinstance(machine, str) else machine
     stats = stats.widened(payload_width)
@@ -207,12 +227,15 @@ def advise_stats(
             stats_eff = stats.scaled(keep)
         for codec in codecs:
             wm = get_wire(codec)
-            t = predict(m, strategy, transport, stats_eff, wire=wm)
+            pen = 1.0
+            if health is not None:
+                pen = health.penalty(EXECUTABLE_STRATEGY[strategy], codec)
+            t = pen * predict(m, strategy, transport, stats_eff, wire=wm)
             if compute is None:
                 preds[(strategy, transport, False, codec)] = t
             else:
                 preds[(strategy, transport, False, codec)] = t + compute.total
-                preds[(strategy, transport, True, codec)] = predict_overlapped(
+                preds[(strategy, transport, True, codec)] = pen * predict_overlapped(
                     m, strategy, transport, stats_eff,
                     compute.t_interior, compute.t_boundary, wire=wm,
                 )
@@ -366,12 +389,15 @@ def advise(
     payload_width: int = 1,
     compute: Optional[ComputeProfile] = None,
     wire: "str | Sequence[str] | None" = None,
+    health=None,
 ) -> Advice:
     """Rank strategies for a concrete communication pattern.
 
     ``payload_width`` is the batched-payload column count ``k``,
-    ``compute`` enables overlap-aware ranking, and ``wire`` adds inter-pod
-    codec variants with ``+wire:<codec>`` keys (see :func:`advise_stats`).
+    ``compute`` enables overlap-aware ranking, ``wire`` adds inter-pod
+    codec variants with ``+wire:<codec>`` keys, and ``health`` sinks
+    degraded (strategy, codec) pairs in the ranking (see
+    :func:`advise_stats`).
 
     >>> from repro.core import figure43_pattern
     >>> adv = advise(figure43_pattern(2048, 256, 16), machine="lassen")
@@ -388,4 +414,5 @@ def advise(
         payload_width=payload_width,
         compute=compute,
         wire=wire,
+        health=health,
     )

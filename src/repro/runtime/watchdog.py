@@ -31,8 +31,19 @@ class StragglerWatchdog:
         self._t0 = time.monotonic()
 
     def end_step(self, step: int) -> bool:
-        """Returns True if the escalation budget is exhausted."""
+        """Returns True if the escalation budget is exhausted.
+
+        Raises :class:`RuntimeError` if no step is open (``start_step`` was
+        never called, or this is the second ``end_step`` in a row) instead of
+        crashing with ``TypeError`` on the ``None`` timestamp.
+        """
+        if self._t0 is None:
+            raise RuntimeError(
+                "StragglerWatchdog.end_step called with no open step; "
+                "call start_step() first"
+            )
         dt = time.monotonic() - self._t0
+        self._t0 = None
         if self.ema is None:
             self.ema = dt
             return False
@@ -43,4 +54,15 @@ class StragglerWatchdog:
         else:
             self.consecutive = 0
             self.ema = self.decay * self.ema + (1 - self.decay) * dt
+        return self.consecutive >= self.budget
+
+    def record_external(self, kind: str, info: Optional[dict] = None) -> bool:
+        """Record a non-timing health event (e.g. an exchange integrity
+        failure from :class:`repro.comm.faults.HealthTracker`) against the
+        same escalation budget as straggler steps.
+
+        Returns True if the budget is exhausted, mirroring ``end_step``.
+        """
+        self.consecutive += 1
+        self.events.append({"kind": kind, **(info or {})})
         return self.consecutive >= self.budget

@@ -42,6 +42,10 @@ REDUCTIONS_PER_ITER = {"cg": 2.0, "bicgstab": 6.0}
 #: matvecs (= irregular exchanges) each solver issues per iteration
 MATVECS_PER_ITER = {"cg": 1.0, "bicgstab": 2.0}
 
+#: iterations without a new best residual before a solve is declared
+#: stagnant (and restarted once from the best iterate)
+STALL_WINDOW = 50
+
 
 @dataclasses.dataclass(frozen=True)
 class SolveResult:
@@ -52,6 +56,15 @@ class SolveResult:
     starting residual), computed with the solver's own reductions -- on the
     numpy executor these histories are bitwise identical across strategies
     and barrier-vs-overlap execution.
+
+    ``status`` names how the solve ended: ``"converged"``, ``"maxiter"``,
+    a breakdown reason (``"breakdown:indefinite"``, ``"breakdown:rho"``,
+    ``"breakdown:omega"``, ``"breakdown:denom"``, ``"breakdown:tt"``,
+    ``"breakdown:nonfinite"``, ``"stagnation"``), with a ``"+restart"``
+    suffix when the solver restarted from its best iterate and a
+    ``"+exchange:<action>:<strategy>/<codec>"`` suffix when the operator's
+    exchange recovered through the fault ladder
+    (:func:`repro.comm.faults.run_ladder`) during the solve.
     """
 
     x: np.ndarray
@@ -59,10 +72,30 @@ class SolveResult:
     iterations: int
     residuals: Tuple[float, ...]
     matvecs: int
+    status: str = "converged"
+    restarts: int = 0
 
     @property
     def final_residual(self) -> float:
         return self.residuals[-1]
+
+
+def _recovery_baseline(op) -> int:
+    health = getattr(op, "health", None)
+    return health.recovery_count if health is not None else 0
+
+
+def _finish_status(status: str, restarts: int, op, rc0: int) -> str:
+    if restarts:
+        status += "+restart"
+    health = getattr(op, "health", None)
+    if (
+        health is not None
+        and health.recovery_count > rc0
+        and health.last_recovery
+    ):
+        status += "+exchange:" + health.last_recovery
+    return status
 
 
 def _prepare(op, b, x0, reductions):
@@ -90,8 +123,14 @@ def cg(
     matvec -- one irregular exchange under the single cached plan -- and two
     hierarchical reductions per iteration.  Build an SPD system from any
     generator matrix with :func:`repro.solve.problems.spd_system`.
+
+    Non-finite residuals and stagnation (no new best residual within
+    :data:`STALL_WINDOW` iterations) trigger ONE restart from the best
+    iterate with a true-residual recompute ``r = b - A x``; a second
+    trip ends the solve with the reason in ``SolveResult.status``.
     """
     red, b, x, bnorm = _prepare(op, b, x0, reductions)
+    rc0 = _recovery_baseline(op)
     if bnorm == 0.0:
         return SolveResult(x=np.zeros_like(b), converged=True, iterations=0,
                            residuals=(0.0,), matvecs=0)
@@ -106,14 +145,19 @@ def cg(
     hist = [float(np.sqrt(max(rs, 0.0)) / bnorm)]
     if hist[-1] <= tol:
         return SolveResult(x=x, converged=True, iterations=0,
-                           residuals=tuple(hist), matvecs=matvecs)
+                           residuals=tuple(hist), matvecs=matvecs,
+                           status=_finish_status("converged", 0, op, rc0))
     it = 0
     converged = False
+    restarts = 0
+    status = "maxiter"
+    best, best_x, best_it = hist[-1], x.copy(), 0
     while it < maxiter:
         Ap = np.asarray(op(p)).astype(b.dtype)
         matvecs += 1
         pAp = red.dot(p, Ap)
         if pAp <= 0.0:  # breakdown / loss of positive definiteness
+            status = "breakdown:indefinite"
             break
         alpha = rs / pAp
         x = x + alpha * p
@@ -124,10 +168,41 @@ def cg(
         if hist[-1] <= tol:
             converged = True
             break
+        if hist[-1] < best:
+            best, best_x, best_it = hist[-1], x.copy(), it
+        bad = None
+        if not np.isfinite(hist[-1]):
+            bad = "breakdown:nonfinite"
+        elif it - best_it >= STALL_WINDOW:
+            bad = "stagnation"
+        if bad is not None:
+            if restarts:
+                status = bad
+                break
+            # one restart from the best iterate: true-residual recompute
+            restarts += 1
+            x = best_x.copy()
+            r = b - np.asarray(op(x)).astype(b.dtype)
+            matvecs += 1
+            p = r.copy()
+            rs = red.dot(r, r)
+            hist.append(float(np.sqrt(max(rs, 0.0)) / bnorm))
+            best, best_it = hist[-1], it
+            if hist[-1] <= tol:
+                converged = True
+                break
+            if not np.isfinite(hist[-1]):
+                status = bad
+                break
+            continue
         p = r + (rs_new / rs) * p
         rs = rs_new
+    if converged:
+        status = "converged"
     return SolveResult(x=x, converged=converged, iterations=it,
-                       residuals=tuple(hist), matvecs=matvecs)
+                       residuals=tuple(hist), matvecs=matvecs,
+                       status=_finish_status(status, restarts, op, rc0),
+                       restarts=restarts)
 
 
 def bicgstab(
@@ -143,11 +218,19 @@ def bicgstab(
     Two matvecs -- two exchanges under the same single cached plan -- and
     six hierarchical reductions per iteration.  Build a well-posed
     nonsymmetric system with :func:`repro.solve.problems.shifted_system`.
+
+    Breakdown guards are tolerance-scaled (machine-eps relative to the
+    quantities each ratio divides), not exact-zero tests, so near-breakdown
+    no longer silently truncates the history: the first trip restarts once
+    from the best iterate (true-residual recompute), the second ends the
+    solve with the reason in ``SolveResult.status``.
     """
     red, b, x, bnorm = _prepare(op, b, x0, reductions)
+    rc0 = _recovery_baseline(op)
     if bnorm == 0.0:
         return SolveResult(x=np.zeros_like(b), converged=True, iterations=0,
                            residuals=(0.0,), matvecs=0)
+    eps = float(np.finfo(b.dtype).eps)
     matvecs = 0
     if x0 is None:
         r = b.copy()
@@ -161,41 +244,89 @@ def bicgstab(
     hist = [red.norm(r) / bnorm]
     if hist[-1] <= tol:
         return SolveResult(x=x, converged=True, iterations=0,
-                           residuals=tuple(hist), matvecs=matvecs)
+                           residuals=tuple(hist), matvecs=matvecs,
+                           status=_finish_status("converged", 0, op, rc0))
+    rhat_nrm = hist[0] * bnorm  # ||rhat|| is fixed at ||r_0||
     it = 0
     converged = False
+    restarts = 0
+    status = "maxiter"
+    best, best_x, best_it = hist[-1], x.copy(), 0
     while it < maxiter:
         rho_new = red.dot(rhat, r)
-        if rho_new == 0.0 or omega == 0.0:
-            break  # breakdown: restart would be needed
-        beta = (rho_new / rho) * (alpha / omega)
-        p = r + beta * (p - omega * v)
-        v = np.asarray(op(p)).astype(b.dtype)
+        r_nrm = hist[-1] * bnorm  # recursive residual norm, no extra reduce
+        bad = None
+        # |<rhat, r>| can only be meaningful above eps * ||rhat|| * ||r||
+        if abs(rho_new) <= eps * rhat_nrm * r_nrm:
+            bad = "breakdown:rho"
+        elif abs(omega) <= eps * abs(alpha):
+            bad = "breakdown:omega"
+        if bad is None:
+            beta = (rho_new / rho) * (alpha / omega)
+            p = r + beta * (p - omega * v)
+            v = np.asarray(op(p)).astype(b.dtype)
+            matvecs += 1
+            denom = red.dot(rhat, v)
+            # alpha = rho_new / denom would exceed 1/eps
+            if abs(denom) <= eps * abs(rho_new):
+                bad = "breakdown:denom"
+        if bad is None:
+            alpha = rho_new / denom
+            s = r - alpha * v
+            it += 1
+            snorm = red.norm(s)
+            if snorm / bnorm <= tol:  # first half-step already converged
+                x = x + alpha * p
+                hist.append(snorm / bnorm)
+                converged = True
+                break
+            t = np.asarray(op(s)).astype(b.dtype)
+            matvecs += 1
+            tt = red.dot(t, t)
+            # omega = <t, s> / tt would exceed ~1/eps relative to ||s||
+            if tt <= (eps * snorm) ** 2:
+                bad = "breakdown:tt"
+        if bad is None:
+            omega = red.dot(t, s) / tt
+            x = x + alpha * p + omega * s
+            r = s - omega * t
+            hist.append(red.norm(r) / bnorm)
+            if hist[-1] <= tol:
+                converged = True
+                break
+            if hist[-1] < best:
+                best, best_x, best_it = hist[-1], x.copy(), it
+            if not np.isfinite(hist[-1]):
+                bad = "breakdown:nonfinite"
+            elif it - best_it >= STALL_WINDOW:
+                bad = "stagnation"
+            if bad is None:
+                rho = rho_new
+                continue
+        if restarts:
+            status = bad
+            break
+        # one restart from the best iterate: true-residual recompute
+        restarts += 1
+        x = best_x.copy()
+        r = b - np.asarray(op(x)).astype(b.dtype)
         matvecs += 1
-        denom = red.dot(rhat, v)
-        if denom == 0.0:
-            break
-        alpha = rho_new / denom
-        s = r - alpha * v
-        it += 1
-        snorm = red.norm(s)
-        if snorm / bnorm <= tol:  # first half-step already converged
-            x = x + alpha * p
-            hist.append(snorm / bnorm)
-            converged = True
-            break
-        t = np.asarray(op(s)).astype(b.dtype)
-        matvecs += 1
-        tt = red.dot(t, t)
-        if tt == 0.0:
-            break
-        omega = red.dot(t, s) / tt
-        x = x + alpha * p + omega * s
-        r = s - omega * t
+        rhat = r.copy()
+        rho = alpha = omega = 1.0
+        v = np.zeros_like(b)
+        p = np.zeros_like(b)
         hist.append(red.norm(r) / bnorm)
+        rhat_nrm = hist[-1] * bnorm
+        best, best_it = hist[-1], it
         if hist[-1] <= tol:
             converged = True
             break
-        rho = rho_new
+        if not np.isfinite(hist[-1]):
+            status = bad
+            break
+    if converged:
+        status = "converged"
     return SolveResult(x=x, converged=converged, iterations=it,
-                       residuals=tuple(hist), matvecs=matvecs)
+                       residuals=tuple(hist), matvecs=matvecs,
+                       status=_finish_status(status, restarts, op, rc0),
+                       restarts=restarts)

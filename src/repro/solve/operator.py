@@ -29,6 +29,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.comm import faults as faults_mod
 from repro.comm import strategies as comm_strategies
 from repro.comm import wire as wire_mod
 from repro.comm.exchange import execute_numpy, merge_split_phase
@@ -67,6 +68,16 @@ class NumpySpMV:
     #: residual-history property across strategies, lossy codecs trade the
     #: pinned per-element halo error bound for 2-4x fewer DCI bytes
     wire: str = "none"
+    #: opt-in wire integrity verification; a failed check engages the
+    #: retry -> codec-demotion -> strategy-re-advise ladder
+    #: (:func:`repro.comm.faults.run_ladder`)
+    verify: bool = False
+    #: seeded deterministic fault injection (repro.comm.faults.FaultPlan)
+    faults: Optional[faults_mod.FaultPlan] = None
+    #: shared health tracker; created on demand when verify/faults are set
+    health: Optional[faults_mod.HealthTracker] = None
+    max_retries: int = 1
+    fallback: bool = True
 
     def __post_init__(self) -> None:
         if self.strategy not in comm_strategies.STRATEGY_NAMES:
@@ -94,6 +105,11 @@ class NumpySpMV:
         self._diag_c = self.partition.diag.cols.reshape(g, L, -1)
         self._off_d = self.partition.off.data.reshape(g, L, -1)
         self._off_c = self.partition.off.cols.reshape(g, L, -1)
+        if self.health is None and (self.verify or self.faults is not None):
+            self.health = faults_mod.HealthTracker()
+        self._fault_calls = 0
+        #: RecoveryPath.key of the most recent recovered exchange, or None
+        self.last_recovery: Optional[str] = None
 
     @property
     def topo(self) -> PodTopology:
@@ -105,16 +121,69 @@ class NumpySpMV:
 
     # ------------------------------------------------------------------
     def halo(self, v: np.ndarray) -> np.ndarray:
-        """Exchange only: ``[nranks, L] -> [nranks, H]`` canonical buffer."""
+        """Exchange only: ``[nranks, L] -> [nranks, H]`` canonical buffer.
+
+        With ``verify`` or ``faults`` set, the exchange runs inside the
+        recovery ladder; faults and checks ride the inter-pod (sub-)plan
+        only, so on-pod data is never touched.
+        """
         v = np.asarray(v)
+        if self.faults is None and not self.verify:
+            if self.overlap:
+                # inter-pod and on-pod sub-plans execute separately, then
+                # merge -- bit-identical to the unsplit plan
+                # (tests/test_overlap.py); the wire codec rides the
+                # inter-pod sub-plan only
+                remote = execute_numpy(self._remote_plan, v, wire=self.wire)
+                local = execute_numpy(self._local_plan, v)
+                return merge_split_phase(self._split, local, remote)
+            return execute_numpy(self._plan, v, wire=self.wire)
+        return self._guarded_halo(v)
+
+    def _exchange(self, v: np.ndarray, strategy: str, wire: str,
+                  fault_call: int) -> np.ndarray:
+        """One physical halo attempt under (strategy, wire) -- the ladder's
+        probe; plans come from the module cache, so variants replan once."""
         if self.overlap:
-            # inter-pod and on-pod sub-plans execute separately, then merge
-            # -- bit-identical to the unsplit plan (tests/test_overlap.py);
-            # the wire codec rides the inter-pod sub-plan only
-            remote = execute_numpy(self._remote_plan, v, wire=self.wire)
+            remote_plan = comm_strategies.planned(
+                self._split.remote, strategy,
+                message_cap_bytes=self.message_cap_bytes,
+            )
+            remote = execute_numpy(
+                remote_plan, v, wire=wire, faults=self.faults,
+                fault_call=fault_call, verify=self.verify,
+            )
             local = execute_numpy(self._local_plan, v)
             return merge_split_phase(self._split, local, remote)
-        return execute_numpy(self._plan, v, wire=self.wire)
+        plan = comm_strategies.planned(
+            self.partition.pattern, strategy,
+            message_cap_bytes=self.message_cap_bytes,
+        )
+        return execute_numpy(
+            plan, v, wire=wire, faults=self.faults,
+            fault_call=fault_call, verify=self.verify,
+        )
+
+    def _guarded_halo(self, v: np.ndarray) -> np.ndarray:
+        def attempt(strategy: str, wire: str) -> np.ndarray:
+            idx = self._fault_calls
+            self._fault_calls += 1
+            return self._exchange(v, strategy, wire, idx)
+
+        out, path = faults_mod.run_ladder(
+            attempt,
+            strategy=self.strategy,
+            wire=self.wire,
+            health=self.health,
+            max_retries=self.max_retries,
+            fallback=self.fallback,
+            choose_alternative=faults_mod.advise_alternative(
+                self.partition.pattern
+            ),
+        )
+        if path is not None:
+            self.last_recovery = path.key
+        return out
 
     def __call__(self, v: np.ndarray) -> np.ndarray:
         v = np.asarray(v)

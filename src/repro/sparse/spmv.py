@@ -62,7 +62,7 @@ from repro.comm import strategies as comm_strategies
 from repro.comm.strategies import IrregularExchange
 from repro.compat import shard_map
 from repro.comm.topology import WORLD_AXES, PodTopology, make_exchange_mesh
-from repro.core.advisor import advise
+from repro.core.advisor import EXECUTABLE_STRATEGY, advise
 from repro.core.perfmodel import Strategy, Transport
 from repro.core.split_plan import RowPhaseSplit, split_rows
 from repro.kernels import ref as kref
@@ -72,15 +72,9 @@ from repro.kernels.spmv_ell import spmv_ell as spmv_ell_kernel
 from repro.sparse.matrices import CSRMatrix
 from repro.sparse.partition import SpmvPartition, partition_csr
 
-#: advisor Strategy -> executable strategy name
-_ADVISED = {
-    Strategy.STANDARD: "standard",
-    Strategy.TWO_STEP: "two_step",
-    Strategy.TWO_STEP_ONE: "two_step",
-    Strategy.THREE_STEP: "three_step",
-    Strategy.SPLIT_MD: "split",
-    Strategy.SPLIT_DD: "split",
-}
+#: advisor Strategy -> executable strategy name (canonical copy lives with
+#: the advisor so the fault ladder's re-advising shares one mapping)
+_ADVISED = EXECUTABLE_STRATEGY
 
 # ---------------------------------------------------------------------------
 # Local-compute compile cache
@@ -244,6 +238,13 @@ class DistributedSpMV:
     payload_width: int = 1
     overlap: bool = False
     wire: str = "none"
+    #: opt-in wire integrity verification on the exchange (see
+    #: :class:`repro.comm.strategies.IrregularExchange`)
+    verify: bool = False
+    #: seeded deterministic fault injection (repro.comm.faults.FaultPlan)
+    faults: Optional[object] = None
+    #: shared health tracker for the recovery ladder / watchdog
+    health: Optional[object] = None
 
     def __post_init__(self) -> None:
         topo = self.partition.topo
@@ -293,7 +294,12 @@ class DistributedSpMV:
             message_cap_bytes=self.message_cap_bytes,
             fuse_program=self.fuse_program,
             wire=self.wire,
+            verify=self.verify,
+            faults=self.faults,
+            health=self.health,
         )
+        # the exchange owns (and may have created) the shared tracker
+        self.health = self.exchange.health
         L = self.partition.rows_per_rank
         g = topo.nranks
 

@@ -108,6 +108,9 @@ def test_benchmarks_run_smoke():
         "wire/2p/split/int8",
         "planning/8r/",  # planning
         "kernel/spmm_ell/interpret/k4",  # kernels
+        "chaos/two_step/bf16",  # chaos: recovery ladder sweep
+        "chaos/split/bf16",
+        "chaosverify/two_step/bf16",  # chaos: verify-mode overhead
     ):
         assert marker in out, f"missing benchmark row {marker!r}\n{out[-4000:]}"
 
@@ -147,10 +150,19 @@ def test_benchmarks_run_smoke():
         if codec == "none":
             assert float(red) == 1.0, (strat, red)
 
+    # the chaos sweep's acceptance property in miniature: every seeded
+    # fault scenario recovered (the ladder's job), and every verify-mode
+    # parity check passed
+    chaos_rows = re.findall(r"chaos/(\w+)/(\w+),.*recovered=(\d+)/(\d+)", out)
+    assert chaos_rows, f"no chaos rows\n{out[-2000:]}"
+    for strat, codec, got, want in chaos_rows:
+        assert got == want and int(want) > 0, (strat, codec, got, want)
+    assert re.search(r"chaosverify/\w+/\w+,.*parity=ok", out)
+
     # machine-readable record: schema, per-section timings, wire counters
     with open(BENCH_JSON) as f:
         report = json.load(f)
-    assert report["schema"] == 1
+    assert report["schema"] == 2
     assert report["smoke"] is True
     assert report["failures"] == []
     for name, sec in report["sections"].items():
@@ -168,3 +180,18 @@ def test_benchmarks_run_smoke():
         assert (
             none["inter_pod_bytes"] / per_codec["bf16"]["inter_pod_bytes"] >= 1.8
         ), strat
+
+    # schema 2: chaos-recovery tally covers every strategy x lossy codec
+    # and every scenario recovered via some ladder rung
+    chaos = report["chaos_recovery"]
+    assert set(chaos) == {
+        f"{s}/{c}"
+        for s in ("standard", "two_step", "three_step", "split")
+        for c in ("bf16", "f16", "int8")
+    }
+    for key, tally in chaos.items():
+        assert tally["recovered"] == tally["attempts"] > 0, (key, tally)
+        assert (
+            tally["retry"] + tally["demote"] + tally["readvise"] + tally["clean_pass"]
+            == tally["recovered"]
+        ), (key, tally)

@@ -1,0 +1,512 @@
+"""Chaos-hardening tests: deterministic fault injection, wire integrity
+verification, and the self-healing recovery ladder.
+
+Four layers of guarantees:
+
+* **Determinism** -- compiling the same seeded :class:`FaultPlan` twice
+  yields bitwise-identical masks, and injections land exclusively on
+  DCI-crossing halo slots (``split_phase.from_local`` slots stay clean).
+* **Happy-path preservation** -- with ``verify=False`` and no plan, outputs
+  are bitwise identical to the unguarded executor; ``verify=True`` alone
+  changes nothing either.
+* **Detection + recovery** -- injected corruption raises a structured
+  :class:`ExchangeIntegrityError`; the ladder recovers via retry / codec
+  demotion / strategy re-advise, recording health + watchdog events; a
+  faulted solve still converges and names the recovery path in
+  ``SolveResult.status``.
+* **Executor lockstep** (slow, 8-device subprocess) -- the same plan drives
+  ``execute_numpy`` and the device executor to identical corrupted outputs
+  and identical error diagnostics for all 4 strategies x a lossy codec.
+"""
+
+import numpy as np
+import pytest
+
+from repro.comm import faults as F
+from repro.comm.exchange import (
+    PodTopology,
+    execute_numpy,
+    plan,
+    random_pattern,
+    split_phase,
+)
+from repro.runtime.watchdog import StragglerWatchdog
+from repro.solve import NumpySpMV, cg, spd_system
+from repro.sparse import partition_csr, thermal_like
+
+ALL_STRATEGIES = ("standard", "two_step", "three_step", "split")
+TOPO = PodTopology(npods=4, ppn=2)
+
+
+def _pattern(seed=3, local_size=24):
+    return random_pattern(np.random.default_rng(seed), TOPO, local_size)
+
+
+def _payload(pat, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((pat.topo.nranks, pat.local_size)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Determinism + confinement
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_faults_deterministic():
+    pat = _pattern()
+    fp = F.FaultPlan(
+        seed=11,
+        specs=(
+            F.FaultSpec(kind="corrupt", prob=0.7, frac=0.3),
+            F.FaultSpec(kind="perturb", prob=0.5),
+            F.FaultSpec(kind="zero", prob=0.4),
+        ),
+    )
+    for strat in ALL_STRATEGIES:
+        sp = plan(strat, pat, message_cap_bytes=256)
+        a = F.compile_faults(sp, "bf16", fp)
+        b = F.compile_faults(sp, "bf16", fp)
+        assert len(a.injections) == len(b.injections) > 0, strat
+        for ia, ib in zip(a.injections, b.injections):
+            assert (ia.ordinal, ia.op_index, ia.kind) == (ib.ordinal, ib.op_index, ib.kind)
+            np.testing.assert_array_equal(ia.np_mask, ib.np_mask)
+            np.testing.assert_array_equal(ia.dev_mask, ib.dev_mask)
+        # masks live on DCI hops only: every a2a_pod mask has empty diagonal
+        for inj in a.injections:
+            if inj.stage_kind == "a2a_pod":
+                diag = np.arange(TOPO.npods)
+                assert not inj.np_mask[diag, :, diag].any()
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("kind", ["corrupt", "perturb", "zero"])
+def test_injection_confined_to_inter_pod_slots(strategy, kind):
+    """Faulted output may differ from clean only on halo slots whose source
+    rank lives on ANOTHER pod (split_phase.from_local slots stay clean)."""
+    pat = _pattern()
+    sp = plan(strategy, pat, message_cap_bytes=256)
+    x = _payload(pat)
+    fp = F.FaultPlan(seed=5, specs=(F.FaultSpec(kind=kind, prob=1.0, frac=1.0),))
+    clean = execute_numpy(sp, x)
+    faulted = execute_numpy(sp, x, faults=fp)
+    diff = ~((faulted == clean) | (np.isnan(faulted) & np.isnan(clean)))
+    assert diff.any(), "fault plan with prob=1 must corrupt something"
+    split = split_phase(pat)
+    on_pod = np.asarray(split.from_local)
+    assert not (diff & on_pod).any(), "on-pod halo data was corrupted"
+
+
+def test_fault_plan_call_gating_and_spec_filters():
+    fp = F.FaultPlan(seed=1, specs=(F.FaultSpec(),), active_calls=(0, 2))
+    assert fp.active(0) and fp.active(2) and not fp.active(1)
+    assert F.FaultPlan(seed=1, specs=(F.FaultSpec(),)).active(99)
+    spec = F.FaultSpec(strategies=("two_step",), codecs=("lossy",))
+    assert spec.matches("two_step", "bf16")
+    assert spec.matches("two_step", "int8")
+    assert not spec.matches("two_step", "none")
+    assert not spec.matches("standard", "bf16")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        F.FaultSpec(kind="melt")
+    with pytest.raises(ValueError, match="at least one"):
+        F.FaultPlan(seed=0, specs=())
+
+
+# ---------------------------------------------------------------------------
+# Happy-path preservation (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["none", "bf16", "int8"])
+def test_verify_mode_is_bitwise_invisible_numpy(wire):
+    pat = _pattern()
+    x = _payload(pat)
+    for strat in ALL_STRATEGIES:
+        sp = plan(strat, pat, message_cap_bytes=256)
+        base = execute_numpy(sp, x, wire=wire)
+        checked = execute_numpy(sp, x, wire=wire, verify=True)
+        np.testing.assert_array_equal(base, checked, err_msg=(strat, wire))
+
+
+def test_inactive_fault_call_is_bitwise_clean():
+    """A FaultPlan gated to call 0 leaves call 1 bitwise identical to the
+    fault-free executor -- the property the retry rung relies on."""
+    pat = _pattern()
+    x = _payload(pat)
+    sp = plan("two_step", pat, message_cap_bytes=256)
+    fp = F.FaultPlan(seed=5, specs=(F.FaultSpec(),), active_calls=(0,))
+    clean = execute_numpy(sp, x, wire="bf16")
+    np.testing.assert_array_equal(
+        execute_numpy(sp, x, wire="bf16", faults=fp, fault_call=1), clean
+    )
+    assert not np.array_equal(
+        execute_numpy(sp, x, wire="bf16", faults=fp, fault_call=0), clean
+    )
+
+
+# ---------------------------------------------------------------------------
+# Detection
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["none", "bf16", "f16", "int8"])
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_corruption_detected_for_every_strategy_and_codec(strategy, wire):
+    pat = _pattern()
+    sp = plan(strategy, pat, message_cap_bytes=256)
+    x = _payload(pat)
+    fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(kind="corrupt"),))
+    with pytest.raises(F.ExchangeIntegrityError) as ei:
+        execute_numpy(sp, x, wire=wire, faults=fp, verify=True)
+    err = ei.value
+    d = err.diagnostics()
+    assert d["strategy"] == strategy and d["codec"] == wire
+    assert d["hop_class"] == "inter_pod"
+    assert d["stage_kind"] in ("a2a_pod", "permute")
+    assert "integrity violation" in str(err)
+
+
+def test_zero_and_perturb_detected_nan_counted():
+    pat = _pattern()
+    sp = plan("standard", pat, message_cap_bytes=256)
+    x = _payload(pat)
+    for kind in ("zero", "perturb"):
+        fp = F.FaultPlan(seed=3, specs=(F.FaultSpec(kind=kind, frac=1.0),))
+        with pytest.raises(F.ExchangeIntegrityError):
+            execute_numpy(sp, x, wire="bf16", faults=fp, verify=True)
+    # nan corruption trips the non-finite count -> infinite violation
+    fp = F.FaultPlan(seed=3, specs=(F.FaultSpec(kind="corrupt"),))
+    with pytest.raises(F.ExchangeIntegrityError) as ei:
+        execute_numpy(sp, x, wire="none", faults=fp, verify=True)
+    assert ei.value.violation == np.inf
+
+
+def test_slow_fault_adds_latency_not_values():
+    import time
+
+    pat = _pattern()
+    sp = plan("two_step", pat, message_cap_bytes=256)
+    x = _payload(pat)
+    fp = F.FaultPlan(seed=2, specs=(F.FaultSpec(kind="slow", delay_s=0.05),))
+    t0 = time.monotonic()
+    out = execute_numpy(sp, x, faults=fp, verify=True)  # no raise
+    assert time.monotonic() - t0 >= 0.05
+    np.testing.assert_array_equal(out, execute_numpy(sp, x))
+
+
+def test_tolerance_scales_with_codec():
+    # lossy drift within the codec bound passes; the same drift is a
+    # violation under codec "none"
+    amax = np.float32(2.0)
+    sum_abs = np.float32(100.0)
+    nelem = 64
+    drift_ok = float(F.sum_tolerance("bf16", nelem, amax, sum_abs, True)) * 0.5
+    pre = (sum_abs, np.float32(0), amax)
+    post = (sum_abs + np.float32(drift_ok), np.float32(0), amax)
+    assert F.check_violation(pre, post, nelem, "bf16", True) <= 0.0
+    assert F.check_violation(pre, post, nelem, "none", False) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Recovery ladder + health + watchdog
+# ---------------------------------------------------------------------------
+
+
+def _numpy_ladder(pat, x, faults, wire="bf16", health=None, **kw):
+    """Drive run_ladder through execute_numpy -- the exact wiring
+    NumpySpMV._guarded_halo uses (the device twin is exercised by the slow
+    subprocess tests below)."""
+    calls = {"n": 0}
+
+    def attempt(strategy, w):
+        idx = calls["n"]
+        calls["n"] += 1
+        sp = plan(strategy, pat, message_cap_bytes=256)
+        return execute_numpy(sp, x, wire=w, faults=faults, fault_call=idx, verify=True)
+
+    return F.run_ladder(
+        attempt, strategy="two_step", wire=wire, health=health,
+        choose_alternative=F.advise_alternative(pat), **kw
+    )
+
+
+def test_ladder_retry_recovers_transient_fault():
+    pat = _pattern()
+    x = _payload(pat)
+    fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(),), active_calls=(0,))
+    health = F.HealthTracker()
+    out, path = _numpy_ladder(pat, x, fp, health=health)
+    sp = plan("two_step", pat, message_cap_bytes=256)
+    np.testing.assert_array_equal(out, execute_numpy(sp, x, wire="bf16"))
+    assert path.key == "retry:two_step/bf16"
+    assert health.failures == {("two_step", "bf16"): 1}
+    assert health.recovery_count == 1 and health.last_recovery == path.key
+
+
+def test_ladder_demotes_lossy_codec():
+    pat = _pattern()
+    x = _payload(pat)
+    # persistent fault that only fires under lossy codecs
+    fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(codecs=("lossy",)),))
+    health = F.HealthTracker()
+    out, path = _numpy_ladder(pat, x, fp, health=health)
+    sp = plan("two_step", pat, message_cap_bytes=256)
+    np.testing.assert_array_equal(out, execute_numpy(sp, x))
+    assert path.key == "demote:two_step/none"
+    assert health.is_degraded("two_step", "bf16")
+    assert not health.is_degraded("two_step", "none")
+
+
+def test_ladder_readvises_strategy_and_feeds_watchdog():
+    pat = _pattern()
+    x = _payload(pat)
+    wd = StragglerWatchdog(budget=10)
+    health = F.HealthTracker(watchdog=wd)
+    # persistent fault pinned to two_step across ALL codecs: only a
+    # strategy change cures it
+    fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(strategies=("two_step",)),))
+    out, path = _numpy_ladder(pat, x, fp, health=health)
+    assert path.action == "readvise"
+    assert path.strategy in ALL_STRATEGIES and path.strategy != "two_step"
+    sp = plan(path.strategy, pat, message_cap_bytes=256)
+    np.testing.assert_array_equal(out, execute_numpy(sp, x))
+    # both rungs' failures were recorded and escalated to the watchdog
+    assert health.is_degraded("two_step", "bf16")
+    assert health.is_degraded("two_step", "none")
+    assert all(e["kind"] == "exchange_integrity" for e in wd.events)
+    assert len(wd.events) == 3  # initial + retry + demotion attempts
+
+
+def test_ladder_exhaustion_reraises():
+    pat = _pattern()
+    x = _payload(pat)
+    fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(),))  # fires everywhere
+    with pytest.raises(F.ExchangeIntegrityError):
+        _numpy_ladder(pat, x, fp, fallback=False, max_retries=1)
+
+
+def test_health_penalty_biases_advisor():
+    from repro.core.advisor import EXECUTABLE_STRATEGY, advise
+
+    pat = _pattern()
+    cp = pat.to_comm_pattern()
+    clean = advise(cp, machine="tpu_v5e_pod")
+    health = F.HealthTracker()
+    best_clean = EXECUTABLE_STRATEGY[clean.best.strategy]
+    health.failures[(best_clean, "none")] = 1
+    biased = advise(cp, machine="tpu_v5e_pod", health=health)
+    assert EXECUTABLE_STRATEGY[biased.best.strategy] != best_clean
+    # the unpenalized ranking is untouched by a default tracker
+    empty = advise(cp, machine="tpu_v5e_pod", health=F.HealthTracker())
+    assert [r.key for r in empty.ranked] == [r.key for r in clean.ranked]
+    assert health.penalty(best_clean, "none") == F.DEGRADED_PENALTY
+    assert health.penalty(best_clean, "bf16") == F.SUSPECT_PENALTY
+    assert health.penalty("three_step", "none") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Solver resilience
+# ---------------------------------------------------------------------------
+
+
+def _solver_setup(wire="none", **op_kw):
+    rng = np.random.default_rng(0)
+    A = spd_system(thermal_like(145, rng))  # 144 rows -> 18 per rank
+    part = partition_csr(A, PodTopology(npods=4, ppn=2))
+    b = rng.normal(size=(8, part.rows_per_rank))
+    return NumpySpMV(part, strategy="two_step", wire=wire, **op_kw), b
+
+
+def test_solver_histories_unchanged_by_guard_plumbing():
+    """verify=False + no FaultPlan: residual histories bitwise identical
+    to the plain operator (acceptance criterion)."""
+    op_plain, b = _solver_setup()
+    op_wire, _ = _solver_setup(wire="bf16")
+    res = cg(op_plain, b, tol=1e-8)
+    assert res.converged and res.status == "converged" and res.restarts == 0
+    assert cg(op_plain, b, tol=1e-8).residuals == res.residuals
+
+
+def test_solver_recovers_from_injected_dci_corruption():
+    fp = F.FaultPlan(seed=11, specs=(F.FaultSpec(kind="corrupt"),), active_calls=(0,))
+    op, b = _solver_setup(wire="bf16", verify=True, faults=fp)
+    clean_op, _ = _solver_setup(wire="bf16")
+    res = cg(op, b, tol=1e-6)
+    assert res.converged
+    assert res.status == "converged+exchange:retry:two_step/bf16"
+    assert op.last_recovery == "retry:two_step/bf16"
+    # after the transient call-0 fault, the guarded halo path is bitwise
+    # the clean one, so the whole history matches the clean solve
+    assert res.residuals == cg(clean_op, b, tol=1e-6).residuals
+
+
+def test_solver_demotion_path_converges():
+    fp = F.FaultPlan(seed=11, specs=(F.FaultSpec(codecs=("lossy",)),))
+    op, b = _solver_setup(wire="bf16", verify=True, faults=fp)
+    res = cg(op, b, tol=1e-6)
+    assert res.converged
+    assert res.status.endswith("+exchange:demote:two_step/none")
+
+
+def test_overlap_guarded_halo_matches_barrier():
+    fp = F.FaultPlan(seed=11, specs=(F.FaultSpec(),), active_calls=(0,))
+    op, b = _solver_setup(wire="bf16", verify=True, faults=fp, overlap=True)
+    res = cg(op, b, tol=1e-6)
+    assert res.converged and "+exchange:retry" in res.status
+
+
+def test_cg_restart_on_nonfinite_residual():
+    class Flaky:
+        """Delegates to a real operator but poisons ONE matvec."""
+
+        def __init__(self, op, poison_at):
+            self._op, self._n, self._at = op, 0, poison_at
+            self.topo, self.rows_per_rank = op.topo, op.rows_per_rank
+
+        def __call__(self, v):
+            out = self._op(v)
+            if self._n == self._at:
+                out = np.full_like(out, np.nan)
+            self._n += 1
+            return out
+
+    base, b = _solver_setup()
+    res = cg(Flaky(base, 3), b, tol=1e-6)
+    assert res.converged
+    assert res.restarts == 1 and res.status == "converged+restart"
+    # second poisoning after the restart ends the solve with the reason
+    res2 = cg(Flaky(base, 0), b, x0=b, tol=1e-300, maxiter=5)
+    assert not res2.converged
+
+
+def test_bicgstab_tolerance_guard_reports_breakdown():
+    from repro.solve import bicgstab
+
+    op, b = _solver_setup()
+    # orthogonal-ish shadow breakdown: force rho ~ 0 by solving with an
+    # rhs whose first iterate annihilates <rhat, r>; easiest determinate
+    # trigger is a poisoned matvec as above
+    class Nullify:
+        def __init__(self, op):
+            self._op, self._n = op, 0
+            self.topo, self.rows_per_rank = op.topo, op.rows_per_rank
+
+        def __call__(self, v):
+            self._n += 1
+            if self._n == 1:
+                return np.zeros_like(np.asarray(self._op(v)))
+            return self._op(v)
+
+    res = bicgstab(Nullify(op), b, tol=1e-10, maxiter=200)
+    # v = A p == 0 makes denom = <rhat, v> = 0: the old exact-zero guard
+    # silently truncated; now the solve restarts and reports its path
+    assert res.restarts == 1 and "+restart" in res.status
+    assert res.converged, res.status
+
+
+def test_healthy_bicgstab_status_plumbing():
+    from repro.solve import bicgstab
+
+    op, b = _solver_setup()
+    res = bicgstab(op, b, tol=1e-8)
+    assert res.converged and res.status == "converged" and res.restarts == 0
+    hard = cg(op, b, tol=1e-300, maxiter=3)
+    assert hard.status.startswith(("maxiter", "stagnation"))
+
+
+# ---------------------------------------------------------------------------
+# Executor lockstep (slow: 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_numpy_device_fault_lockstep(subproc):
+    subproc(
+        """
+import numpy as np
+from repro.comm.exchange import random_pattern, execute_numpy, PodTopology
+from repro.comm.strategies import IrregularExchange
+from repro.comm import faults as F
+
+topo = PodTopology(npods=4, ppn=2)
+pat = random_pattern(np.random.default_rng(3), topo, local_size=24)
+x = np.random.default_rng(0).standard_normal((topo.nranks, pat.local_size)).astype(np.float32)
+
+for kind in ("corrupt", "perturb", "zero"):
+    fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(kind=kind, scale=0.5),))
+    for strat in ("standard", "two_step", "three_step", "split"):
+        for wire in ("bf16", "int8"):
+            ex = IrregularExchange(pat, strat, message_cap_bytes=256, wire=wire, verify=True)
+            sp = ex.plan  # the device plan (fused) drives BOTH executors
+            # clean, verified outputs agree bitwise
+            out_dev = np.asarray(ex(x))
+            out_np = execute_numpy(sp, x, wire=wire, verify=True)
+            assert np.array_equal(out_dev, out_np), ("clean", strat, wire)
+            # identical injections -> identical corrupted outputs (bitwise,
+            # nan positions included)
+            exf = IrregularExchange(pat, strat, message_cap_bytes=256, wire=wire,
+                                    faults=fp, max_retries=0, fallback=False)
+            out_devf = np.asarray(exf._raw_call(x, 0))
+            out_npf = execute_numpy(sp, x, wire=wire, faults=fp)
+            assert out_devf.tobytes() == out_npf.tobytes(), ("fault", kind, strat, wire)
+            # identical ExchangeIntegrityError diagnostics
+            exv = IrregularExchange(pat, strat, message_cap_bytes=256, wire=wire,
+                                    faults=fp, verify=True, max_retries=0, fallback=False)
+            try:
+                exv._raw_call(x, 0)
+                d_dev = None
+            except F.ExchangeIntegrityError as e:
+                d_dev = e.diagnostics()
+            try:
+                execute_numpy(sp, x, wire=wire, faults=fp, verify=True)
+                d_np = None
+            except F.ExchangeIntegrityError as e:
+                d_np = e.diagnostics()
+            assert d_dev is not None and d_dev == d_np, (kind, strat, wire, d_dev, d_np)
+print("FAULT LOCKSTEP OK")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_device_ladder_recovers(subproc):
+    subproc(
+        """
+import numpy as np
+from repro.comm.exchange import random_pattern, PodTopology
+from repro.comm.strategies import IrregularExchange
+from repro.comm import faults as F
+
+topo = PodTopology(npods=4, ppn=2)
+pat = random_pattern(np.random.default_rng(3), topo, local_size=24)
+x = np.random.default_rng(0).standard_normal((topo.nranks, pat.local_size)).astype(np.float32)
+
+# transient -> retry
+fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(),), active_calls=(0,))
+ex = IrregularExchange(pat, "two_step", message_cap_bytes=256, wire="bf16",
+                       faults=fp, verify=True)
+ref = np.asarray(IrregularExchange(pat, "two_step", message_cap_bytes=256, wire="bf16")(x))
+assert np.array_equal(np.asarray(ex(x)), ref)
+assert ex.last_recovery == "retry:two_step/bf16", ex.last_recovery
+
+# persistent lossy-only -> demote
+fp2 = F.FaultPlan(seed=7, specs=(F.FaultSpec(codecs=("lossy",)),))
+ex2 = IrregularExchange(pat, "two_step", message_cap_bytes=256, wire="bf16",
+                        faults=fp2, verify=True)
+ref2 = np.asarray(IrregularExchange(pat, "two_step", message_cap_bytes=256)(x))
+assert np.array_equal(np.asarray(ex2(x)), ref2)
+assert ex2.last_recovery == "demote:two_step/none", ex2.last_recovery
+
+# persistent per-strategy -> readvise
+fp3 = F.FaultPlan(seed=7, specs=(F.FaultSpec(strategies=("two_step",)),))
+ex3 = IrregularExchange(pat, "two_step", message_cap_bytes=256, wire="bf16",
+                        faults=fp3, verify=True)
+out3 = np.asarray(ex3(x))
+assert ex3.last_recovery.startswith("readvise:"), ex3.last_recovery
+alt = ex3.last_recovery.split(":")[1].split("/")[0]
+ref3 = np.asarray(IrregularExchange(pat, alt, message_cap_bytes=256)(x))
+assert np.array_equal(out3, ref3)
+print("DEVICE LADDER OK")
+""",
+        devices=8,
+    )

@@ -137,3 +137,35 @@ def test_watchdog_detects_consecutive_stragglers(monkeypatch):
         outcomes.append(wd.end_step(step))
     assert outcomes == [False, False, False, False, True]
     assert len(wd.events) == 3
+
+
+def test_watchdog_end_step_without_start_raises():
+    wd = StragglerWatchdog()
+    with pytest.raises(RuntimeError, match="start_step"):
+        wd.end_step(0)
+    # a normal step still works afterwards, and consumes its timestamp:
+    # a second end_step for the same step is the same clear error, not a
+    # TypeError on the None timestamp
+    wd.start_step()
+    assert wd.end_step(0) is False
+    with pytest.raises(RuntimeError, match="start_step"):
+        wd.end_step(0)
+
+
+def test_watchdog_record_external_shares_budget(monkeypatch):
+    wd = StragglerWatchdog(budget=3)
+    assert wd.record_external("exchange_integrity", {"codec": "bf16"}) is False
+    assert wd.record_external("exchange_integrity") is False
+    assert wd.record_external("exchange_integrity") is True  # budget hit
+    assert len(wd.events) == 3
+    assert wd.events[0] == {"kind": "exchange_integrity", "codec": "bf16"}
+    # a healthy timed step resets the consecutive count
+    times = iter([0.0, 1.0, 2.0, 3.0])
+    import repro.runtime.watchdog as W
+
+    monkeypatch.setattr(W.time, "monotonic", lambda: next(times))
+    wd.start_step()
+    wd.end_step(0)  # primes the EMA
+    wd.start_step()
+    wd.end_step(1)
+    assert wd.consecutive == 0
