@@ -9,14 +9,22 @@ pre-vectorization token-list baseline
 purpose.  Both planners emit byte-identical stage programs, so the ratio is
 pure implementation speedup.
 
+Also times :meth:`ExchangePattern.fingerprint` -- the plan-cache key --
+against the pre-bugfix string-join reference: the byte-hash rewrite is
+what keeps per-batch cache lookups (the MoE dispatch path fingerprints
+every routing pattern) off the planner's critical path.
+
 Runs in-process (planning needs no devices).  CSV columns:
 
     name,us_per_call,derived
     planning/<nranks>r/<strategy>,<vectorized us>,legacy_us=... speedup=...
+    fingerprint/<nranks>r,<bytes-hash us>,strjoin_us=... speedup=... memo_ns=...
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import time
 
 import numpy as np
@@ -31,6 +39,20 @@ TOPOLOGIES = [(2, 4), (2, 8), (4, 8), (8, 8)]
 LOCAL_SIZE = 32
 CAP_BYTES = 2048
 STRATEGIES = ("standard", "two_step", "three_step", "split")
+
+
+def _strjoin_fingerprint(pat) -> str:
+    """The pre-bugfix reference: per-need Python string formatting.
+
+    Retained verbatim so the fingerprint column measures the rewrite
+    against the exact implementation it replaced (same digest family,
+    different canonical serialization -- digests are NOT comparable
+    across the two, only the costs are)."""
+    h = hashlib.sha1()
+    h.update(f"{pat.topo.npods},{pat.topo.ppn},{pat.local_size};".encode())
+    for n in sorted(pat.needs, key=lambda x: (x.dst, x.src)):
+        h.update(f"{n.dst}<{n.src}:{','.join(map(str, n.idx))};".encode())
+    return h.hexdigest()
 
 
 def _time(fn, iters: int) -> float:
@@ -69,6 +91,24 @@ def main(smoke: bool = False) -> None:
             f"planning/{topo.nranks}r/all",
             total_new * 1e6,
             f"legacy_us={total_old * 1e6:.1f} speedup={total_old / total_new:.1f}x",
+        )
+
+        # fingerprint micro-benchmark: bytes-hash vs string-join on fresh
+        # copies (dataclasses.replace defeats the per-instance memo), plus
+        # the memoized re-read cost the steady-state cache lookups pay
+        iters = 5 if smoke else 20
+        t_copy = _time(lambda: dataclasses.replace(pat), iters)
+        t_hash = max(
+            _time(lambda: dataclasses.replace(pat).fingerprint(), iters) - t_copy,
+            1e-9,
+        )
+        t_join = _time(lambda: _strjoin_fingerprint(pat), iters)
+        t_memo = _time(pat.fingerprint, iters)
+        emit(
+            f"fingerprint/{topo.nranks}r",
+            t_hash * 1e6,
+            f"strjoin_us={t_join * 1e6:.1f} speedup={t_join / t_hash:.1f}x "
+            f"memo_ns={t_memo * 1e9:.0f}",
         )
 
 

@@ -16,6 +16,8 @@ Sections:
   kernels     -- Pallas kernel micro-benchmarks
   roofline    -- deliverable (g): terms from the dry-run artifacts
   chaos       -- fault-injection recovery rate + verify-mode overhead
+  moe_dispatch -- MoE token dispatch via the exchange stack (strategy x
+                  codec x skew vs the all-to-all baseline, + plan cache)
 
 ``--smoke`` runs every requested section in a reduced configuration (fewer
 matrices/iterations/devices).  It exists so a tier-1 test can execute the
@@ -29,8 +31,11 @@ machine-readable record of per-section wall times plus the wire-byte
 counters of a fixed reference exchange (the numbers
 ``IrregularExchange.wire_bytes`` reports, per strategy x codec) and the
 chaos-recovery tally (schema 2: which ladder rung cured each seeded fault
-scenario, per strategy x codec) -- so the perf trajectory is trackable
-across PRs; schema pinned by ``tests/test_benchmarks_smoke.py``.
+scenario, per strategy x codec) and the MoE-dispatch routing counters
+(schema 3: bucketed vs uniform plan bytes per strategy, plus the
+simulated plan-cache hit rate for a jittering skewed load) -- so the perf
+trajectory is trackable across PRs; schema pinned by
+``tests/test_benchmarks_smoke.py``.
 """
 
 from __future__ import annotations
@@ -42,7 +47,7 @@ import time
 import traceback
 
 #: bump when the JSON layout changes (tests pin it)
-BENCH_SCHEMA = 2
+BENCH_SCHEMA = 3
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_exchange.json")
 
 
@@ -93,6 +98,53 @@ def _chaos_counters() -> dict:
     return chaos_outcomes(STRATEGY_NAMES, lossy)
 
 
+def _moe_dispatch_counters() -> dict:
+    """MoE routing counters on a fixed skewed load (schema 3).
+
+    Deterministic, plan-level and jax-free: a jittering skewed routing
+    stream through :class:`repro.models.RoutingBucketer` (the simulated
+    plan-cache hit rate the tentpole pins at >= 90%), plus the planner's
+    wire bytes for the bucketed dispatch pattern next to the uniform
+    full-block all-to-all it replaces, per strategy.  The byte gap is the
+    traffic the quantized prefix shipping avoids sending at all.
+    """
+    import numpy as np
+
+    from repro.comm import wire
+    from repro.comm.exchange import block_pattern
+    from repro.comm.strategies import STRATEGY_NAMES, planned
+    from repro.comm.topology import PodTopology
+    from repro.models import RoutingBucketer
+
+    topo = PodTopology(npods=2, ppn=4)
+    n = topo.nranks
+    block = 32
+    rng = np.random.default_rng(1234)
+    base = np.zeros((n, n), np.int64)
+    base[:, :3] = 20  # hot experts on ranks 0..2
+    np.fill_diagonal(base, 0)
+    buck = RoutingBucketer(topo, block=block, quantum=8)
+    bundle = None
+    for _ in range(24):
+        jitter = rng.integers(-3, 4, size=(n, n)) * (base > 0)
+        bundle, _ = buck.step(base + jitter)
+    out: dict = {
+        "batches": buck.steps,
+        "replans": buck.replans,
+        "hit_rate": round(buck.hit_rate, 4),
+        "strategies": {},
+    }
+    uniform = block_pattern(topo, block)
+    for strategy in STRATEGY_NAMES:
+        per = {}
+        for name, pat in (("uniform", uniform), ("bucketed", bundle.pattern_dispatch)):
+            sp = planned(pat, strategy, message_cap_bytes=512)
+            intra, inter = wire.scaled_wire_bytes(sp, "none")
+            per[name] = {"intra_pod_bytes": intra, "inter_pod_bytes": inter}
+        out["strategies"][strategy] = per
+    return out
+
+
 def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JSON) -> bool:
     """Write the tracked record iff this was a FULL, PASSING run.
 
@@ -112,6 +164,7 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
         return False
     report["wire_bytes"] = _wire_byte_counters()
     report["chaos_recovery"] = _chaos_counters()
+    report["moe_dispatch"] = _moe_dispatch_counters()
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -125,6 +178,7 @@ def main() -> None:
         bench_kernels,
         bench_model_validation,
         bench_modeled_performance,
+        bench_moe_dispatch,
         bench_overlap,
         bench_params,
         bench_planning,
@@ -146,6 +200,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
         "chaos": bench_chaos.main,
+        "moe_dispatch": bench_moe_dispatch.main,
     }
     args = sys.argv[1:]
     smoke = "--smoke" in args

@@ -17,6 +17,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--advise-dispatch", action="store_true",
+                    help="rank exchange strategies for the measured MoE "
+                         "routing histogram (MoE archs only)")
+    ap.add_argument("--npods", type=int, default=2)
+    ap.add_argument("--ppn", type=int, default=4)
     args = ap.parse_args()
 
     import jax
@@ -64,6 +69,15 @@ def main() -> None:
     print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} in {t1-t0:.2f}s; "
           f"decode {args.gen} steps in {t2-t1:.2f}s ({tput:.1f} tok/s incl. 1st-step compile)")
     print("sample:", gen[0][:16])
+
+    if args.advise_dispatch:
+        from repro.launch.serve import dispatch_advice
+
+        served = np.concatenate([np.asarray(prompts), gen], axis=1)
+        counts, advice = dispatch_advice(params, cfg, served, args.npods, args.ppn)
+        print(f"dispatch advice ({args.npods} pods x {args.ppn}, "
+              f"{int(counts.sum())} routed tokens):")
+        print(advice.table())
 
 
 if __name__ == "__main__":

@@ -131,14 +131,32 @@ class ExchangePattern:
         return out
 
     def fingerprint(self) -> str:
-        """Stable content hash: cache / CSV key for this exact pattern."""
-        h = hashlib.sha1()
-        h.update(
-            f"{self.topo.npods},{self.topo.ppn},{self.local_size};".encode()
-        )
-        for n in sorted(self.needs, key=lambda x: (x.dst, x.src)):
-            h.update(f"{n.dst}<{n.src}:{','.join(map(str, n.idx))};".encode())
-        return h.hexdigest()
+        """Stable content hash: cache / CSV key for this exact pattern.
+
+        Hashes one flat int64 buffer -- header ``(npods, ppn, local_size,
+        n_needs)``, then a ``(dst, src, len)`` triple per need in
+        ``(dst, src)`` order, then every need's indices concatenated -- so
+        the digest is a bijective, need-order-invariant function of the
+        pattern at the cost of a single numpy conversion + hash pass,
+        instead of O(total indices) Python string formatting.  This is on
+        the per-batch path for dynamic (MoE routing) patterns.  The digest
+        is memoized on the instance: patterns are frozen, so repeated
+        cache lookups under the same pattern hash nothing.
+        """
+        cached = getattr(self, "_fp_memo", None)
+        if cached is not None:
+            return cached
+        rows = sorted(self.needs, key=lambda n: (n.dst, n.src))
+        buf = [self.topo.npods, self.topo.ppn, self.local_size, len(rows)]
+        for n in rows:
+            buf.append(n.dst)
+            buf.append(n.src)
+            buf.append(len(n.idx))
+        for n in rows:
+            buf.extend(n.idx)
+        fp = hashlib.sha1(np.asarray(buf, dtype=np.int64).tobytes()).hexdigest()
+        object.__setattr__(self, "_fp_memo", fp)
+        return fp
 
     # -- derived views -------------------------------------------------
     def dedup_for_pod(self, src: int, dst_pod: int) -> List[int]:
@@ -189,6 +207,72 @@ def random_pattern(
             idx = np.sort(rng.choice(local_size, size=min(k, local_size), replace=False))
             needs.append(Need(dst, src, tuple(int(i) for i in idx)))
     return ExchangePattern(topo=topo, local_size=local_size, needs=tuple(needs))
+
+
+# ---------------------------------------------------------------------------
+# All-to-all-shaped (routing) patterns and count bucketing
+# ---------------------------------------------------------------------------
+
+
+def block_pattern(
+    topo: PodTopology,
+    block: int,
+    widths: Optional[np.ndarray] = None,
+) -> ExchangePattern:
+    """The element-level pattern of a (possibly ragged) tiled all-to-all.
+
+    Every rank's local buffer is ``nranks`` destination blocks of ``block``
+    slots; rank ``s`` sends the first ``widths[s, d]`` slots of its ``d``-th
+    block to rank ``d`` (``widths=None`` means full blocks -- the flat
+    ``jax.lax.all_to_all``).  This is exactly the shape of capacity-based
+    MoE token dispatch: the router fills block ``d`` with the tokens bound
+    for shard ``d``, and ``widths`` is the (quantized) per-pair token count,
+    so skewed routing ships only the occupied slot prefix per pair.
+
+    Self blocks never appear (they stay on-device); the canonical receive
+    layout is src-major, matching the tiled all-to-all's block order minus
+    the self block.
+    """
+    n = topo.nranks
+    if widths is None:
+        w = np.full((n, n), block, dtype=np.int64)
+    else:
+        w = np.asarray(widths, dtype=np.int64)
+        if w.shape != (n, n):
+            raise ValueError(f"widths must be [{n}, {n}], got {w.shape}")
+        if (w < 0).any() or (w > block).any():
+            raise ValueError(f"widths must lie in [0, {block}]")
+    needs = []
+    for d in range(n):
+        base = d * block
+        for s in range(n):
+            k = int(w[s, d])
+            if s == d or k == 0:
+                continue
+            needs.append(Need(dst=d, src=s, idx=tuple(range(base, base + k))))
+    return ExchangePattern(topo=topo, local_size=n * block, needs=tuple(needs))
+
+
+def quantize_widths(counts: np.ndarray, quantum: int, cap: int) -> np.ndarray:
+    """Bucket per-pair token counts up to ``quantum``-slot granularity.
+
+    ``counts[s, d]`` is the measured number of tokens rank ``s`` routed to
+    rank ``d`` this batch; the result is the per-pair slot width to actually
+    exchange: counts are clipped to the capacity ``cap`` (tokens beyond it
+    were dropped anyway), then rounded UP to a multiple of ``quantum`` (and
+    re-clipped to ``cap``).  Rounding up makes the width a safe upper bound
+    on the occupied slot prefix, and quantization collapses nearby counts
+    onto the same width so :meth:`ExchangePattern.fingerprint`-keyed plan
+    caches hit under fluctuating-but-stationary load skew.  Zero counts stay
+    zero (the pair drops out of the pattern entirely).
+    """
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    c = np.minimum(np.asarray(counts, dtype=np.int64), cap)
+    if (c < 0).any():
+        raise ValueError("counts must be non-negative")
+    q = -(-c // quantum) * quantum  # ceil to quantum
+    return np.minimum(q, cap)
 
 
 # ---------------------------------------------------------------------------

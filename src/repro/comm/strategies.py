@@ -367,6 +367,10 @@ class CacheStats:
     #: and the solver's overlapped numpy executor)
     split_hits: int = 0
     split_misses: int = 0
+    #: whole-instance front door used by per-batch pattern producers
+    #: (:func:`exchange_for`); a hit means zero planning work for the batch
+    exchange_hits: int = 0
+    exchange_misses: int = 0
 
 
 _stats = CacheStats()
@@ -375,10 +379,13 @@ _EXEC_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _MESH_CACHE: "OrderedDict[tuple, jax.sharding.Mesh]" = OrderedDict()
 #: split-phase decompositions + jitted merge fns, keyed by pattern fingerprint
 _SPLIT_CACHE: "OrderedDict[str, tuple]" = OrderedDict()
+#: constructed IrregularExchange instances (per-batch dynamic-pattern callers)
+_EXCHANGE_CACHE: "OrderedDict[tuple, IrregularExchange]" = OrderedDict()
 #: external LRUs (e.g. the SpMM compute cache) reset by clear_caches()
 _EXTERNAL_CACHES: List[OrderedDict] = []
 PLAN_CACHE_MAX = 256
 EXEC_CACHE_MAX = 64
+EXCHANGE_CACHE_MAX = 64
 
 
 def cache_stats() -> CacheStats:
@@ -398,12 +405,14 @@ def clear_caches() -> None:
     _EXEC_CACHE.clear()
     _MESH_CACHE.clear()
     _SPLIT_CACHE.clear()
+    _EXCHANGE_CACHE.clear()
     for cache in _EXTERNAL_CACHES:
         cache.clear()
     _stats.plan_hits = _stats.plan_misses = 0
     _stats.exec_hits = _stats.exec_misses = 0
     _stats.compute_hits = _stats.compute_misses = 0
     _stats.split_hits = _stats.split_misses = 0
+    _stats.exchange_hits = _stats.exchange_misses = 0
 
 
 def _lru_get(cache: OrderedDict, key, max_size: int, build):
@@ -940,3 +949,48 @@ class IrregularExchange:
 
 
 STRATEGY_NAMES = ("standard", "two_step", "three_step", "split")
+
+
+def exchange_for(
+    pattern: ExchangePattern,
+    strategy: str,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    message_cap_bytes: int = 16384,
+    elem_bytes: int = 4,
+    wire: str = "none",
+) -> IrregularExchange:
+    """Memoized :class:`IrregularExchange` constructor for dynamic callers.
+
+    Per-batch pattern producers (MoE routing) re-request an exchange every
+    step; constructing a fresh instance each time is cheap-ish (plan and
+    executor are already cached) but still re-runs ``__post_init__``
+    bookkeeping.  This front-door LRU returns the *same* instance for an
+    equal ``(fingerprint, strategy, caps, wire, mesh)`` request, so hot
+    routing buckets cost one dict lookup.  Cleared by :func:`clear_caches`.
+    """
+    key = (
+        pattern.fingerprint(),
+        strategy,
+        message_cap_bytes,
+        elem_bytes,
+        wire,
+        _mesh_key(mesh) if mesh is not None else None,
+    )
+
+    def build():
+        return IrregularExchange(
+            pattern,
+            strategy,
+            mesh=mesh,
+            message_cap_bytes=message_cap_bytes,
+            elem_bytes=elem_bytes,
+            wire=wire,
+        )
+
+    ex, hit = _lru_get(_EXCHANGE_CACHE, key, EXCHANGE_CACHE_MAX, build)
+    if hit:
+        _stats.exchange_hits += 1
+    else:
+        _stats.exchange_misses += 1
+    return ex

@@ -34,6 +34,7 @@ from repro.core.perfmodel import (
     PatternStats,
     Strategy,
     Transport,
+    dispatch_stats,
     get_wire,
     modeled_pairs,
     predict,
@@ -244,6 +245,42 @@ def advise_stats(
         for (s, tr, ov, cd), t in sorted(preds.items(), key=lambda kv: kv[1])
     )
     return Advice(machine=m.name, stats=stats, ranked=ranked)
+
+
+def advise_routing(
+    counts,
+    ppn: int,
+    elem_bytes: int = 4,
+    payload_width: int = 1,
+    machine: MachineParams | str = "tpu_v5e_pod",
+    wire: "str | Sequence[str] | None" = None,
+    health=None,
+    include_two_step_one: bool = False,
+) -> Advice:
+    """Rank strategies for a measured routing histogram.
+
+    ``counts[s, d]`` is the measured number of routed elements (MoE tokens)
+    sent from rank ``s`` to rank ``d`` -- the expert-load histogram the
+    router produced, not an assumed-uniform all-to-all.  ``payload_width``
+    is the per-element feature width (``d_model`` for token dispatch): byte
+    terms scale by it while message counts stay fixed, exactly the batched
+    payload lever of :meth:`~repro.core.perfmodel.PatternStats.widened`.
+
+    >>> import numpy as np
+    >>> from repro.core import advise_routing
+    >>> counts = np.full((8, 8), 64) - 64 * np.eye(8, dtype=int)
+    >>> adv = advise_routing(counts, ppn=4, payload_width=32, machine="lassen")
+    >>> adv.best.predicted_time < adv.ranked[-1].predicted_time
+    True
+    """
+    return advise_stats(
+        dispatch_stats(counts, ppn, elem_bytes=elem_bytes),
+        machine=machine,
+        payload_width=payload_width,
+        wire=wire,
+        health=health,
+        include_two_step_one=include_two_step_one,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,50 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import PRESETS
-from repro.models import LMModel
+from repro.models import ExpertLoadHistogram, LMModel
+
+
+def routing_counts(params, cfg, tokens, nranks: int) -> np.ndarray:
+    """Measured (src rank -> dst rank) routed-token counts for served tokens.
+
+    Replays the first MoE layer's router over the embedded token ids (the
+    layer-0 approximation: later layers see residual-mixed activations, but
+    the first routing decision is exact) and bins the top-k assignments by
+    source shard (tokens block-sharded over ranks) and destination shard
+    (experts block-sharded over ranks).  This is the traffic matrix the
+    dispatch hop would carry -- the advisor's measured histogram.
+    """
+    if cfg.family != "moe":
+        raise ValueError(f"--advise-dispatch needs a MoE arch, got {cfg.family!r}")
+    emb = np.asarray(params["embed"])  # [V, M]
+    router = np.asarray(params["seg_moe"]["moe"]["router"])[0]  # [M, E]
+    toks = np.asarray(tokens).reshape(-1)
+    logits = emb[toks] @ router
+    k = cfg.moe.top_k
+    top = np.argsort(-logits, axis=-1)[:, :k]  # [N, k]
+    e_per = max(cfg.moe.n_experts // nranks, 1)
+    src = np.repeat(np.arange(toks.size) * nranks // toks.size, k)
+    dst = np.minimum(top.reshape(-1) // e_per, nranks - 1)
+    counts = np.zeros((nranks, nranks), dtype=np.int64)
+    np.add.at(counts, (src, dst), 1)
+    return counts
+
+
+def dispatch_advice(params, cfg, tokens, npods: int, ppn: int,
+                    machine: str = "tpu_v5e_pod"):
+    """Rank exchange strategies for the traffic this serving run produced.
+
+    Returns ``(counts, advice)``: the measured ``[nranks, nranks]`` routing
+    histogram and the :class:`repro.core.Advice` ranking for it, with byte
+    terms scaled by ``d_model`` (each routed token ships a d_model-wide
+    activation row).
+    """
+    nranks = npods * ppn
+    counts = routing_counts(params, cfg, tokens, nranks)
+    hist = ExpertLoadHistogram(nranks)
+    hist.update(counts)
+    advice = hist.advise(ppn=ppn, payload_width=cfg.d_model, machine=machine)
+    return counts, advice
 
 
 def main() -> None:
@@ -27,6 +70,13 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--advise-dispatch", action="store_true",
+                    help="after serving, rank exchange strategies for the "
+                         "measured MoE routing histogram (MoE archs only)")
+    ap.add_argument("--npods", type=int, default=2,
+                    help="pods assumed for --advise-dispatch")
+    ap.add_argument("--ppn", type=int, default=4,
+                    help="chips per pod assumed for --advise-dispatch")
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -71,6 +121,13 @@ def main() -> None:
     print(f"prefill {args.batch}x{args.prompt_len} in {t1-t0:.2f}s; "
           f"decoded {args.gen} tokens/seq in {t2-t1:.2f}s")
     print("generated:", np.asarray(gen)[:, :10])
+
+    if args.advise_dispatch:
+        served = np.concatenate([np.asarray(prompts), np.asarray(gen)], axis=1)
+        counts, advice = dispatch_advice(params, cfg, served, args.npods, args.ppn)
+        print(f"dispatch advice ({args.npods} pods x {args.ppn}, "
+              f"{int(counts.sum())} routed tokens):")
+        print(advice.table())
 
 
 if __name__ == "__main__":

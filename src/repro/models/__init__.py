@@ -1,6 +1,15 @@
 """Model zoo: composable transformer/SSM stacks for the assigned archs."""
 
 from repro.models.lm import LMModel
+from repro.models.moe import MoELayer
+from repro.models.moe_dispatch import (
+    DispatchStep,
+    ExpertLoadHistogram,
+    MoEDispatcher,
+    RoutingBucketer,
+    RoutingBundle,
+    recv_maps,
+)
 from repro.models.sharding import (
     DEFAULT_RULES,
     ParamSpec,
@@ -16,6 +25,13 @@ from repro.models.transformer import Block, Segment
 
 __all__ = [
     "LMModel",
+    "MoELayer",
+    "DispatchStep",
+    "ExpertLoadHistogram",
+    "MoEDispatcher",
+    "RoutingBucketer",
+    "RoutingBundle",
+    "recv_maps",
     "DEFAULT_RULES",
     "ParamSpec",
     "constrain",

@@ -20,15 +20,19 @@ shows it, and the hierarchical variant can replace it on multi-pod meshes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import math
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.topology import WORLD_AXES, PodTopology
 from repro.configs.base import MoEConfig
 from repro.compat import shard_map
 from repro.models.layers import MLP
+from repro.models.moe_dispatch import MoEDispatcher
 from repro.models.sharding import ParamSpec
 
 
@@ -37,7 +41,33 @@ class MoELayer:
     d_model: int
     cfg: MoEConfig
     act: str = "silu"
-    ep_axis: str = "data"  # expert-parallel mesh axis (intra-pod!)
+    #: expert-parallel mesh axis (or tuple of axes, e.g. ``("pod", "local")``
+    #: to run dispatch over the full exchange mesh)
+    ep_axis: Union[str, Tuple[str, ...]] = "data"
+    #: "all_to_all" (flat ``jax.lax.all_to_all``, the parity baseline) or
+    #: "exchange" (node-aware :class:`~repro.comm.IrregularExchange` hops,
+    #: planned per measured routing pattern -- see repro.models.moe_dispatch)
+    dispatch: str = "all_to_all"
+    #: exchange strategy: "auto" (advisor-picked from the measured routing
+    #: histogram) or one of repro.comm.STRATEGY_NAMES
+    strategy: str = "auto"
+    #: inter-pod wire codec for the exchange path ("none" = full precision)
+    wire: str = "none"
+    #: slot granularity for routing-count bucketing (plan-cache stability)
+    route_quantum: int = 8
+    #: lazily-created per-layer dispatcher; not part of identity
+    dispatcher: Optional[MoEDispatcher] = dataclasses.field(
+        default=None, compare=False
+    )
+
+    def __post_init__(self) -> None:
+        if self.dispatch not in ("all_to_all", "exchange"):
+            raise ValueError(
+                f"dispatch must be 'all_to_all' or 'exchange', got {self.dispatch!r}"
+            )
+        if self.dispatch == "exchange" and self.ep_axis == "data":
+            # exchange dispatch runs over the ("pod", "local") exchange mesh
+            object.__setattr__(self, "ep_axis", WORLD_AXES)
 
     def params(self) -> dict:
         E, M, F = self.cfg.n_experts, self.d_model, self.cfg.d_ff_expert
@@ -53,6 +83,16 @@ class MoELayer:
         return p
 
     # ------------------------------------------------------------------
+    def _ep_axes(self) -> Tuple[str, ...]:
+        return self.ep_axis if isinstance(self.ep_axis, tuple) else (self.ep_axis,)
+
+    def _ep_size(self, mesh) -> int:
+        """Expert-parallel degree; 1 when any ep axis is absent."""
+        axes = self._ep_axes()
+        if mesh is None or any(a not in mesh.axis_names for a in axes):
+            return 1
+        return math.prod(mesh.shape[a] for a in axes)
+
     def __call__(self, params, x: jnp.ndarray, mesh=None) -> jnp.ndarray:
         """x: [B, S, M].  Routed experts + optional shared experts."""
         cfg = self.cfg
@@ -62,8 +102,11 @@ class MoELayer:
         top_p, top_e = jax.lax.top_k(probs, cfg.top_k)  # [B,S,k]
         top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
-        if mesh is not None and self.ep_axis in mesh.axis_names and mesh.shape[self.ep_axis] > 1:
-            routed = self._dispatch_shard_map(params, x, top_p, top_e, mesh)
+        if self._ep_size(mesh) > 1:
+            if self.dispatch == "exchange":
+                routed = self._dispatch_exchange(params, x, top_p, top_e, mesh)
+            else:
+                routed = self._dispatch_shard_map(params, x, top_p, top_e, mesh)
         else:
             routed = self._dispatch_local(params, x, top_p, top_e)
 
@@ -85,10 +128,24 @@ class MoELayer:
         """Position of each assignment within its bin; >= cap means dropped.
 
         eid: [T] bin ids. Returns (pos_in_bin [T], keep mask [T]).
+
+        Sort-based: a stable argsort groups each bin's assignments in
+        original order, the position within the run is ``index - run start``
+        (a ``cummax`` over run-start indices), and a 1-D inverse scatter
+        restores token order.  O(T log T) time and O(T) memory -- the
+        previous one-hot cumsum materialized a ``[T, n_bins]`` int32 buffer,
+        O(T*E) at serving batch sizes -- and bitwise-equal to it, since the
+        stable sort preserves the arrival order the cumsum counted.
         """
-        onehot = jax.nn.one_hot(eid, n_bins, dtype=jnp.int32)  # [T, E]
-        pos = jnp.cumsum(onehot, axis=0) - 1  # position within bin
-        pos = jnp.take_along_axis(pos, eid[:, None], axis=1)[:, 0]
+        t = eid.shape[0]
+        order = jnp.argsort(eid, stable=True)
+        idx = jnp.arange(t, dtype=jnp.int32)
+        sorted_eid = eid[order]
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_eid[1:] != sorted_eid[:-1]]
+        )
+        start = jax.lax.cummax(jnp.where(is_start, idx, 0), axis=0)
+        pos = jnp.zeros((t,), jnp.int32).at[order].set(idx - start)
         return pos, pos < cap
 
     # -- single-device / replicated fallback ----------------------------
@@ -114,12 +171,22 @@ class MoELayer:
     def _dispatch_shard_map(self, params, x, top_p, top_e, mesh) -> jnp.ndarray:
         cfg = self.cfg
         B, S, M = x.shape
-        ep = self.ep_axis
-        nd = mesh.shape[ep]
+        ep = self.ep_axis  # a mesh axis name, or a tuple of them
+        nd = self._ep_size(mesh)
         if cfg.n_experts % nd:
-            return self._dispatch_local(params, x, top_p, top_e)
+            # Silently falling back to the replicated local path here would
+            # quietly drop expert parallelism on a sharded model.
+            raise ValueError(
+                f"n_experts={cfg.n_experts} is not divisible by the "
+                f"expert-parallel degree {nd} (mesh axis {ep!r}); choose "
+                f"n_experts as a multiple of {nd}, or drop ep_axis from the "
+                "mesh to run the replicated local path"
+            )
         e_local = cfg.n_experts // nd
-        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if isinstance(ep, tuple):
+            batch_axes = ep  # tokens sharded over the full exchange mesh
+        else:
+            batch_axes = tuple(a for a in ("pod", ep) if a in mesh.axis_names)
 
         def body(xl, pl, el, w_in, w_gate, w_out):
             # xl: [b, S, M] local batch; experts local: [e_local, M, F_shard].
@@ -199,3 +266,199 @@ class MoELayer:
             out_specs=x_spec,
             check_vma=False,
         )(x, top_p, top_e, params["w_in"], params["w_gate"], params["w_out"])
+
+    # -- node-aware exchange dispatch over the ("pod", "local") mesh -----
+    def _get_dispatcher(self, mesh) -> MoEDispatcher:
+        if self.dispatcher is not None:
+            return self.dispatcher
+        topo = PodTopology(npods=mesh.shape["pod"], ppn=mesh.shape["local"])
+        disp = MoEDispatcher(
+            topo,
+            strategy=self.strategy,
+            wire=self.wire,
+            quantum=self.route_quantum,
+            mesh=mesh,
+        )
+        object.__setattr__(self, "dispatcher", disp)
+        return disp
+
+    def _dispatch_exchange(self, params, x, top_p, top_e, mesh) -> jnp.ndarray:
+        """Capacity dispatch with both hops on the node-aware exchange stack.
+
+        Same routing math as :meth:`_dispatch_shard_map`, restructured into
+        three ``shard_map`` stages with the collectives lifted out between
+        them: the flat ``jax.lax.all_to_all`` calls become planned
+        :class:`~repro.comm.IrregularExchange` hops over the measured
+        (bucketed) routing pattern, so skewed traffic ships only the
+        occupied slot prefix per pair, the advisor can pick the strategy per
+        pattern, and wire codecs apply to the DCI-crossing segments.  The
+        per-pair count matrix is synced to the host each batch (a tiny
+        ``[n, n]`` int32 transfer) -- that measured histogram both keys the
+        bucketer and feeds the dispatcher's load histogram.
+
+        Bitwise identical to the baseline for ``wire="none"``: kept tokens
+        occupy the block prefix (at most the quantized width), and every
+        slot the baseline would carry as dead (zero row / sentinel expert
+        id) is reproduced by the splice maps' sentinel row.
+        """
+        cfg = self.cfg
+        B, S, M = x.shape
+        if tuple(mesh.axis_names) != WORLD_AXES:
+            raise ValueError(
+                f'dispatch="exchange" needs the ("pod", "local") exchange '
+                f"mesh, got axes {tuple(mesh.axis_names)}"
+            )
+        n = mesh.shape["pod"] * mesh.shape["local"]
+        if cfg.n_experts % n:
+            raise ValueError(
+                f"n_experts={cfg.n_experts} is not divisible by the "
+                f"expert-parallel degree {n} (mesh axes {WORLD_AXES!r}); "
+                f"choose n_experts as a multiple of {n}"
+            )
+        if B % n:
+            raise ValueError(
+                f'dispatch="exchange" shards the batch over all {n} ranks; '
+                f"batch {B} is not divisible by {n}"
+            )
+        e_local = cfg.n_experts // n
+        k = cfg.top_k
+        b = B // n
+        t = b * S * k
+        cap = max(int(t / n * cfg.capacity_factor), 8)
+
+        stages = self._exchange_stages(mesh, b, S, M, jnp.dtype(x.dtype))
+        stage_send, stage_expert, stage_combine = stages
+
+        send, send_e, slot, w, counts = stage_send(x, top_p, top_e)
+
+        # host sync on the measured [n, n] histogram: the price of planning
+        # communication for the traffic we actually have
+        step = self._get_dispatcher(mesh).step(
+            np.asarray(jax.device_get(counts), dtype=np.int64), cap, payload_width=M
+        )
+        bundle = step.bundle
+        ex_d, ex_r = step.exchange_dispatch, step.exchange_return
+
+        if ex_d is not None:
+            halo_x = ex_d(send)
+            halo_e = ex_d(send_e)
+        else:
+            halo_x = jnp.zeros((n, 0, M), send.dtype)
+            halo_e = jnp.zeros((n, 0), send_e.dtype)
+        map_d = jnp.asarray(bundle.map_dispatch)
+        map_r = jnp.asarray(bundle.map_return)
+
+        back = stage_expert(
+            send, send_e, halo_x, halo_e, map_d,
+            params["w_in"], params["w_gate"], params["w_out"],
+        )
+
+        if ex_r is not None:
+            halo_b = ex_r(back)
+        else:
+            halo_b = jnp.zeros((n, 0, M), back.dtype)
+
+        return stage_combine(back, halo_b, map_r, slot, w)
+
+    def _exchange_stages(self, mesh, b: int, S: int, M: int, dtype):
+        """Build (once per shape signature) the three jitted shard_map
+        stages of the exchange dispatch.  Re-creating the ``shard_map``
+        callables per batch would re-trace every call; wrapping them in a
+        memoized ``jax.jit`` makes a steady-state batch pure cache hits
+        (the only re-specialization is a halo-width change on re-plan)."""
+        memo = self.__dict__.get("_stage_memo")
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_stage_memo", memo)
+        key = (mesh, b, S, M, str(dtype))
+        if key in memo:
+            return memo[key]
+
+        cfg = self.cfg
+        n = mesh.shape["pod"] * mesh.shape["local"]
+        e_local = cfg.n_experts // n
+        k = cfg.top_k
+        t = b * S * k
+        cap = max(int(t / n * cfg.capacity_factor), 8)
+
+        vec = P(WORLD_AXES, None)
+        mat = P(WORLD_AXES, None, None)
+
+        def stage_send(xl, pl, el):
+            xt = jnp.repeat(xl.reshape(b * S, M), k, axis=0)  # [t, M]
+            eid = el.reshape(t)
+            w = pl.reshape(t).astype(xl.dtype)
+            dst = eid // e_local
+            pos, keep = self._fill_capacity(dst, n, cap)
+            slot = jnp.where(keep, dst * cap + pos, n * cap)
+            inv = jnp.full((n * cap + 1,), t, jnp.int32).at[slot].set(
+                jnp.arange(t, dtype=jnp.int32)
+            )[:-1]
+            xt_pad = jnp.concatenate([xt, jnp.zeros((1, M), xl.dtype)])
+            send = xt_pad[inv]
+            send_e = jnp.concatenate(
+                [eid % e_local, jnp.full((1,), e_local, jnp.int32)]
+            )[inv]
+            counts = jnp.zeros((n,), jnp.int32).at[dst].add(1)
+            return send[None], send_e[None], slot[None], w[None], counts[None]
+
+        def stage_expert(sd, se, hx, he, mp, w_in, w_gate, w_out):
+            sd, se, hx, he, mp = sd[0], se[0], hx[0], he[0], mp[0]
+            # splice canonical exchange recv back into the [n*cap] layout;
+            # the sentinel row reproduces the baseline's dead slots exactly
+            comb_x = jnp.concatenate([sd, hx, jnp.zeros((1, M), sd.dtype)])
+            comb_e = jnp.concatenate(
+                [se, he, jnp.full((1,), e_local, jnp.int32)]
+            )
+            recv = comb_x[mp]
+            recv_e = comb_e[mp]
+            cap2 = max(int(n * cap / e_local), 1)
+            bin_id = jnp.minimum(recv_e, e_local)
+            pos2, keep2 = self._fill_capacity(bin_id, e_local + 1, cap2)
+            keep2 &= recv_e < e_local
+            slot2 = jnp.where(keep2, bin_id * cap2 + pos2, e_local * cap2)
+            inv2 = jnp.full((e_local * cap2 + 1,), n * cap, jnp.int32).at[
+                slot2
+            ].set(jnp.arange(n * cap, dtype=jnp.int32))[:-1]
+            recv_pad = jnp.concatenate([recv, jnp.zeros((1, M), sd.dtype)])
+            buf = recv_pad[inv2]
+            ye = self._expert_ffn(
+                w_in, w_gate, w_out, buf.reshape(e_local, cap2, M)
+            ).reshape(e_local * cap2, M)
+            back = jnp.concatenate([ye, jnp.zeros((1, M), ye.dtype)])[slot2]
+            return back[None]
+
+        def stage_combine(bk, hb, mp, sl, wl):
+            bk, hb, mp, sl, wl = bk[0], hb[0], mp[0], sl[0], wl[0]
+            comb = jnp.concatenate([bk, hb, jnp.zeros((1, M), bk.dtype)])
+            ret = comb[mp]
+            yt = jnp.concatenate([ret, jnp.zeros((1, M), ret.dtype)])[sl]
+            yt = yt * wl[:, None]
+            out = yt.reshape(b * S, k, M).sum(1).reshape(b, S, M)
+            return out.astype(dtype)
+
+        fns = (
+            jax.jit(shard_map(
+                stage_send,
+                mesh=mesh,
+                in_specs=(mat, mat, mat),
+                out_specs=(mat, vec, vec, vec, vec),
+                check_vma=False,
+            )),
+            jax.jit(shard_map(
+                stage_expert,
+                mesh=mesh,
+                in_specs=(mat, vec, mat, vec, vec, mat, mat, mat),
+                out_specs=mat,
+                check_vma=False,
+            )),
+            jax.jit(shard_map(
+                stage_combine,
+                mesh=mesh,
+                in_specs=(mat, mat, vec, vec, vec),
+                out_specs=mat,
+                check_vma=False,
+            )),
+        )
+        memo[key] = fns
+        return fns

@@ -69,6 +69,7 @@ def test_record_never_written_by_failing_or_partial_runs(tmp_path):
         "three_step",
         "split",
     }
+    assert written["moe_dispatch"]["hit_rate"] >= 0.9
 
 
 @pytest.mark.slow
@@ -107,10 +108,15 @@ def test_benchmarks_run_smoke():
         "wire/2p/two_step/bf16",
         "wire/2p/split/int8",
         "planning/8r/",  # planning
+        "fingerprint/8r",  # planning: plan-cache key micro-benchmark
         "kernel/spmm_ell/interpret/k4",  # kernels
         "chaos/two_step/bf16",  # chaos: recovery ladder sweep
         "chaos/split/bf16",
         "chaosverify/two_step/bf16",  # chaos: verify-mode overhead
+        "moestats/8r/uniform",  # moe_dispatch: routing economics
+        "moe/8r/uniform/all_to_all/none",  # moe_dispatch: baseline column
+        "moe/8r/skewed/two_step/bf16",  # moe_dispatch: strategy x codec
+        "moeplan/8r/skewed",  # moe_dispatch: plan-cache behaviour
     ):
         assert marker in out, f"missing benchmark row {marker!r}\n{out[-4000:]}"
 
@@ -159,10 +165,32 @@ def test_benchmarks_run_smoke():
         assert got == want and int(want) > 0, (strat, codec, got, want)
     assert re.search(r"chaosverify/\w+/\w+,.*parity=ok", out)
 
+    # the MoE dispatch sweep's acceptance properties in miniature: every
+    # measured (strategy, codec) row passed its parity check against the
+    # all-to-all baseline, and the jittering skewed load held the plan
+    # caches at >= 90% hits (the tentpole's bucketing acceptance number)
+    moe_rows = re.findall(r"moe/8r/(\w+)/(\w+)/(\w+),.*parity=ok", out)
+    assert len(moe_rows) >= 10, f"missing moe rows\n{out[-2000:]}"
+    m = re.search(
+        r"moeplan/8r/skewed,.*bucket_hit_rate=([0-9.]+) exchange_hit_rate=([0-9.]+)",
+        out,
+    )
+    assert m, f"moeplan row unparsable\n{out[-2000:]}"
+    assert float(m.group(1)) >= 0.9 and float(m.group(2)) >= 0.9, m.group(0)
+
+    # the fingerprint micro-benchmark's acceptance property: the bytes-hash
+    # plan-cache key beats the string-join it replaced (the margin is ~2-3x,
+    # so best-of-N timing keeps this noise-safe), and memoized re-reads are
+    # sub-microsecond
+    m = re.search(r"fingerprint/8r,.*strjoin_us=[0-9.]+ speedup=([0-9.]+)x memo_ns=(\d+)", out)
+    assert m, f"fingerprint row unparsable\n{out[-2000:]}"
+    assert float(m.group(1)) > 1.0, f"fingerprint slower than strjoin: {m.group(0)}"
+    assert int(m.group(2)) < 1000, m.group(0)
+
     # machine-readable record: schema, per-section timings, wire counters
     with open(BENCH_JSON) as f:
         report = json.load(f)
-    assert report["schema"] == 2
+    assert report["schema"] == 3
     assert report["smoke"] is True
     assert report["failures"] == []
     for name, sec in report["sections"].items():
@@ -195,3 +223,16 @@ def test_benchmarks_run_smoke():
             tally["retry"] + tally["demote"] + tally["readvise"] + tally["clean_pass"]
             == tally["recovered"]
         ), (key, tally)
+
+    # schema 3: MoE routing counters -- the simulated plan-cache hit rate
+    # holds the >= 90% acceptance bar, and the bucketed dispatch pattern
+    # never ships more bytes than the uniform all-to-all it replaces
+    moe = report["moe_dispatch"]
+    assert moe["hit_rate"] >= 0.9, moe
+    assert moe["replans"] >= 1 and moe["batches"] > moe["replans"], moe
+    assert set(moe["strategies"]) == {"standard", "two_step", "three_step", "split"}
+    for strat, per in moe["strategies"].items():
+        uni, buck = per["uniform"], per["bucketed"]
+        assert buck["inter_pod_bytes"] <= uni["inter_pod_bytes"], (strat, per)
+        assert buck["intra_pod_bytes"] <= uni["intra_pod_bytes"], (strat, per)
+        assert buck["inter_pod_bytes"] > 0, (strat, per)

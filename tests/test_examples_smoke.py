@@ -21,7 +21,8 @@ ARGS = {
     "krylov_solve.py": [],
     "quickstart.py": [],
     "strategy_advisor.py": ["--messages", "32", "--nodes", "4", "--payload-width", "8"],
-    "serve_lm.py": ["--batch", "1", "--prompt-len", "8", "--gen", "3"],
+    "serve_lm.py": ["--arch", "deepseek-v2-lite-16b", "--batch", "1",
+                    "--prompt-len", "8", "--gen", "3", "--advise-dispatch"],
     "train_lm.py": ["--steps", "2", "--ckpt", "/tmp/repro_examples_smoke_ckpt"],
 }
 
@@ -30,7 +31,7 @@ EXPECT = {
     "krylov_solve.py": "int8-compressed inter-pod reductions",
     "quickstart.py": "split",  # strategy table printed after execution
     "strategy_advisor.py": "best strategy",
-    "serve_lm.py": "decode",
+    "serve_lm.py": "dispatch advice",
     "train_lm.py": "loss:",
 }
 

@@ -1,0 +1,447 @@
+"""MoE dispatch through the exchange stack: routing patterns, bucketing,
+fingerprint fast path, capacity fill, and 8-device parity with the flat
+all-to-all baseline."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.comm import (
+    ExchangePattern,
+    Need,
+    PodTopology,
+    block_pattern,
+    quantize_widths,
+    random_pattern,
+)
+from repro.core import CommPattern, Message, dispatch_stats
+from repro.models import ExpertLoadHistogram, RoutingBucketer, recv_maps
+
+TOPO = PodTopology(npods=2, ppn=2)
+N = TOPO.nranks
+
+
+def _counts(seed=0, lo=0, hi=12):
+    return np.random.default_rng(seed).integers(lo, hi, size=(N, N))
+
+
+# ---------------------------------------------------------------------------
+# block_pattern / quantize_widths
+# ---------------------------------------------------------------------------
+
+
+def test_block_pattern_full_widths_is_dense_all_to_all():
+    block = 4
+    pat = block_pattern(TOPO, block)
+    assert pat.local_size == N * block
+    # every off-diagonal pair ships its full destination block
+    assert len(pat.needs) == N * (N - 1)
+    for n in pat.needs:
+        assert n.idx == tuple(range(n.dst * block, (n.dst + 1) * block))
+    # every rank receives (N-1) * block elements
+    assert pat.max_recv_size() == (N - 1) * block
+
+
+def test_block_pattern_widths_ship_only_the_prefix():
+    block = 8
+    w = quantize_widths(_counts(), 4, block)
+    pat = block_pattern(TOPO, block, w)
+    for n in pat.needs:
+        k = int(w[n.src, n.dst])
+        assert k > 0
+        assert n.idx == tuple(range(n.dst * block, n.dst * block + k))
+    # zero-width pairs drop out of the pattern entirely
+    pairs = {(n.src, n.dst) for n in pat.needs}
+    for s in range(N):
+        for d in range(N):
+            if s != d and w[s, d] == 0:
+                assert (s, d) not in pairs
+
+
+def test_block_pattern_validation():
+    with pytest.raises(ValueError, match="widths must be"):
+        block_pattern(TOPO, 4, np.zeros((N, N + 1), int))
+    bad = np.zeros((N, N), int)
+    bad[0, 1] = 5
+    with pytest.raises(ValueError, match="lie in"):
+        block_pattern(TOPO, 4, bad)
+    with pytest.raises(ValueError, match="lie in"):
+        block_pattern(TOPO, 4, -np.ones((N, N), int))
+
+
+def test_quantize_widths_rounds_up_and_clips():
+    counts = np.array([[0, 1, 8, 9], [15, 16, 17, 100], [0, 0, 0, 0], [3, 7, 8, 12]])
+    q = quantize_widths(counts, 8, 16)
+    assert (q == np.array([[0, 8, 8, 16], [16, 16, 16, 16], [0, 0, 0, 0], [8, 8, 8, 16]])).all()
+    # zero stays zero, quantum 1 is the identity (after the cap clip)
+    assert (quantize_widths(counts, 1, 16) == np.minimum(counts, 16)).all()
+    with pytest.raises(ValueError, match="quantum"):
+        quantize_widths(counts, 0, 16)
+    with pytest.raises(ValueError, match="non-negative"):
+        quantize_widths(-counts, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint fast path (bugfix satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_equal_patterns_collide():
+    rng = np.random.default_rng(3)
+    a = random_pattern(rng, TOPO, local_size=6)
+    b = ExchangePattern(topo=a.topo, local_size=a.local_size, needs=a.needs)
+    assert a is not b and a.fingerprint() == b.fingerprint()
+
+
+def test_fingerprint_permuted_needs_same_digest():
+    rng = np.random.default_rng(4)
+    a = random_pattern(rng, TOPO, local_size=6, p_connect=1.0)
+    perm = tuple(reversed(a.needs))
+    b = ExchangePattern(topo=a.topo, local_size=a.local_size, needs=perm)
+    assert a.needs != b.needs
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_fingerprint_distinguishes_patterns():
+    base = block_pattern(TOPO, 4)
+    w = np.full((N, N), 4)
+    w[0, 1] = 3
+    assert base.fingerprint() != block_pattern(TOPO, 4, w).fingerprint()
+    # topology changes the digest even for identical needs
+    flat = PodTopology(npods=1, ppn=N)
+    moved = ExchangePattern(topo=flat, local_size=base.local_size, needs=base.needs)
+    assert base.fingerprint() != moved.fingerprint()
+
+
+def test_fingerprint_memoized_on_instance():
+    pat = block_pattern(TOPO, 4)
+    assert pat.fingerprint() is pat.fingerprint()
+    # a fresh copy re-hashes to the same digest (memo is per instance)
+    fresh = dataclasses.replace(pat)
+    assert fresh.fingerprint() == pat.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# recv_maps
+# ---------------------------------------------------------------------------
+
+
+def test_recv_maps_match_canonical_layout():
+    block = 8
+    w = quantize_widths(_counts(seed=1), 4, block)
+    np.fill_diagonal(w, 0)
+    pat = block_pattern(TOPO, block, w)
+    maps, H = recv_maps(TOPO, block, w)
+    assert H == pat.max_recv_size()
+    rows = pat.canonical_code_rows()
+    for r in range(N):
+        off = 0
+        for s in range(N):
+            base = s * block
+            if s == r:  # own block reads the local send buffer in place
+                assert (maps[r, base : base + block] == np.arange(base, base + block)).all()
+                continue
+            k = int(w[s, r])
+            for j in range(k):
+                # halo index points at the canonical slot holding exactly
+                # the element the tiled all-to-all would deliver there
+                assert maps[r, base + j] == N * block + off + j
+                assert rows[r][off + j] == s * pat.local_size + r * block + j
+            # unshipped suffix -> sentinel row
+            assert (maps[r, base + k : base + block] == N * block + H).all()
+            off += k
+
+
+def test_recv_maps_validation():
+    with pytest.raises(ValueError, match="widths must be"):
+        recv_maps(TOPO, 4, np.zeros((N, N + 1), int))
+    with pytest.raises(ValueError, match="lie in"):
+        recv_maps(TOPO, 4, np.full((N, N), 5))
+
+
+# ---------------------------------------------------------------------------
+# RoutingBucketer: high-water plan reuse
+# ---------------------------------------------------------------------------
+
+
+def test_bucketer_reuses_bundle_under_shrink_and_jitter():
+    b = RoutingBucketer(TOPO, block=16, quantum=8)
+    counts = _counts(seed=2, lo=4, hi=12)
+    bun1, rp1 = b.step(counts)
+    assert rp1 and b.replans == 1
+    # shrink and small jitter stay under the high-water mark -> same object
+    bun2, rp2 = b.step(np.maximum(counts - 3, 0))
+    bun3, rp3 = b.step(counts)
+    assert bun2 is bun1 and bun3 is bun1
+    assert not rp2 and not rp3
+    assert b.replans == 1 and b.steps == 3
+    assert b.hit_rate == pytest.approx(2 / 3)
+
+
+def test_bucketer_growth_is_one_incremental_replan():
+    b = RoutingBucketer(TOPO, block=16, quantum=8)
+    counts = _counts(seed=2, lo=4, hi=12)
+    bun1, _ = b.step(counts)
+    grown, rp = b.step(counts + 9)  # crosses a quantum boundary somewhere
+    assert rp and grown is not bun1
+    # the new widths are the union (elementwise max) of what was seen
+    assert (grown.widths >= bun1.widths).all()
+    # and the grown bundle now absorbs both traffic levels
+    again, rp2 = b.step(counts)
+    assert again is grown and not rp2
+
+
+def test_bucketer_bundle_patterns_are_consistent():
+    b = RoutingBucketer(TOPO, block=16, quantum=8)
+    bun, _ = b.step(_counts(seed=5, lo=0, hi=20))
+    assert bun.pattern_dispatch.max_recv_size() == bun.halo_dispatch
+    assert bun.pattern_return.max_recv_size() == bun.halo_return
+    # return hop ships the transposed widths
+    w = bun.widths
+    ret_pairs = {(n.src, n.dst): len(n.idx) for n in bun.pattern_return.needs}
+    for s in range(N):
+        for d in range(N):
+            if s != d and w[s, d]:
+                assert ret_pairs[(d, s)] == w[s, d]
+
+
+# ---------------------------------------------------------------------------
+# dispatch_stats: histogram -> Table 7 statistics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dispatch_stats_matches_comm_pattern_stats(seed):
+    block = 16
+    w = quantize_widths(_counts(seed=seed, lo=0, hi=14), 4, block)
+    np.fill_diagonal(w, 0)
+    ref = block_pattern(TOPO, block, w).to_comm_pattern(elem_bytes=4).stats()
+    got = dispatch_stats(w, TOPO.ppn, elem_bytes=4)
+    assert got == ref
+
+
+def test_dispatch_stats_scales_with_elem_bytes():
+    w = quantize_widths(_counts(seed=7), 4, 16)
+    np.fill_diagonal(w, 0)
+    s4 = dispatch_stats(w, TOPO.ppn, elem_bytes=4)
+    s8 = dispatch_stats(w, TOPO.ppn, elem_bytes=8)
+    assert s8.s_proc == 2 * s4.s_proc and s8.s_node == 2 * s4.s_node
+    assert s8.m_proc == s4.m_proc  # message counts don't scale with bytes
+
+
+# ---------------------------------------------------------------------------
+# ExpertLoadHistogram
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_ema_and_advice():
+    h = ExpertLoadHistogram(N, decay=0.5)
+    a = np.full((N, N), 8.0)
+    b = np.zeros((N, N))
+    h.update(a)
+    assert (h.counts == a).all()  # first update seeds the EMA
+    h.update(b)
+    assert (h.counts == 4.0).all()
+    adv = h.advise(ppn=TOPO.ppn, payload_width=64, machine="lassen")
+    assert adv.best.predicted_time <= adv.ranked[-1].predicted_time
+    with pytest.raises(ValueError, match="counts must be"):
+        h.update(np.zeros((N, N + 1)))
+    with pytest.raises(ValueError, match="decay"):
+        ExpertLoadHistogram(N, decay=1.0)
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess tests
+# ---------------------------------------------------------------------------
+
+_SETUP_8DEV = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.comm import PodTopology, make_exchange_mesh, cache_stats, clear_caches
+from repro.configs.base import MoEConfig
+from repro.models.moe import MoELayer
+
+topo = PodTopology(npods=2, ppn=4)
+mesh = make_exchange_mesh(topo)
+cfg = MoEConfig(n_experts=16, top_k=2, d_ff_expert=32)
+M = 16
+B, S = 8, 16
+rng = np.random.default_rng(0)
+
+def make_params(scale=2.0):
+    return {
+        "router": jnp.asarray(rng.standard_normal((M, cfg.n_experts)) * scale, jnp.float32),
+        "w_in": jnp.asarray(rng.standard_normal((cfg.n_experts, M, cfg.d_ff_expert)) * 0.1, jnp.float32),
+        "w_gate": jnp.asarray(rng.standard_normal((cfg.n_experts, M, cfg.d_ff_expert)) * 0.1, jnp.float32),
+        "w_out": jnp.asarray(rng.standard_normal((cfg.n_experts, cfg.d_ff_expert, M)) * 0.1, jnp.float32),
+    }
+"""
+
+
+@pytest.mark.slow
+def test_exchange_dispatch_parity_all_strategies(subproc):
+    """dispatch="exchange" is bitwise identical to the flat all-to-all
+    baseline on 8 devices, for every strategy, uniform and skewed routing."""
+    subproc(
+        _SETUP_8DEV
+        + """
+params = make_params()
+inputs = {
+    "uniform": jnp.asarray(rng.standard_normal((B, S, M)), jnp.float32),
+    # a constant bias skews the router's top-k towards a few experts
+    "skewed": jnp.asarray(
+        rng.standard_normal((B, S, M)) * 0.3 + rng.standard_normal(M), jnp.float32
+    ),
+}
+base = MoELayer(M, cfg, ep_axis=("pod", "local"))
+for name, x in inputs.items():
+    y0 = np.asarray(base(params, x, mesh))
+    assert np.isfinite(y0).all()
+    for strat in ("standard", "two_step", "three_step", "split", "auto"):
+        layer = MoELayer(M, cfg, dispatch="exchange", strategy=strat)
+        y1 = np.asarray(layer(params, x, mesh))
+        assert np.array_equal(y0, y1), (name, strat)
+        # the dispatcher measured real traffic
+        assert layer.dispatcher.histogram.updates == 1
+print("PARITY", "OK")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_divisibility_error_and_valid_path(subproc):
+    """Non-divisible expert counts raise instead of silently dropping
+    expert parallelism; divisible counts run sharded."""
+    subproc(
+        _SETUP_8DEV
+        + """
+x = jnp.asarray(rng.standard_normal((B, S, M)), jnp.float32)
+
+# baseline path: 12 experts on 8 shards must raise, not fall back
+bad = MoEConfig(n_experts=12, top_k=2, d_ff_expert=32)
+params_bad = {
+    "router": jnp.zeros((M, 12), jnp.float32),
+    "w_in": jnp.zeros((12, M, 32), jnp.float32),
+    "w_gate": jnp.zeros((12, M, 32), jnp.float32),
+    "w_out": jnp.zeros((12, 32, M), jnp.float32),
+}
+try:
+    MoELayer(M, bad, ep_axis=("pod", "local"))(params_bad, x, mesh)
+    raise SystemExit("baseline: expected ValueError")
+except ValueError as e:
+    assert "divisible" in str(e) and "12" in str(e), e
+
+# exchange path raises the same contract
+try:
+    MoELayer(M, bad, dispatch="exchange")(params_bad, x, mesh)
+    raise SystemExit("exchange: expected ValueError")
+except ValueError as e:
+    assert "divisible" in str(e), e
+
+# batch must cover all ranks on the exchange path
+try:
+    MoELayer(M, cfg, dispatch="exchange")(
+        make_params(), x[:4], mesh
+    )
+    raise SystemExit("expected batch ValueError")
+except ValueError as e:
+    assert "batch" in str(e), e
+
+# the valid-divisor path actually shards: 16 experts over 8 ranks works
+y = MoELayer(M, cfg, ep_axis=("pod", "local"))(make_params(), x, mesh)
+assert y.shape == (B, S, M) and np.isfinite(np.asarray(y)).all()
+print("ERRORS", "OK")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_bucketed_plan_cache_hit_rate(subproc):
+    """Pinned cache accounting: a saturating uniform load pays exactly ONE
+    plan miss across N batches (dispatch and return patterns coincide), and
+    a skewed jittering load stays >= 90% exchange-cache hits."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import PodTopology, cache_stats, clear_caches
+from repro.models import MoEDispatcher
+
+topo = PodTopology(npods=2, ppn=4)
+n = topo.nranks
+block = 32
+N_BATCH = 12
+
+# -- uniform saturating counts: widths == block everywhere, symmetric, so
+#    dispatch and return share ONE pattern -> exactly one plan miss total
+clear_caches()
+disp = MoEDispatcher(topo, strategy="two_step", quantum=8)
+full = np.full((n, n), 2 * block, np.int64)
+np.fill_diagonal(full, 0)
+for _ in range(N_BATCH):
+    disp.step(full, block)
+st = cache_stats()
+assert disp.bucketer(block).replans == 1, disp.bucketer(block).replans
+assert st.plan_misses == 1, st
+assert st.exchange_misses == 1, st
+assert st.exchange_hits == 2 * N_BATCH - 1, st
+
+# -- skewed stationary traffic with jitter: quantization absorbs the noise
+clear_caches()
+disp = MoEDispatcher(topo, strategy="two_step", quantum=8)
+rng = np.random.default_rng(0)
+base = np.zeros((n, n), np.int64)
+base[:, :3] = 20  # hot experts on ranks 0..2
+np.fill_diagonal(base, 0)
+for _ in range(N_BATCH):
+    jitter = rng.integers(-3, 4, size=(n, n)) * (base > 0)
+    disp.step(base + jitter, block)
+st = cache_stats()
+buck = disp.bucketer(block)
+assert buck.replans == 1, buck.replans
+assert buck.hit_rate >= 0.9, buck.hit_rate
+# asymmetric widths: dispatch and return are distinct patterns
+assert st.exchange_misses == 2, st
+assert st.exchange_hits == 2 * (N_BATCH - 1), st
+rate = st.exchange_hits / (st.exchange_hits + st.exchange_misses)
+assert rate >= 0.9, rate
+print("CACHE", "OK")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_exchange_dispatch_end_to_end_cache_stability(subproc):
+    """Model-level: repeated batches over the same routing distribution pay
+    planning once; the wire codec path runs and stays close to baseline."""
+    subproc(
+        _SETUP_8DEV
+        + """
+params = make_params()
+x = jnp.asarray(rng.standard_normal((B, S, M)), jnp.float32)
+clear_caches()
+layer = MoELayer(M, cfg, dispatch="exchange", strategy="three_step")
+for i in range(5):
+    y = layer(params, x, mesh)
+    if i == 0:
+        first = cache_stats()
+st = cache_stats()
+# all planning happened on batch 1; batches 2..5 are pure cache hits
+assert st.plan_misses == first.plan_misses, (first, st)
+assert st.exchange_misses == first.exchange_misses, (first, st)
+assert st.exchange_hits > first.exchange_hits
+
+# lossy wire codec: runs end-to-end, close to the full-precision output
+y0 = np.asarray(MoELayer(M, cfg, ep_axis=("pod", "local"))(params, x, mesh))
+yw = np.asarray(
+    MoELayer(M, cfg, dispatch="exchange", strategy="two_step", wire="bf16")(
+        params, x, mesh
+    )
+)
+assert np.allclose(y0, yw, rtol=0.05, atol=0.05), np.abs(y0 - yw).max()
+print("E2E", "OK")
+""",
+        devices=8,
+    )
