@@ -1,0 +1,149 @@
+"""Serving front-end sweep: arrival pattern x batch window x strategy.
+
+Two views of the continuous batcher (``repro.serving``):
+
+* **simulated sweep** (in-process, jax-free, deterministic) -- the seeded
+  virtual-clock simulator replays one fixed skewed-fingerprint trace under
+  every (arrival pattern, coalescing window, strategy) cell and reports
+  p50/p99 latency, throughput, realized batch width, and the speedup over
+  the sequential per-request baseline on the same trace.  Service times
+  come from the advisor's performance model, so rows are bit-reproducible
+  and the acceptance number (>= 3x at k=8 on the burst trace) is a stable
+  regression pin, not a wall-clock measurement.
+* **measured replay** (8-device subprocess) -- the executor drains the
+  same coalescing decision through real ``DistributedSpMV.matmat`` calls:
+  ``n`` right-hand sides dispatched as width-``k`` fused SpMM batches vs.
+  one-by-one, with a numerical parity check between the two paths.  Host
+  CPU devices don't reproduce DCI latency, so the measured speedup bounds
+  dispatch overhead; the simulated rows carry the topology story.
+
+``main(smoke=True)`` shrinks both sweeps so ``benchmarks/run.py --smoke``
+keeps the section alive in tier-1.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_with_devices
+
+#: the fixed reference serving workload (shared with benchmarks/run.py's
+#: schema-4 ``serving`` record): 4 fingerprint classes on a 2x4 topology,
+#: Zipf-skewed popularity, seed 7
+TRACE_SEED = 7
+N_REQUESTS = 256
+
+
+def reference_classes():
+    import numpy as np
+
+    from repro.comm import PodTopology, random_pattern
+    from repro.serving import WorkloadClass
+
+    topo = PodTopology(npods=2, ppn=4)
+    out = {}
+    for i in range(4):
+        pat = random_pattern(
+            np.random.default_rng(100 + i), topo, local_size=32, max_elems=4
+        )
+        out[f"c{i}"] = WorkloadClass.from_pattern(pat, fp=f"c{i}")
+    return out
+
+
+def reference_trace(pattern: str = "burst", n: int = N_REQUESTS):
+    from repro.testing import make_trace
+
+    return make_trace(
+        TRACE_SEED, n, [f"c{i}" for i in range(4)],
+        pattern=pattern, rate=200000.0, skew=1.2, burst=32,
+    )
+
+
+def reference_report(n: int = N_REQUESTS) -> dict:
+    """The acceptance-criterion cell: burst trace, k<=8, 1 ms window."""
+    from repro.serving import SimConfig, serving_report
+
+    return serving_report(
+        reference_classes(), reference_trace("burst", n),
+        SimConfig(window=1e-3, max_width=8),
+    )
+
+
+def _sim_rows(smoke: bool) -> None:
+    from repro.serving import SimConfig, sequential_baseline, simulate
+
+    classes = reference_classes()
+    patterns = ("burst", "poisson") if smoke else ("burst", "poisson", "uniform")
+    windows = (0.0, 1e-3) if smoke else (0.0, 5e-4, 1e-3, 2e-3)
+    strategies = (None, "two_step") if smoke else (
+        None, "standard", "two_step", "three_step", "split"
+    )
+    n = 128 if smoke else N_REQUESTS
+    for pattern in patterns:
+        trace = reference_trace(pattern, n)
+        seq = sequential_baseline(classes, trace, SimConfig(max_width=8))
+        for window in windows:
+            for strategy in strategies:
+                cfg = SimConfig(window=window, max_width=8, strategy=strategy)
+                res = simulate(classes, trace, cfg)
+                label = strategy or "auto"
+                speedup = (
+                    res.throughput / seq.throughput if seq.throughput else 0.0
+                )
+                print(
+                    f"serving/{pattern}/w{int(window * 1e6)}us/{label},"
+                    f"{res.p50 * 1e6:.1f},"
+                    f"p99_us={res.p99 * 1e6:.1f} "
+                    f"thr_rps={res.throughput:.0f} "
+                    f"width={res.mean_width:.2f} "
+                    f"batches={res.batches} "
+                    f"speedup={speedup:.2f}x"
+                )
+
+
+REPLAY_CODE = """
+import numpy as np
+from repro.comm import PodTopology
+from repro.serving import measure_spmv_replay
+from repro.sparse import build, thermal_like
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+A = thermal_like(N_SIZE, rng)
+sp = build(A, topo, strategy="auto", payload_width=WIDTH, use_pallas=False)
+rep = measure_spmv_replay(sp, N_REQ, WIDTH, rng, repeats=REPEATS)
+assert rep["parity"] <= 1e-4, rep  # coalesced == sequential results
+print(
+    f"RESULT,serving/replay/{topo.nranks}r/k{WIDTH},"
+    f"{rep['coalesced_s'] * 1e6:.1f},"
+    f"seq_us={rep['sequential_s'] * 1e6:.1f} "
+    f"speedup={rep['speedup']:.2f}x parity=ok n={N_REQ}"
+)
+"""
+
+
+def main(smoke: bool = False) -> None:
+    print("name,us_per_call,derived")
+    _sim_rows(smoke)
+    rep = reference_report(128 if smoke else N_REQUESTS)
+    co = rep["coalesced"]
+    print(
+        f"serving/acceptance/burst/k8,{co['p50_s'] * 1e6:.1f},"
+        f"p99_us={co['p99_s'] * 1e6:.1f} thr_rps={co['throughput_rps']:.0f} "
+        f"speedup={rep['speedup']:.2f}x trace_hash={rep['trace_hash'][:12]}"
+    )
+    n_size, n_req, width, repeats = (
+        (64, 8, 4, 1) if smoke else (256, 32, 8, 3)
+    )
+    out = run_with_devices(
+        f"N_SIZE = {n_size}\nN_REQ = {n_req}\nWIDTH = {width}\n"
+        f"REPEATS = {repeats}\n" + REPLAY_CODE,
+        devices=8,
+    )
+    for line in out.splitlines():
+        if line.startswith("RESULT,"):
+            print(line[len("RESULT,"):])
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -18,6 +18,9 @@ Sections:
   chaos       -- fault-injection recovery rate + verify-mode overhead
   moe_dispatch -- MoE token dispatch via the exchange stack (strategy x
                   codec x skew vs the all-to-all baseline, + plan cache)
+  serving     -- multi-tenant continuous batching (arrival pattern x
+                 coalescing window x strategy, p50/p99 + throughput, plus
+                 a real fused-SpMM replay with parity)
 
 ``--smoke`` runs every requested section in a reduced configuration (fewer
 matrices/iterations/devices).  It exists so a tier-1 test can execute the
@@ -33,9 +36,11 @@ counters of a fixed reference exchange (the numbers
 chaos-recovery tally (schema 2: which ladder rung cured each seeded fault
 scenario, per strategy x codec) and the MoE-dispatch routing counters
 (schema 3: bucketed vs uniform plan bytes per strategy, plus the
-simulated plan-cache hit rate for a jittering skewed load) -- so the perf
-trajectory is trackable across PRs; schema pinned by
-``tests/test_benchmarks_smoke.py``.
+simulated plan-cache hit rate for a jittering skewed load) and the
+serving record (schema 4: coalesced vs sequential p50/p99/throughput and
+the >= 3x acceptance speedup on the fixed skewed burst trace, with the
+deterministic simulator's trace hash) -- so the perf trajectory is
+trackable across PRs; schema pinned by ``tests/test_benchmarks_smoke.py``.
 """
 
 from __future__ import annotations
@@ -47,7 +52,7 @@ import time
 import traceback
 
 #: bump when the JSON layout changes (tests pin it)
-BENCH_SCHEMA = 3
+BENCH_SCHEMA = 4
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_exchange.json")
 
 
@@ -145,6 +150,30 @@ def _moe_dispatch_counters() -> dict:
     return out
 
 
+def _serving_counters() -> dict:
+    """Continuous-batching acceptance record (schema 4).
+
+    Deterministic and jax-free: the virtual-clock simulator replays the
+    fixed skewed burst trace coalesced (k <= 8) and sequentially, with
+    service times from the advisor's model.  ``speedup`` is the acceptance
+    criterion (>= 3x); ``trace_hash`` pins that the scheduler made the
+    same decisions as the committed record -- any diff here is a scheduler
+    behavior change, surfaced before any test names it.
+    """
+    from benchmarks.bench_serving import reference_report
+
+    rep = reference_report()
+    co, sq = rep["coalesced"], rep["sequential"]
+    return {
+        "speedup": round(rep["speedup"], 4),
+        "max_width": rep["max_width"],
+        "window_s": rep["window_s"],
+        "trace_hash": rep["trace_hash"],
+        "coalesced": {k: round(v, 9) for k, v in co.items()},
+        "sequential": {k: round(v, 9) for k, v in sq.items()},
+    }
+
+
 def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JSON) -> bool:
     """Write the tracked record iff this was a FULL, PASSING run.
 
@@ -165,6 +194,7 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
     report["wire_bytes"] = _wire_byte_counters()
     report["chaos_recovery"] = _chaos_counters()
     report["moe_dispatch"] = _moe_dispatch_counters()
+    report["serving"] = _serving_counters()
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -183,6 +213,7 @@ def main() -> None:
         bench_params,
         bench_planning,
         bench_roofline,
+        bench_serving,
         bench_solver,
         bench_spmv,
         bench_wire,
@@ -201,6 +232,7 @@ def main() -> None:
         "roofline": bench_roofline.main,
         "chaos": bench_chaos.main,
         "moe_dispatch": bench_moe_dispatch.main,
+        "serving": bench_serving.main,
     }
     args = sys.argv[1:]
     smoke = "--smoke" in args

@@ -371,6 +371,16 @@ class CacheStats:
     #: (:func:`exchange_for`); a hit means zero planning work for the batch
     exchange_hits: int = 0
     exchange_misses: int = 0
+    #: LRU evictions per cache -- the serving layer's memory-pressure signal
+    #: (a multi-tenant fingerprint universe larger than the cache capacity
+    #: shows up here, not as silent recompiles).  Consistency invariant for
+    #: any cache whose capacity never shrank mid-run:
+    #: ``evictions == misses - live_entries`` (see :func:`cache_sizes`).
+    plan_evictions: int = 0
+    exec_evictions: int = 0
+    split_evictions: int = 0
+    exchange_evictions: int = 0
+    compute_evictions: int = 0
 
 
 _stats = CacheStats()
@@ -393,6 +403,53 @@ def cache_stats() -> CacheStats:
     return dataclasses.replace(_stats)
 
 
+def cache_sizes() -> Dict[str, int]:
+    """Live entry counts per module cache (the denominator the eviction
+    counters are consistent against; see :class:`CacheStats`)."""
+    return {
+        "plan": len(_PLAN_CACHE),
+        "exec": len(_EXEC_CACHE),
+        "split": len(_SPLIT_CACHE),
+        "exchange": len(_EXCHANGE_CACHE),
+        "external": sum(len(c) for c in _EXTERNAL_CACHES),
+    }
+
+
+def set_cache_limits(
+    plan: Optional[int] = None,
+    exec_: Optional[int] = None,
+    exchange: Optional[int] = None,
+) -> Dict[str, int]:
+    """Resize the module LRU capacities, trimming oldest-first immediately.
+
+    The serving layer's memory budget maps onto these caps: a multi-tenant
+    front-end that must bound resident plan/executor state calls this with
+    its budget-derived entry counts, and the trims land in the eviction
+    counters like any organic pressure.  ``None`` leaves a cap unchanged;
+    the split-phase cache shares ``plan``'s cap by design (one decomposition
+    per resident pattern).  Returns the caps now in force.
+    """
+    global PLAN_CACHE_MAX, EXEC_CACHE_MAX, EXCHANGE_CACHE_MAX
+    for name, value in (("plan", plan), ("exec_", exec_), ("exchange", exchange)):
+        if value is not None and value < 1:
+            raise ValueError(f"{name} cache limit must be >= 1, got {value}")
+    if plan is not None:
+        PLAN_CACHE_MAX = plan
+        _trim(_PLAN_CACHE, plan, "plan_evictions")
+        _trim(_SPLIT_CACHE, plan, "split_evictions")
+    if exec_ is not None:
+        EXEC_CACHE_MAX = exec_
+        _trim(_EXEC_CACHE, exec_, "exec_evictions")
+    if exchange is not None:
+        EXCHANGE_CACHE_MAX = exchange
+        _trim(_EXCHANGE_CACHE, exchange, "exchange_evictions")
+    return {
+        "plan": PLAN_CACHE_MAX,
+        "exec": EXEC_CACHE_MAX,
+        "exchange": EXCHANGE_CACHE_MAX,
+    }
+
+
 def register_cache(cache: OrderedDict) -> None:
     """Register an external LRU so :func:`clear_caches` resets it too."""
     # identity, not equality: two distinct empty OrderedDicts compare ==
@@ -413,23 +470,34 @@ def clear_caches() -> None:
     _stats.compute_hits = _stats.compute_misses = 0
     _stats.split_hits = _stats.split_misses = 0
     _stats.exchange_hits = _stats.exchange_misses = 0
+    _stats.plan_evictions = _stats.exec_evictions = 0
+    _stats.split_evictions = _stats.exchange_evictions = 0
+    _stats.compute_evictions = 0
 
 
-def _lru_get(cache: OrderedDict, key, max_size: int, build):
+def _trim(cache: OrderedDict, max_size: int, evict_stat: Optional[str]) -> None:
+    while len(cache) > max_size:
+        cache.popitem(last=False)
+        if evict_stat is not None:
+            setattr(_stats, evict_stat, getattr(_stats, evict_stat) + 1)
+
+
+def _lru_get(
+    cache: OrderedDict, key, max_size: int, build, evict_stat: Optional[str] = None
+):
     if key in cache:
         cache.move_to_end(key)
         return cache[key], True
     val = build()
     cache[key] = val
-    while len(cache) > max_size:
-        cache.popitem(last=False)
+    _trim(cache, max_size, evict_stat)
     return val, False
 
 
 def compute_cached(cache: OrderedDict, key, max_size: int, build):
     """LRU get for a registered local-compute compile cache, with the hit /
     miss accounted under ``compute_hits`` / ``compute_misses``."""
-    val, hit = _lru_get(cache, key, max_size, build)
+    val, hit = _lru_get(cache, key, max_size, build, "compute_evictions")
     if hit:
         _stats.compute_hits += 1
     else:
@@ -475,7 +543,7 @@ def planned(
         )
         return fuse(sp) if fuse_program else sp
 
-    sp, hit = _lru_get(_PLAN_CACHE, key, PLAN_CACHE_MAX, build)
+    sp, hit = _lru_get(_PLAN_CACHE, key, PLAN_CACHE_MAX, build, "plan_evictions")
     if hit:
         _stats.plan_hits += 1
     else:
@@ -571,7 +639,7 @@ def _executor(
         meta = _ExecMeta(emit_checks=emit, checks=checks, delay_s=delay_s)
         return fn, tuple(jnp.asarray(a) for a in arrays), meta
 
-    val, hit = _lru_get(_EXEC_CACHE, key, EXEC_CACHE_MAX, build)
+    val, hit = _lru_get(_EXEC_CACHE, key, EXEC_CACHE_MAX, build, "exec_evictions")
     if hit:
         _stats.exec_hits += 1
     else:
@@ -639,7 +707,7 @@ def _split_phase_cached(pattern: ExchangePattern) -> tuple:
         sp = split_phase(pattern)
         return sp, _LazyMerge(sp)
 
-    val, hit = _lru_get(_SPLIT_CACHE, key, PLAN_CACHE_MAX, build)
+    val, hit = _lru_get(_SPLIT_CACHE, key, PLAN_CACHE_MAX, build, "split_evictions")
     if hit:
         _stats.split_hits += 1
     else:
@@ -988,7 +1056,7 @@ def exchange_for(
             wire=wire,
         )
 
-    ex, hit = _lru_get(_EXCHANGE_CACHE, key, EXCHANGE_CACHE_MAX, build)
+    ex, hit = _lru_get(_EXCHANGE_CACHE, key, EXCHANGE_CACHE_MAX, build, "exchange_evictions")
     if hit:
         _stats.exchange_hits += 1
     else:

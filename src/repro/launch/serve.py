@@ -25,20 +25,31 @@ def routing_counts(params, cfg, tokens, nranks: int) -> np.ndarray:
     Replays the first MoE layer's router over the embedded token ids (the
     layer-0 approximation: later layers see residual-mixed activations, but
     the first routing decision is exact) and bins the top-k assignments by
-    source shard (tokens block-sharded over ranks) and destination shard
-    (experts block-sharded over ranks).  This is the traffic matrix the
-    dispatch hop would carry -- the advisor's measured histogram.
+    source shard (batch rows block-sharded over ranks, matching the dispatch
+    hop's token splice) and destination shard (experts block-sharded over
+    ranks).  This is the traffic matrix the dispatch hop would carry -- the
+    advisor's measured histogram.
     """
     if cfg.family != "moe":
         raise ValueError(f"--advise-dispatch needs a MoE arch, got {cfg.family!r}")
     emb = np.asarray(params["embed"])  # [V, M]
     router = np.asarray(params["seg_moe"]["moe"]["router"])[0]  # [M, E]
-    toks = np.asarray(tokens).reshape(-1)
+    toks2 = np.asarray(tokens)  # [B, S] (a flat [N] is treated as B=N, S=1)
+    toks = toks2.reshape(-1)
     logits = emb[toks] @ router
     k = cfg.moe.top_k
     top = np.argsort(-logits, axis=-1)[:, :k]  # [N, k]
     e_per = max(cfg.moe.n_experts // nranks, 1)
-    src = np.repeat(np.arange(toks.size) * nranks // toks.size, k)
+    # Source shard = block-sharded owner of the token's batch ROW, the
+    # np.array_split convention the dispatch hop splices by (first B % nranks
+    # ranks carry one extra row).  Flat-index binning (arange(N) * nranks // N)
+    # agrees only when B % nranks == 0; on ragged batches it splits a row
+    # across ranks and misattributes its traffic.
+    rows = toks2.shape[0] if toks2.ndim > 1 else toks.size
+    sizes = np.full(nranks, rows // nranks, dtype=np.int64)
+    sizes[: rows % nranks] += 1
+    owner = np.repeat(np.arange(nranks), sizes)  # [rows]
+    src = np.repeat(np.repeat(owner, toks.size // rows), k)
     dst = np.minimum(top.reshape(-1) // e_per, nranks - 1)
     counts = np.zeros((nranks, nranks), dtype=np.int64)
     np.add.at(counts, (src, dst), 1)
@@ -77,6 +88,11 @@ def main() -> None:
                     help="pods assumed for --advise-dispatch")
     ap.add_argument("--ppn", type=int, default=4,
                     help="chips per pod assumed for --advise-dispatch")
+    ap.add_argument("--simulate-serving", type=int, default=0, metavar="N",
+                    help="with --advise-dispatch: replay N concurrent dispatch "
+                         "requests of the measured routing pattern through the "
+                         "continuous-batching simulator (repro.serving) and "
+                         "report coalesced vs sequential p50/p99/throughput")
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -128,6 +144,23 @@ def main() -> None:
         print(f"dispatch advice ({args.npods} pods x {args.ppn}, "
               f"{int(counts.sum())} routed tokens):")
         print(advice.table())
+        if args.simulate_serving:
+            from repro.serving import SimConfig, WorkloadClass, serving_report
+            from repro.testing import make_trace
+
+            cls = WorkloadClass.from_routing(
+                counts, ppn=args.ppn, d_model=cfg.d_model, fp="moe"
+            )
+            trace = make_trace(
+                0, args.simulate_serving, ["moe"], pattern="burst",
+                rate=50 * args.simulate_serving, kinds={"moe": "moe"},
+            )
+            rep = serving_report({"moe": cls}, trace, SimConfig(max_width=8))
+            co, sq = rep["coalesced"], rep["sequential"]
+            print(f"serving sim ({args.simulate_serving} requests, k<=8): "
+                  f"coalesced p50={co['p50_s']*1e3:.2f}ms p99={co['p99_s']*1e3:.2f}ms "
+                  f"{co['throughput_rps']:.0f} rps | sequential "
+                  f"{sq['throughput_rps']:.0f} rps | speedup {rep['speedup']:.2f}x")
 
 
 if __name__ == "__main__":

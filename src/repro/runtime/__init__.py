@@ -1,6 +1,12 @@
 """Training/serving runtime: jitted steps, fault tolerance, elasticity."""
 
 from repro.runtime.trainer import Trainer, TrainerConfig, build_train_step
-from repro.runtime.watchdog import StragglerWatchdog
+from repro.runtime.watchdog import AdmissionController, StragglerWatchdog
 
-__all__ = ["Trainer", "TrainerConfig", "build_train_step", "StragglerWatchdog"]
+__all__ = [
+    "AdmissionController",
+    "Trainer",
+    "TrainerConfig",
+    "build_train_step",
+    "StragglerWatchdog",
+]

@@ -66,3 +66,61 @@ class StragglerWatchdog:
         self.consecutive += 1
         self.events.append({"kind": kind, **(info or {})})
         return self.consecutive >= self.budget
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Queue-depth admission control for the serving front-end.
+
+    The multi-tenant batcher (:mod:`repro.serving`) calls :meth:`admit`
+    before enqueueing each request; past ``max_queue_depth`` the request is
+    rejected (shed) instead of growing an unbounded backlog.  Sustained
+    rejection pressure escalates through the SAME control plane as
+    straggler steps: every ``reject_burst`` *consecutive* rejections records
+    one external event against the shared :class:`StragglerWatchdog` budget,
+    so an overload and a slow host reach the trainer's restart policy
+    through one code path.
+
+    Purely counter-based (no wall clock): admission decisions are a
+    deterministic function of the call sequence, which the seeded traffic
+    simulator relies on for bit-reproducible event traces.
+    """
+
+    max_queue_depth: int = 1024
+    watchdog: Optional["StragglerWatchdog"] = None
+    #: consecutive rejections per escalation event (debounce: one burst of
+    #: shed requests is one control-plane event, not hundreds)
+    reject_burst: int = 32
+
+    admitted: int = 0
+    rejected: int = 0
+    escalations: int = 0
+    _consecutive_rejects: int = 0
+
+    def __post_init__(self) -> None:
+        if self.max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1, got {self.max_queue_depth}"
+            )
+        if self.reject_burst < 1:
+            raise ValueError(f"reject_burst must be >= 1, got {self.reject_burst}")
+
+    def admit(self, queue_depth: int) -> bool:
+        """True iff a request may enter a queue currently ``queue_depth`` deep."""
+        if queue_depth >= self.max_queue_depth:
+            self.rejected += 1
+            self._consecutive_rejects += 1
+            if (
+                self.watchdog is not None
+                and self._consecutive_rejects % self.reject_burst == 0
+            ):
+                exhausted = self.watchdog.record_external(
+                    "admission_overload",
+                    {"rejected": self.rejected, "depth": queue_depth},
+                )
+                if exhausted:
+                    self.escalations += 1
+            return False
+        self._consecutive_rejects = 0
+        self.admitted += 1
+        return True

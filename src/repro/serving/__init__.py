@@ -1,0 +1,33 @@
+"""Multi-tenant serving front-end: continuous batching over cached plans.
+
+Turns the per-request machinery of PRs 2-7 (fused SpMM, plan/compute/
+exchange LRU caches, the advisor) into system throughput: concurrent
+SpMV/SpMM solves and MoE dispatches enter per-fingerprint FIFO lanes
+(:class:`RequestQueue`, admission via
+:class:`repro.runtime.AdmissionController`), coalesce into wider payload
+batches under a window and memory budget (:class:`ContinuousBatcher`),
+and drain through the real kernels (:class:`BatchExecutor`).  The seeded
+virtual-clock simulator (:func:`simulate`) makes every scheduling decision
+bit-reproducible for tier-1 tests and benchmarks.
+"""
+
+from .batcher import Batch, ContinuousBatcher
+from .executor import BatchExecutor, measure_spmv_replay
+from .queue import RequestQueue
+from .request import Request, WorkloadClass
+from .sim import SimConfig, SimResult, sequential_baseline, serving_report, simulate
+
+__all__ = [
+    "Batch",
+    "BatchExecutor",
+    "ContinuousBatcher",
+    "Request",
+    "RequestQueue",
+    "SimConfig",
+    "SimResult",
+    "WorkloadClass",
+    "measure_spmv_replay",
+    "sequential_baseline",
+    "serving_report",
+    "simulate",
+]

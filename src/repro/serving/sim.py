@@ -1,0 +1,229 @@
+"""Seeded, virtual-clock traffic simulation for the serving front-end.
+
+Tier-1 tests must exercise scheduler behavior -- bursty arrivals, skewed
+fingerprint popularity, starvation bounds, cache thrash -- without
+wall-clock flakiness, so the simulator is a discrete-event loop on a
+virtual clock: time advances only to the next arrival, coalescing
+deadline, or batch completion, and service times come from the advisor's
+performance model (:func:`repro.core.advisor.advise_stats`) plus a fixed
+per-dispatch host overhead.  Every quantity is a pure function of the
+(trace, config) pair, so identical seeds produce identical event traces,
+identical p50/p99, and an identical ``trace_hash`` -- pinned in
+``tests/test_serving.py``.
+
+Event tuples, in emission order (ties: arrivals, then dispatch+completion):
+
+* ``("arrive", t, rid, fp)`` -- request admitted to its lane
+* ``("reject", t, rid, fp)`` -- request shed by admission control
+* ``("dispatch", t, fp, width, key, rids)`` -- batch started; ``key`` is the
+  advisor's strategy/codec key, ``rids`` the coalesced request ids
+* ``("complete", t, fp, rids)`` -- batch finished at virtual ``t``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.runtime import AdmissionController, StragglerWatchdog
+
+from .batcher import ContinuousBatcher
+from .queue import RequestQueue
+from .request import Request, WorkloadClass
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Knobs of one simulated serving deployment."""
+
+    window: float = 1e-3  # coalescing window (virtual seconds)
+    max_width: int = 8  # request cap per batch
+    memory_budget: Optional[int] = None  # resident bytes cap per batch
+    machine: str = "tpu_v5e_pod"
+    wire: object = None  # advisor wire= argument (None keeps full precision)
+    #: pin every batch to one executable strategy; None = advisor's choice
+    strategy: Optional[str] = None
+    #: fixed per-dispatch host cost: queue pop, plan-cache lookup, launch.
+    #: This is the term coalescing amortizes even when byte terms dominate.
+    host_overhead_s: float = 50e-6
+    max_queue_depth: int = 4096
+
+    def __post_init__(self) -> None:
+        if self.host_overhead_s <= 0:
+            raise ValueError(
+                "host_overhead_s must be > 0 (a zero-cost dispatch would let "
+                f"the event loop stall), got {self.host_overhead_s}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Everything a test may pin about one simulation."""
+
+    events: Tuple[tuple, ...]
+    latencies: Tuple[Tuple[int, float], ...]  # (rid, complete - arrival), rid order
+    p50: float
+    p99: float
+    throughput: float  # completed requests per virtual second
+    makespan: float  # first arrival -> last completion
+    completed: int
+    rejected: int
+    batches: int
+    mean_width: float
+    escalations: int  # watchdog escalations from admission overload
+
+    @property
+    def trace_hash(self) -> str:
+        """sha1 over the full event trace -- equal hashes mean the two runs
+        made bit-identical scheduling decisions."""
+        return hashlib.sha1(repr(self.events).encode()).hexdigest()
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "p50_s": self.p50,
+            "p99_s": self.p99,
+            "throughput_rps": self.throughput,
+            "completed": float(self.completed),
+            "rejected": float(self.rejected),
+            "batches": float(self.batches),
+            "mean_width": self.mean_width,
+        }
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals) + 0.5) - 1))
+    return sorted_vals[idx]
+
+
+def simulate(
+    classes: Dict[str, WorkloadClass],
+    trace: Sequence[Request],
+    config: SimConfig = SimConfig(),
+) -> SimResult:
+    """Run ``trace`` through a single-executor serving deployment.
+
+    The executor is the serial resource: one batch's exchange + fused
+    compute at a time, matching the host-side dispatch loop of the real
+    front-end.  Service time for a batch is the advisor's predicted
+    exchange time at the coalesced payload width plus
+    ``config.host_overhead_s``.
+    """
+    watchdog = StragglerWatchdog()
+    admission = AdmissionController(
+        max_queue_depth=config.max_queue_depth, watchdog=watchdog
+    )
+    batcher = ContinuousBatcher(
+        classes,
+        RequestQueue(admission),
+        window=config.window,
+        max_width=config.max_width,
+        memory_budget=config.memory_budget,
+        machine=config.machine,
+        wire=config.wire,
+        strategy=config.strategy,
+    )
+    order = sorted(trace)  # (arrival, rid): generator interleaving is irrelevant
+    events = []
+    latencies: Dict[int, float] = {}
+    now = 0.0
+    busy_until = 0.0
+    ti = 0
+    n = len(order)
+    last_complete = 0.0
+    widths = []
+    # Generous stall guard: every loop iteration either consumes an arrival,
+    # dispatches a batch, or advances the clock to a strictly later event.
+    for _ in range(8 * n + 64):
+        while ti < n and order[ti].arrival <= now:
+            req = order[ti]
+            ti += 1
+            tag = "arrive" if batcher.submit(req) else "reject"
+            events.append((tag, req.arrival, req.rid, req.fp))
+        if busy_until <= now:
+            batch = batcher.next_batch(now)
+            if batch is not None:
+                rids = tuple(r.rid for r in batch.requests)
+                service = batch.predicted_time + config.host_overhead_s
+                done = now + service
+                events.append(("dispatch", now, batch.fp, batch.width, batch.key, rids))
+                events.append(("complete", done, batch.fp, rids))
+                for r in batch.requests:
+                    latencies[r.rid] = done - r.arrival
+                widths.append(batch.width)
+                busy_until = done
+                last_complete = done
+                continue
+        if ti >= n and len(batcher.queue) == 0:
+            break
+        candidates = []
+        if ti < n:
+            candidates.append(order[ti].arrival)
+        if len(batcher.queue):
+            deadline = batcher.next_deadline(now)
+            if deadline is not None:
+                candidates.append(max(deadline, busy_until))
+        if not candidates:
+            break
+        now = max(now, min(candidates))
+    else:
+        raise RuntimeError(
+            "simulate() exceeded its event budget -- the scheduler stalled "
+            f"with {len(batcher.queue)} queued and {n - ti} arrivals pending"
+        )
+    lat_sorted = sorted(latencies.values())
+    t0 = order[0].arrival if order else 0.0
+    makespan = max(last_complete - t0, 0.0)
+    completed = len(latencies)
+    return SimResult(
+        events=tuple(events),
+        latencies=tuple(sorted(latencies.items())),
+        p50=_percentile(lat_sorted, 0.50),
+        p99=_percentile(lat_sorted, 0.99),
+        throughput=completed / makespan if makespan > 0 else 0.0,
+        makespan=makespan,
+        completed=completed,
+        rejected=admission.rejected,
+        batches=batcher.batches,
+        mean_width=sum(widths) / len(widths) if widths else 0.0,
+        escalations=admission.escalations,
+    )
+
+
+def sequential_baseline(
+    classes: Dict[str, WorkloadClass],
+    trace: Sequence[Request],
+    config: SimConfig = SimConfig(),
+) -> SimResult:
+    """The no-coalescing control: same trace, same advisor, but every
+    request dispatches alone (``max_width=1``, zero window)."""
+    return simulate(
+        classes, trace, dataclasses.replace(config, window=0.0, max_width=1)
+    )
+
+
+def serving_report(
+    classes: Dict[str, WorkloadClass],
+    trace: Sequence[Request],
+    config: SimConfig = SimConfig(),
+) -> Dict[str, object]:
+    """Coalesced vs. sequential on one trace -- the acceptance-criterion
+    record (`BENCH_exchange.json` schema 4 ``serving`` section)."""
+    coalesced = simulate(classes, trace, config)
+    sequential = sequential_baseline(classes, trace, config)
+    speedup = (
+        coalesced.throughput / sequential.throughput
+        if sequential.throughput > 0
+        else 0.0
+    )
+    return {
+        "coalesced": coalesced.summary(),
+        "sequential": sequential.summary(),
+        "speedup": speedup,
+        "max_width": config.max_width,
+        "window_s": config.window,
+        "trace_hash": coalesced.trace_hash,
+    }

@@ -70,6 +70,9 @@ def test_record_never_written_by_failing_or_partial_runs(tmp_path):
         "split",
     }
     assert written["moe_dispatch"]["hit_rate"] >= 0.9
+    # schema 4: the serving acceptance record rides every full write
+    assert written["serving"]["speedup"] >= 3.0
+    assert len(written["serving"]["trace_hash"]) == 40
 
 
 @pytest.mark.slow
@@ -117,6 +120,10 @@ def test_benchmarks_run_smoke():
         "moe/8r/uniform/all_to_all/none",  # moe_dispatch: baseline column
         "moe/8r/skewed/two_step/bf16",  # moe_dispatch: strategy x codec
         "moeplan/8r/skewed",  # moe_dispatch: plan-cache behaviour
+        "serving/burst/w0us/auto",  # serving: simulated sweep
+        "serving/burst/w1000us/two_step",  # serving: pinned-strategy column
+        "serving/acceptance/burst/k8",  # serving: acceptance cell
+        "serving/replay/8r/",  # serving: measured fused-SpMM replay
     ):
         assert marker in out, f"missing benchmark row {marker!r}\n{out[-4000:]}"
 
@@ -187,10 +194,19 @@ def test_benchmarks_run_smoke():
     assert float(m.group(1)) > 1.0, f"fingerprint slower than strjoin: {m.group(0)}"
     assert int(m.group(2)) < 1000, m.group(0)
 
+    # the serving sweep's acceptance properties in miniature: the coalescing
+    # acceptance cell holds the >= 3x speedup over sequential dispatch (model
+    # numbers: deterministic), and the real fused-SpMM replay kept numerical
+    # parity between the coalesced and per-request paths
+    m = re.search(r"serving/acceptance/burst/k8,.*speedup=([0-9.]+)x", out)
+    assert m, f"serving acceptance row unparsable\n{out[-2000:]}"
+    assert float(m.group(1)) >= 3.0, f"coalescing under 3x: {m.group(0)}"
+    assert re.search(r"serving/replay/8r/k\d+,.*parity=ok", out)
+
     # machine-readable record: schema, per-section timings, wire counters
     with open(BENCH_JSON) as f:
         report = json.load(f)
-    assert report["schema"] == 3
+    assert report["schema"] == 4
     assert report["smoke"] is True
     assert report["failures"] == []
     for name, sec in report["sections"].items():
@@ -236,3 +252,17 @@ def test_benchmarks_run_smoke():
         assert buck["inter_pod_bytes"] <= uni["inter_pod_bytes"], (strat, per)
         assert buck["intra_pod_bytes"] <= uni["intra_pod_bytes"], (strat, per)
         assert buck["inter_pod_bytes"] > 0, (strat, per)
+
+    # schema 4: the serving record -- coalescing holds the >= 3x acceptance
+    # speedup, both runs completed the whole trace, and the deterministic
+    # simulator's trace hash is committed (a diff means the scheduler made
+    # different decisions, not just different timings)
+    serving = report["serving"]
+    assert serving["speedup"] >= 3.0, serving
+    assert serving["max_width"] == 8 and serving["window_s"] == 1e-3
+    assert len(serving["trace_hash"]) == 40
+    co, sq = serving["coalesced"], serving["sequential"]
+    assert co["completed"] == sq["completed"] > 0
+    assert co["rejected"] == sq["rejected"] == 0
+    assert co["p99_s"] < sq["p99_s"], serving
+    assert co["mean_width"] > 4.0 and sq["mean_width"] == 1.0

@@ -259,3 +259,129 @@ print(f"CACHE OK cold={cold*1e3:.1f}ms warm={warm*1e3:.1f}ms")
 """,
         devices=16,
     )
+
+
+def test_plan_cache_pressure_under_skewed_stream():
+    """A Zipf-skewed fingerprint stream past capacity (the serving regime:
+    few hot tenants, long churning tail) must keep the hot classes resident.
+    Pins a hit-rate floor and the eviction-counter consistency invariant
+    ``evictions == misses - live_entries`` (capacity never shrank)."""
+    from repro.testing import make_trace
+
+    rng = np.random.default_rng(31)
+    topo = PodTopology(npods=2, ppn=2)
+    pats = {
+        f"p{i}": random_pattern(rng, topo, local_size=4, p_connect=0.6, max_elems=2)
+        for i in range(12)
+    }
+    assert len({p.fingerprint() for p in pats.values()}) == 12
+    trace = make_trace(5, 300, sorted(pats), pattern="poisson", skew=1.4)
+    comm_strategies.clear_caches()
+    old = comm_strategies.PLAN_CACHE_MAX
+    try:
+        comm_strategies.set_cache_limits(plan=4)
+        for req in trace:
+            comm_strategies.planned(pats[req.fp], "two_step", message_cap_bytes=64)
+        stats = comm_strategies.cache_stats()
+        live = comm_strategies.cache_sizes()
+        assert live["plan"] == 4  # pinned at capacity, not unbounded
+        assert stats.plan_hits + stats.plan_misses == 300
+        hit_rate = stats.plan_hits / 300
+        assert hit_rate >= 0.5, f"hot classes not staying resident: {hit_rate:.2f}"
+        assert stats.plan_evictions > 0  # the tail really churned
+        assert stats.plan_evictions == stats.plan_misses - live["plan"]
+    finally:
+        comm_strategies.set_cache_limits(plan=old)
+        comm_strategies.clear_caches()
+
+
+def test_compute_cache_pressure_under_skewed_stream(monkeypatch):
+    """Same pressure invariants for the registered-external compute LRU."""
+    import jax
+
+    from repro.sparse import spmv as spmv_mod
+    from repro.testing import make_trace
+
+    mesh = jax.make_mesh((1, 1), ("pod", "local"))
+    comm_strategies.clear_caches()
+    monkeypatch.setattr(spmv_mod, "COMPUTE_CACHE_MAX", 4)
+    trace = make_trace(6, 200, [f"fp{i}" for i in range(10)], skew=1.5)
+    for req in trace:
+        spmv_mod._compute_program(req.fp, mesh, False, 4)
+    stats = comm_strategies.cache_stats()
+    assert len(spmv_mod._COMPUTE_CACHE) == 4
+    assert stats.compute_hits + stats.compute_misses == 200
+    assert stats.compute_hits / 200 >= 0.5
+    assert stats.compute_evictions > 0
+    assert stats.compute_evictions == stats.compute_misses - len(
+        spmv_mod._COMPUTE_CACHE
+    )
+    comm_strategies.clear_caches()
+    stats = comm_strategies.cache_stats()
+    assert stats.compute_evictions == 0 and stats.plan_evictions == 0
+
+
+def test_set_cache_limits_trims_immediately():
+    """Shrinking a cap mid-flight evicts LRU-first right away (the serving
+    memory-budget hook), and the eviction counters record the trim."""
+    rng = np.random.default_rng(43)
+    topo = PodTopology(npods=2, ppn=2)
+    pats = [
+        random_pattern(rng, topo, local_size=4, p_connect=0.6, max_elems=2)
+        for _ in range(5)
+    ]
+    comm_strategies.clear_caches()
+    old = comm_strategies.PLAN_CACHE_MAX
+    try:
+        for p in pats:
+            comm_strategies.planned(p, "two_step", message_cap_bytes=64)
+        assert comm_strategies.cache_sizes()["plan"] == 5
+        caps = comm_strategies.set_cache_limits(plan=2)
+        assert caps["plan"] == 2
+        assert comm_strategies.cache_sizes()["plan"] == 2
+        assert comm_strategies.cache_stats().plan_evictions == 3
+        # the survivors are the most recently used (LRU-first trim)
+        comm_strategies.planned(pats[-1], "two_step", message_cap_bytes=64)
+        comm_strategies.planned(pats[-2], "two_step", message_cap_bytes=64)
+        assert comm_strategies.cache_stats().plan_hits == 2
+        with pytest.raises(ValueError):
+            comm_strategies.set_cache_limits(plan=0)
+    finally:
+        comm_strategies.set_cache_limits(plan=old)
+        comm_strategies.clear_caches()
+
+
+@pytest.mark.slow
+def test_exchange_cache_pressure_on_devices(subproc):
+    """The exchange front-door LRU under the same skewed stream: hot
+    fingerprints stay resident, counters stay consistent."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import strategies as S
+from repro.comm.exchange import random_pattern
+from repro.comm.topology import PodTopology
+from repro.testing import make_trace
+
+rng = np.random.default_rng(2)
+topo = PodTopology(npods=2, ppn=2)
+pats = {
+    f"p{i}": random_pattern(rng, topo, local_size=4, p_connect=0.6, max_elems=2)
+    for i in range(8)
+}
+S.clear_caches()
+S.set_cache_limits(exchange=3)
+trace = make_trace(9, 80, sorted(pats), skew=1.5)
+for req in trace:
+    S.exchange_for(pats[req.fp], "two_step", message_cap_bytes=64)
+s = S.cache_stats()
+live = S.cache_sizes()
+assert live["exchange"] == 3, live
+assert s.exchange_hits + s.exchange_misses == 80, s
+assert s.exchange_hits / 80 >= 0.5, s
+assert s.exchange_evictions > 0, s
+assert s.exchange_evictions == s.exchange_misses - live["exchange"], s
+print("EXCHANGE PRESSURE OK", s.exchange_hits, s.exchange_misses, s.exchange_evictions)
+""",
+        devices=4,
+    )
