@@ -18,7 +18,12 @@ reductions (:class:`repro.solve.DeviceReductions`).  Reported per row:
   (:func:`repro.core.advisor.advise_solver`) for this strategy at the
   measured iteration count;
 * one ``.../advisor`` row per regime showing the amortization flip: the
-  modeled best strategy for a 1-iteration exchange vs the full solve.
+  modeled best strategy for a 1-iteration exchange vs the full solve;
+* ``solver/fused/<strategy>`` rows comparing the host-driven CG loop
+  against the fused whole-solve program (:func:`repro.solve.fused_cg`,
+  one jitted ``lax.while_loop``) on a mildly ill-conditioned reference
+  system at ``maxiter=120`` -- the ``T_launch`` amortization the
+  ``LaunchModel`` prices, with ``speedup`` the measured win.
 
 ``main(smoke=True)`` shrinks matrices and the strategy set so
 ``benchmarks/run.py --smoke`` keeps the section alive in tier-1.
@@ -95,6 +100,50 @@ for regime in ("audikw_like", "thermal_like", "random_block"):
     print(
         f"RESULT,solver/{regime}/advisor,0.0,"
         f"best@1={best1} best@{iters}={bestN} parity=ok"
+    )
+
+# fused whole-solve front-end vs the host-driven loop: the T_launch
+# amortization the LaunchModel prices.  A mildly ill-conditioned
+# reference system (shift=1e-2) keeps the f32 trajectory deterministic
+# so host and fused agree iteration-for-iteration under the same
+# maxiter=120 horizon; tol stays above the f32 residual plateau.
+from repro.comm import cache_stats, clear_caches
+from repro.solve import fused_cg
+
+rngf = np.random.default_rng(7)
+A = spd_system(GENERATORS["thermal_like"](n, rngf), shift=1e-2)
+part = partition_csr(A, topo)
+b = rngf.normal(size=(topo.nranks, part.rows_per_rank)).astype(np.float32)
+maxiter = 120
+for strat in (("two_step",) if SMOKE else ("standard", "two_step", "split")):
+    op = DistributedSpMV(part, strategy=strat, use_pallas=False)
+    host = cg(op, b, tol=1e-5, maxiter=maxiter, reductions=red)  # warm
+    t0 = time.perf_counter()
+    host = cg(op, b, tol=1e-5, maxiter=maxiter, reductions=red)
+    t_host = time.perf_counter() - t0
+    clear_caches()
+    # fresh op: the fused solve must plan from scratch (one plan miss)
+    opf = DistributedSpMV(part, strategy=strat, use_pallas=False)
+    fres = fused_cg(opf, b, tol=1e-5, maxiter=maxiter)  # plan + trace once
+    s = cache_stats()
+    if strat == "two_step":
+        assert (s.plan_misses, s.fused_misses, s.fused_hits) == (1, 1, 0), s
+    else:
+        assert (s.fused_misses, s.fused_hits) == (1, 0), s
+    t0 = time.perf_counter()
+    fres = fused_cg(opf, b, tol=1e-5, maxiter=maxiter)
+    t_fused = time.perf_counter() - t0
+    assert cache_stats().fused_hits == 1, cache_stats()
+    parity = (fres.iterations, fres.status) == (host.iterations, host.status)
+    if SMOKE:
+        assert parity, (fres.iterations, fres.status, host.iterations, host.status)
+    print(
+        f"RESULT,solver/fused/{strat},"
+        f"{t_fused / max(fres.iterations, 1) * 1e6:.1f},"
+        f"iters={fres.iterations} conv={int(fres.converged)} "
+        f"host_us_per_iter={t_host / max(host.iterations, 1) * 1e6:.1f} "
+        f"speedup={t_host / t_fused:.2f}x "
+        f"parity={'ok' if parity else 'drift'}"
     )
 """
 

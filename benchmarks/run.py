@@ -10,7 +10,8 @@ Sections:
   validation  -- paper Figure 4.2 (model vs measured SpMV exchange)
   spmv        -- paper Figure 5.1 (SpMV strategies) + SpMM k-sweep
   overlap     -- split-phase overlap sweep (interior fraction x pods x k)
-  solver      -- CG workload sweep (regime x strategy x overlap + amortized model)
+  solver      -- CG workload sweep (regime x strategy x overlap + amortized
+                 model, + fused whole-solve vs host-driven loop)
   wire        -- inter-pod wire codec sweep (codec x strategy x k x pods)
   planning    -- planner setup time vs nranks (vectorized vs legacy)
   kernels     -- Pallas kernel micro-benchmarks
@@ -39,7 +40,11 @@ scenario, per strategy x codec) and the MoE-dispatch routing counters
 simulated plan-cache hit rate for a jittering skewed load) and the
 serving record (schema 4: coalesced vs sequential p50/p99/throughput and
 the >= 3x acceptance speedup on the fixed skewed burst trace, with the
-deterministic simulator's trace hash) -- so the perf trajectory is
+deterministic simulator's trace hash) and the fused-solve record
+(schema 5: host-driven CG loop vs the fused whole-solve
+``lax.while_loop`` program on the 8-device reference problem at
+``maxiter=120``, with the >= 2x acceptance speedup and the
+one-plan-miss / one-compile cache pins) -- so the perf trajectory is
 trackable across PRs; schema pinned by ``tests/test_benchmarks_smoke.py``.
 """
 
@@ -52,7 +57,7 @@ import time
 import traceback
 
 #: bump when the JSON layout changes (tests pin it)
-BENCH_SCHEMA = 4
+BENCH_SCHEMA = 5
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_exchange.json")
 
 
@@ -174,7 +179,83 @@ def _serving_counters() -> dict:
     }
 
 
-def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JSON) -> bool:
+#: fused-solve acceptance measurement, run on 8 forced host devices.  The
+#: reference system is mildly ill-conditioned (shift=1e-2) so the f32
+#: trajectory is deterministic and host/fused agree iteration-for-iteration
+#: under the maxiter=120 horizon; tol stays above the f32 residual plateau.
+_FUSED_SOLVE_CODE = """
+import json, time, numpy as np
+from repro.comm import cache_stats, clear_caches
+from repro.comm.topology import PodTopology
+from repro.solve import DeviceReductions, cg, fused_cg, spd_system
+from repro.sparse import DistributedSpMV, partition_csr, thermal_like
+
+topo = PodTopology(npods=2, ppn=4)
+rng = np.random.default_rng(7)
+A = spd_system(thermal_like(144, rng), shift=1e-2)
+part = partition_csr(A, topo)
+b = rng.normal(size=(topo.nranks, part.rows_per_rank)).astype(np.float32)
+red = DeviceReductions(topo)
+op = DistributedSpMV(part, strategy="two_step", use_pallas=False)
+tol, maxiter = 1e-5, 120
+
+host = cg(op, b, tol=tol, maxiter=maxiter, reductions=red)  # warm jits
+t0 = time.perf_counter()
+host = cg(op, b, tol=tol, maxiter=maxiter, reductions=red)
+t_host = time.perf_counter() - t0
+
+clear_caches()
+# fresh op: the fused solve must plan from scratch (one plan miss)
+opf = DistributedSpMV(part, strategy="two_step", use_pallas=False)
+fres = fused_cg(opf, b, tol=tol, maxiter=maxiter)  # plan + trace exactly once
+s = cache_stats()
+assert (s.plan_misses, s.fused_misses, s.fused_hits) == (1, 1, 0), s
+t0 = time.perf_counter()
+fres = fused_cg(opf, b, tol=tol, maxiter=maxiter)
+t_fused = time.perf_counter() - t0
+s = cache_stats()
+assert s.fused_hits == 1, s
+assert (fres.iterations, fres.status) == (host.iterations, host.status), (
+    fres.iterations, fres.status, host.iterations, host.status)
+assert t_host / t_fused >= 2.0, (t_host, t_fused)  # the acceptance bar
+
+rec = {
+    "problem": {"n": A.n, "nnz": A.nnz, "shift": 1e-2, "strategy": "two_step",
+                "tol": tol, "maxiter": maxiter, "devices": topo.nranks},
+    "host": {"iterations": host.iterations, "status": host.status,
+             "total_s": round(t_host, 6),
+             "us_per_iter": round(t_host / max(host.iterations, 1) * 1e6, 1)},
+    "fused": {"iterations": fres.iterations, "status": fres.status,
+              "total_s": round(t_fused, 6),
+              "us_per_iter": round(t_fused / max(fres.iterations, 1) * 1e6, 1)},
+    "speedup": round(t_host / t_fused, 2),
+    "cache": {"plan_misses": s.plan_misses, "fused_misses": s.fused_misses,
+              "fused_hits": s.fused_hits},
+}
+print("FUSED_RECORD," + json.dumps(rec))
+"""
+
+
+def _fused_solve_record() -> dict:
+    """Fused whole-solve acceptance record (schema 5).
+
+    Unlike the other counters this one needs devices: it times the
+    host-driven CG loop against the fused ``lax.while_loop`` program
+    (:func:`repro.solve.fused_cg`) on the 8-device smoke reference
+    problem at ``maxiter=120``.  ``speedup`` is the acceptance criterion
+    (>= 2x, asserted in the subprocess so a regression blocks the
+    write); the cache counters pin the exactly-one-plan-miss /
+    one-fused-compile contract.
+    """
+    from benchmarks.common import run_with_devices
+
+    out = run_with_devices(_FUSED_SOLVE_CODE, devices=8)
+    line = next(l for l in out.splitlines() if l.startswith("FUSED_RECORD,"))
+    return json.loads(line[len("FUSED_RECORD,"):])
+
+
+def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JSON,
+                       fused_record: "dict | None" = None) -> bool:
     """Write the tracked record iff this was a FULL, PASSING run.
 
     The record's contract (``tests/test_benchmarks_smoke.py``) is
@@ -182,6 +263,10 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
     never clobber the healthy committed trajectory file; likewise a
     single-section iteration must not replace the cross-PR record (and only
     a full run pays for the wire counters it would otherwise discard).
+
+    ``fused_record`` is a test seam: the fused-solve measurement spawns an
+    8-device subprocess, so hermetic unit tests inject a synthetic record
+    instead of paying for (and depending on) the real one.
     """
     failures = report["failures"]
     not_ok = [n for n, s in report["sections"].items() if not s["ok"]]
@@ -195,6 +280,7 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
     report["chaos_recovery"] = _chaos_counters()
     report["moe_dispatch"] = _moe_dispatch_counters()
     report["serving"] = _serving_counters()
+    report["fused_solve"] = _fused_solve_record() if fused_record is None else fused_record
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -16,8 +16,14 @@ amortize over.
    chips) with dot products through the node-aware hierarchical collectives
    (`repro.solve.DeviceReductions`), including an int8-compressed
    inter-pod reduction variant.
+4. With ``--fused``: compare the host-driven loop against the fused
+   whole-solve program (`repro.solve.fused_cg`) -- one jitted
+   ``lax.while_loop`` per solve, cached in the fused-program LRU -- and ask
+   the advisor's `LaunchModel` accounting (`advise_solver(fused="auto")`)
+   at which horizon the one-time trace cost beats the per-iteration host
+   dispatches.
 
-    PYTHONPATH=src python examples/krylov_solve.py
+    PYTHONPATH=src python examples/krylov_solve.py [--fused]
 """
 
 import os
@@ -36,6 +42,7 @@ def main() -> None:
     from repro.solve import NumpySpMV, REDUCTIONS_PER_ITER, cg, spd_system
     from repro.sparse import partition_csr, thermal_like
 
+    fused = "--fused" in sys.argv[1:]
     rng = np.random.default_rng(0)
     topo = PodTopology(npods=2, ppn=4)
     A = spd_system(thermal_like(1024, rng))
@@ -44,8 +51,8 @@ def main() -> None:
     b = rng.normal(size=(topo.nranks, part.rows_per_rank))
 
     if os.environ.get("_KS_CHILD") == "1":
-        # the 8-device re-launch only runs the device solves (step 3)
-        _device_execution(topo, part, b)
+        # the 8-device re-launch only runs the device solves (steps 3/4)
+        _device_execution(topo, part, b, fused=os.environ.get("_KS_FUSED") == "1")
         return
 
     print(f"SPD system n={A.n} nnz={A.nnz} on {topo.nranks} ranks\n")
@@ -90,11 +97,26 @@ def main() -> None:
           f"(one per distinct sub-pattern), {s.plan_hits} hits; "
           f"split decompositions: {s.split_misses} miss, {s.split_hits} hits\n")
 
+    if fused:
+        # 2b. where does the fused front-end win?  The LaunchModel charges
+        #     the host loop t_launch per dispatch and the fused program one
+        #     t_trace up front; the ranking flips to +fused once the trace
+        #     amortizes (~t_trace / (launches_per_iter * t_launch) iters).
+        for iters in (50, 400):
+            adv = advise_solver(
+                flagship, iters, machine="lassen", fused="auto",
+                reductions_per_iter=REDUCTIONS_PER_ITER["cg"],
+            )
+            print(f"fused-aware advisor, iters={iters} -> {adv.best.key}")
+        print()
+
     # 3. device executor + hierarchical reductions (8 forced host chips;
     #    XLA_FLAGS must be set before jax import, hence the re-launch)
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["_KS_CHILD"] = "1"
+    if fused:
+        env["_KS_FUSED"] = "1"
     env["PYTHONPATH"] = os.pathsep.join(sys.path)
     print("re-running the solve on 8 host devices...")
     out = subprocess.run([sys.executable, __file__], env=env,
@@ -103,9 +125,9 @@ def main() -> None:
     print(out.stdout[start:] if start >= 0 else out.stderr[-2000:])
 
 
-def _device_execution(topo, part, b) -> None:
-    from repro.comm import Compressor
-    from repro.solve import DeviceReductions, cg
+def _device_execution(topo, part, b, fused=False) -> None:
+    from repro.comm import Compressor, cache_stats
+    from repro.solve import DeviceReductions, cg, fused_cg
     from repro.sparse import DistributedSpMV
 
     print("DEVICE EXECUTION")
@@ -124,6 +146,22 @@ def _device_execution(topo, part, b) -> None:
     print(f"  two_step  int8-compressed inter-pod reductions: "
           f"converged={res.converged} iters={res.iterations} "
           f"relres={res.final_residual:.2e}")
+    if not fused:
+        return
+    # 4. fused whole-solve program: same SolveResult contract, ONE compiled
+    #    lax.while_loop instead of per-iteration host dispatches
+    op = DistributedSpMV(part, strategy="two_step", use_pallas=False)
+    host = cg(op, bf, tol=1e-6, reductions=red)
+    fres = fused_cg(op, bf, tol=1e-6)
+    s = cache_stats()
+    drift = max(
+        abs(a - c) / max(abs(c), 1e-30)
+        for a, c in zip(fres.residuals, host.residuals)
+    )
+    print(f"  two_step  fused whole-solve: converged={fres.converged} "
+          f"iters={fres.iterations} (host {host.iterations}), "
+          f"history drift {drift:.1e}, "
+          f"{s.fused_misses} program compile / {s.fused_hits} cache hits")
 
 
 if __name__ == "__main__":

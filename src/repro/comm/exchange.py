@@ -334,6 +334,99 @@ class StagePlan:
 
 
 # ---------------------------------------------------------------------------
+# Program lowering (ext-once execution layout)
+# ---------------------------------------------------------------------------
+
+
+def rebase_indices(idx: np.ndarray, w: int, L: int, sentinel: int) -> np.ndarray:
+    """Re-base stage indices from ``ext = [buf(w) | local(L)]`` coordinates
+    onto the fixed ``[local(L) | buf(W_max)]`` scratch layout.
+
+    PADs (``idx >= w + L``) map to ``sentinel`` (one past the scratch), which
+    ``.get(mode='fill')`` turns into zeros.
+    """
+    idx = np.asarray(idx)
+    out = np.full(idx.shape, sentinel, dtype=np.int32)
+    np.copyto(out, (idx + L).astype(np.int32), where=idx < w)
+    np.copyto(out, (idx - w).astype(np.int32), where=(idx >= w) & (idx < w + L))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredProgram:
+    """A stage program lowered to interpreter ops + re-based index arrays.
+
+    The value half of a traceable exchange: ``ops`` is a static tuple of
+    interpreter opcodes (hashable -- safe to close over inside ``jit``) and
+    ``arrays`` is the pytree of per-rank ``[nranks, ...]`` int32 index
+    arrays the ops address, every one re-based onto the single
+    ``[local(L) | buf(W_max)]`` scratch so no stage re-concatenates
+    ``[buf, local]``.  Built by :func:`lower_program`; interpreted per shard
+    by the pure ``run`` callable of
+    :class:`repro.comm.strategies.TraceableExchange`.
+    """
+
+    ops: Tuple[tuple, ...]
+    arrays: Tuple[np.ndarray, ...]
+    w_max: int
+    local_size: int
+    out_size: int
+
+
+def lower_program(sp: StagePlan) -> LoweredProgram:
+    """Lower a planned stage program to its traceable ext-once form.
+
+    Returns a :class:`LoweredProgram` whose every index array addresses the
+    ``[local | buf]`` scratch of width ``L + W_max`` directly.
+    """
+    L = sp.pattern.local_size
+    widths: List[int] = []
+    w = 0
+    for st in sp.stages:
+        if isinstance(st, Gather):
+            w = st.idx.shape[1]
+        elif isinstance(st, (A2ALocal, A2APod)):
+            w = st.buflen
+        elif isinstance(st, PermuteWorld):
+            w = sum(st.blks)
+        else:
+            raise TypeError(f"unknown stage {st!r}")
+        widths.append(w)
+    w_max = max(widths, default=0)
+    w_max = max(w_max, sp.out_size)
+    sentinel = L + w_max
+
+    ops: List[tuple] = []
+    arrays: List[np.ndarray] = []
+    w = 0
+    for st in sp.stages:
+        if isinstance(st, Gather):
+            arrays.append(rebase_indices(st.idx, w, L, sentinel))
+            w = st.idx.shape[1]
+            ops.append(("gather", w))
+        elif isinstance(st, (A2ALocal, A2APod)):
+            kind = "a2a_local" if isinstance(st, A2ALocal) else "a2a_pod"
+            has_idx = st.idx is not None
+            if has_idx:
+                arrays.append(rebase_indices(st.idx, w, L, sentinel))
+            ops.append((kind, st.buflen, has_idx))
+            w = st.buflen
+        elif isinstance(st, PermuteWorld):
+            for sel in st.sels:
+                arrays.append(rebase_indices(sel, w, L, sentinel))
+            inter = st.inter if st.inter is not None else (False,) * len(st.blks)
+            ops.append(("permute", st.rounds, st.blks, inter))
+            w = sum(st.blks)
+    return LoweredProgram(
+        ops=tuple(ops),
+        arrays=tuple(arrays),
+        w_max=w_max,
+        local_size=L,
+        out_size=sp.out_size,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Symbolic simulator, token-list flavor (oracle for tests and planning)
 # ---------------------------------------------------------------------------
 

@@ -49,10 +49,13 @@ from repro.comm.exchange import (
     A2APod,
     ExchangePattern,
     Gather,
+    LoweredProgram,
     PermuteWorld,
     SplitPhase,
     StagePlan,
+    lower_program,
     plan,
+    rebase_indices,
     split_phase,
 )
 from repro.comm.fusion import fuse
@@ -69,65 +72,21 @@ from repro.comm.topology import (
 # ---------------------------------------------------------------------------
 
 
-def _rebase(idx: np.ndarray, w: int, L: int, sentinel: int) -> np.ndarray:
-    """Re-base stage indices from ``ext = [buf(w) | local(L)]`` coordinates
-    onto the fixed ``[local(L) | buf(W_max)]`` scratch layout.
-
-    PADs (``idx >= w + L``) map to ``sentinel`` (one past the scratch), which
-    ``.get(mode='fill')`` turns into zeros.
-    """
-    idx = np.asarray(idx)
-    out = np.full(idx.shape, sentinel, dtype=np.int32)
-    np.copyto(out, (idx + L).astype(np.int32), where=idx < w)
-    np.copyto(out, (idx - w).astype(np.int32), where=(idx >= w) & (idx < w + L))
-    return out
+#: kept as the module-local spelling of the lowering the executor was built
+#: around; the canonical implementation now lives with the stage dataclasses
+#: (:func:`repro.comm.exchange.lower_program`)
+_rebase = rebase_indices
 
 
 def _compile_program(sp: StagePlan) -> Tuple[Tuple, Tuple[np.ndarray, ...], int]:
     """Lower a stage program to executor ops + re-based index arrays.
 
-    Returns ``(ops, arrays, W_max)`` where every index array addresses the
+    Back-compat tuple view of :func:`repro.comm.exchange.lower_program`:
+    returns ``(ops, arrays, W_max)`` where every index array addresses the
     ``[local | buf]`` scratch of width ``L + W_max`` directly.
     """
-    L = sp.pattern.local_size
-    widths: List[int] = []
-    w = 0
-    for st in sp.stages:
-        if isinstance(st, Gather):
-            w = st.idx.shape[1]
-        elif isinstance(st, (A2ALocal, A2APod)):
-            w = st.buflen
-        elif isinstance(st, PermuteWorld):
-            w = sum(st.blks)
-        else:
-            raise TypeError(f"unknown stage {st!r}")
-        widths.append(w)
-    w_max = max(widths, default=0)
-    w_max = max(w_max, sp.out_size)
-    sentinel = L + w_max
-
-    ops: List[Tuple] = []
-    arrays: List[np.ndarray] = []
-    w = 0
-    for st in sp.stages:
-        if isinstance(st, Gather):
-            arrays.append(_rebase(st.idx, w, L, sentinel))
-            w = st.idx.shape[1]
-            ops.append(("gather", w))
-        elif isinstance(st, (A2ALocal, A2APod)):
-            kind = "a2a_local" if isinstance(st, A2ALocal) else "a2a_pod"
-            has_idx = st.idx is not None
-            if has_idx:
-                arrays.append(_rebase(st.idx, w, L, sentinel))
-            ops.append((kind, st.buflen, has_idx))
-            w = st.buflen
-        elif isinstance(st, PermuteWorld):
-            for sel in st.sels:
-                arrays.append(_rebase(sel, w, L, sentinel))
-            inter = st.inter if st.inter is not None else (False,) * len(st.blks)
-            ops.append(("permute", st.rounds, st.blks, inter))
-            w = sum(st.blks)
-    return tuple(ops), tuple(arrays), w_max
+    lp = lower_program(sp)
+    return lp.ops, lp.arrays, lp.w_max
 
 
 def _encode_blocks(blocks, codec: str):
@@ -348,6 +307,151 @@ def _execute(
 
 
 # ---------------------------------------------------------------------------
+# Traceable exchange programs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceableExchange:
+    """A planned exchange as a first-class traceable program value.
+
+    The pair the whole-solve path closes over inside ``jit``: a pytree of
+    plan arrays (:attr:`plan_arrays`, one ``[nranks, ...]`` int32 array per
+    lowered index table -- fed through ``shard_map`` input specs like any
+    payload) plus the pure per-shard callable :meth:`run`.  Everything else
+    on the instance is static Python data (opcodes, topology, codec,
+    integrity-check metadata) that traces into the program as constants, so
+    a ``TraceableExchange`` can sit inside a ``lax.while_loop`` body, a
+    scanned pipeline stage, or the barrier executor alike -- the jitted
+    executor of :class:`IrregularExchange` is now just ``shard_map(run)``.
+
+    Build one with :func:`traceable_exchange` (or
+    :meth:`IrregularExchange.traceable`).
+
+    ``verify=True`` programs expose :meth:`run_verified`, which additionally
+    returns the per-DCI-hop max-violation vector (``[n_checks]`` float32, in
+    :attr:`checks` order) computed by the same wire integrity checks as the
+    host path; callers surface positives as
+    :class:`repro.comm.faults.ExchangeIntegrityError` via :meth:`raise_viols`.
+    """
+
+    lowered: LoweredProgram
+    topo: PodTopology
+    strategy: str
+    codec: str = "none"
+    #: integrity-check metadata: ``checks[j] = (ordinal, op_index,
+    #: stage_kind, round_index)`` names the DCI hop behind violation column j
+    checks: Tuple[tuple, ...] = ()
+    #: True when :meth:`run_verified` emits a violation vector (verify was
+    #: requested AND the plan has DCI-crossing hops)
+    emit_checks: bool = False
+    #: compiled fault injections keyed ``(op_index, round_index)`` (static:
+    #: baked into the trace; a fused loop applies them on every iteration)
+    fault_ops: Optional[Dict] = None
+    delay_s: float = 0.0
+    #: device copies of ``lowered.arrays`` -- THE plan-array pytree
+    plan_arrays: Tuple[jax.Array, ...] = ()
+
+    @property
+    def out_size(self) -> int:
+        return self.lowered.out_size
+
+    @property
+    def local_size(self) -> int:
+        return self.lowered.local_size
+
+    def run(self, local, *plan_arrays):
+        """Pure per-shard exchange: ``local [1, L, *feat] -> [1, H, *feat]``.
+
+        Runs inside ``shard_map`` (directly or nested in a traced loop);
+        ``plan_arrays`` are the per-shard slices of :attr:`plan_arrays`.
+        """
+        out, _ = _execute(
+            self.lowered.ops, self.topo, self.lowered.local_size,
+            self.lowered.w_max, self.lowered.out_size, local, plan_arrays,
+            self.codec, verify=False, fault_ops=self.fault_ops,
+        )
+        return out
+
+    def run_verified(self, local, *plan_arrays):
+        """Like :meth:`run` but returns ``(out, viols [n_checks] f32)``.
+
+        With :attr:`emit_checks` False the violation vector is empty.
+        """
+        out, viols = _execute(
+            self.lowered.ops, self.topo, self.lowered.local_size,
+            self.lowered.w_max, self.lowered.out_size, local, plan_arrays,
+            self.codec, verify=self.emit_checks, fault_ops=self.fault_ops,
+        )
+        if viols:
+            return out, jnp.stack(viols)
+        return out, jnp.zeros((0,), jnp.float32)
+
+    def raise_viols(self, viols: np.ndarray) -> None:
+        """Raise :class:`~repro.comm.faults.ExchangeIntegrityError` for the
+        first positive column of a gathered ``[..., n_checks]`` violation
+        array -- the same structured fields as the host executor's raise."""
+        viols = np.asarray(viols).reshape(-1, len(self.checks))
+        bad = (viols > 0.0).any(axis=0)
+        if not bad.any():
+            return
+        j = int(np.argmax(bad))
+        _, op_index, stage_kind, round_index = self.checks[j]
+        raise faults_mod.ExchangeIntegrityError(
+            strategy=self.strategy,
+            codec=self.codec,
+            stage_kind=stage_kind,
+            op_index=op_index,
+            round_index=round_index,
+            violation=float(viols[:, j].max()),
+        )
+
+
+def traceable_exchange(
+    sp: StagePlan,
+    codec: str = "none",
+    verify: bool = False,
+    faults: Optional[faults_mod.FaultPlan] = None,
+) -> TraceableExchange:
+    """Lower a planned stage program to its traceable program value.
+
+    This is the programmatic form of what :func:`_executor` wraps in
+    ``shard_map`` for the barrier path; fused consumers
+    (:mod:`repro.solve.fused`) embed :meth:`TraceableExchange.run` directly
+    inside their own traced loops instead.
+    """
+    lp = lower_program(sp)
+    checks = tuple(
+        (ordinal, op_index, stage_kind, round_index)
+        for ordinal, op_index, stage_kind, round_index, _, _ in (
+            faults_mod.iter_inter_hops(sp)
+        )
+    )
+    fault_ops: Optional[Dict] = None
+    delay_s = 0.0
+    if faults is not None:
+        cf = faults_mod.compile_faults(sp, codec, faults)
+        delay_s = cf.delay_s
+        grouped: Dict[tuple, list] = {}
+        for inj in cf.injections:
+            grouped.setdefault((inj.op_index, inj.round_index), []).append(
+                (inj.kind, jnp.asarray(inj.dev_mask), inj.value)
+            )
+        fault_ops = {k: tuple(v) for k, v in grouped.items()} or None
+    return TraceableExchange(
+        lowered=lp,
+        topo=sp.pattern.topo,
+        strategy=sp.strategy,
+        codec=codec,
+        checks=checks,
+        emit_checks=verify and bool(checks),
+        fault_ops=fault_ops,
+        delay_s=delay_s,
+        plan_arrays=tuple(jnp.asarray(a) for a in lp.arrays),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Plan / executor caches
 # ---------------------------------------------------------------------------
 
@@ -371,6 +475,12 @@ class CacheStats:
     #: (:func:`exchange_for`); a hit means zero planning work for the batch
     exchange_hits: int = 0
     exchange_misses: int = 0
+    #: fused whole-solve programs (``_FUSED_CACHE``: one jitted
+    #: ``lax.while_loop`` Krylov solve per (pattern, strategy, codec, dtype,
+    #: ...); populated by :mod:`repro.solve.fused`).  A miss is a whole-solve
+    #: retrace, so this is the costliest cache to thrash.
+    fused_hits: int = 0
+    fused_misses: int = 0
     #: LRU evictions per cache -- the serving layer's memory-pressure signal
     #: (a multi-tenant fingerprint universe larger than the cache capacity
     #: shows up here, not as silent recompiles).  Consistency invariant for
@@ -381,6 +491,7 @@ class CacheStats:
     split_evictions: int = 0
     exchange_evictions: int = 0
     compute_evictions: int = 0
+    fused_evictions: int = 0
 
 
 _stats = CacheStats()
@@ -391,11 +502,16 @@ _MESH_CACHE: "OrderedDict[tuple, jax.sharding.Mesh]" = OrderedDict()
 _SPLIT_CACHE: "OrderedDict[str, tuple]" = OrderedDict()
 #: constructed IrregularExchange instances (per-batch dynamic-pattern callers)
 _EXCHANGE_CACHE: "OrderedDict[tuple, IrregularExchange]" = OrderedDict()
+#: fused whole-solve programs (jitted fn + device operands), keyed by
+#: (fingerprint, solver, strategy, codec, overlap, dtype, ...) tuples built
+#: by repro.solve.fused
+_FUSED_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 #: external LRUs (e.g. the SpMM compute cache) reset by clear_caches()
 _EXTERNAL_CACHES: List[OrderedDict] = []
 PLAN_CACHE_MAX = 256
 EXEC_CACHE_MAX = 64
 EXCHANGE_CACHE_MAX = 64
+FUSED_CACHE_MAX = 32
 
 
 def cache_stats() -> CacheStats:
@@ -411,6 +527,7 @@ def cache_sizes() -> Dict[str, int]:
         "exec": len(_EXEC_CACHE),
         "split": len(_SPLIT_CACHE),
         "exchange": len(_EXCHANGE_CACHE),
+        "fused": len(_FUSED_CACHE),
         "external": sum(len(c) for c in _EXTERNAL_CACHES),
     }
 
@@ -419,6 +536,7 @@ def set_cache_limits(
     plan: Optional[int] = None,
     exec_: Optional[int] = None,
     exchange: Optional[int] = None,
+    fused: Optional[int] = None,
 ) -> Dict[str, int]:
     """Resize the module LRU capacities, trimming oldest-first immediately.
 
@@ -429,8 +547,13 @@ def set_cache_limits(
     the split-phase cache shares ``plan``'s cap by design (one decomposition
     per resident pattern).  Returns the caps now in force.
     """
-    global PLAN_CACHE_MAX, EXEC_CACHE_MAX, EXCHANGE_CACHE_MAX
-    for name, value in (("plan", plan), ("exec_", exec_), ("exchange", exchange)):
+    global PLAN_CACHE_MAX, EXEC_CACHE_MAX, EXCHANGE_CACHE_MAX, FUSED_CACHE_MAX
+    for name, value in (
+        ("plan", plan),
+        ("exec_", exec_),
+        ("exchange", exchange),
+        ("fused", fused),
+    ):
         if value is not None and value < 1:
             raise ValueError(f"{name} cache limit must be >= 1, got {value}")
     if plan is not None:
@@ -443,10 +566,14 @@ def set_cache_limits(
     if exchange is not None:
         EXCHANGE_CACHE_MAX = exchange
         _trim(_EXCHANGE_CACHE, exchange, "exchange_evictions")
+    if fused is not None:
+        FUSED_CACHE_MAX = fused
+        _trim(_FUSED_CACHE, fused, "fused_evictions")
     return {
         "plan": PLAN_CACHE_MAX,
         "exec": EXEC_CACHE_MAX,
         "exchange": EXCHANGE_CACHE_MAX,
+        "fused": FUSED_CACHE_MAX,
     }
 
 
@@ -463,6 +590,7 @@ def clear_caches() -> None:
     _MESH_CACHE.clear()
     _SPLIT_CACHE.clear()
     _EXCHANGE_CACHE.clear()
+    _FUSED_CACHE.clear()
     for cache in _EXTERNAL_CACHES:
         cache.clear()
     _stats.plan_hits = _stats.plan_misses = 0
@@ -470,9 +598,10 @@ def clear_caches() -> None:
     _stats.compute_hits = _stats.compute_misses = 0
     _stats.split_hits = _stats.split_misses = 0
     _stats.exchange_hits = _stats.exchange_misses = 0
+    _stats.fused_hits = _stats.fused_misses = 0
     _stats.plan_evictions = _stats.exec_evictions = 0
     _stats.split_evictions = _stats.exchange_evictions = 0
-    _stats.compute_evictions = 0
+    _stats.compute_evictions = _stats.fused_evictions = 0
 
 
 def _trim(cache: OrderedDict, max_size: int, evict_stat: Optional[str]) -> None:
@@ -502,6 +631,23 @@ def compute_cached(cache: OrderedDict, key, max_size: int, build):
         _stats.compute_hits += 1
     else:
         _stats.compute_misses += 1
+    return val
+
+
+def fused_cached(key, build):
+    """LRU get for the fused whole-solve program cache.
+
+    ``build()`` returns the cached value (jitted solve fn + device operands
+    + exchange metadata); hits and misses land under ``fused_hits`` /
+    ``fused_misses`` and trims under ``fused_evictions``, so fused programs
+    participate in the same cache-pressure machinery (:func:`cache_sizes`,
+    :func:`set_cache_limits`) as every other compiled artifact.
+    """
+    val, hit = _lru_get(_FUSED_CACHE, key, FUSED_CACHE_MAX, build, "fused_evictions")
+    if hit:
+        _stats.fused_hits += 1
+    else:
+        _stats.fused_misses += 1
     return val
 
 
@@ -600,44 +746,27 @@ def _executor(
     key = plan_key + (codec, verify, fp) + _mesh_key(mesh)
 
     def build():
-        topo = sp.pattern.topo
-        ops, arrays, w_max = _compile_program(sp)
-        L, out_size = sp.pattern.local_size, sp.out_size
-        checks = tuple(
-            (ordinal, op_index, stage_kind, round_index)
-            for ordinal, op_index, stage_kind, round_index, _, _ in (
-                faults_mod.iter_inter_hops(sp)
-            )
-        )
-        emit = verify and bool(checks)
-        fault_ops: Optional[Dict] = None
-        delay_s = 0.0
-        if faults is not None:
-            cf = faults_mod.compile_faults(sp, codec, faults)
-            delay_s = cf.delay_s
-            grouped: Dict[tuple, list] = {}
-            for inj in cf.injections:
-                grouped.setdefault((inj.op_index, inj.round_index), []).append(
-                    (inj.kind, jnp.asarray(inj.dev_mask), inj.value)
-                )
-            fault_ops = {k: tuple(v) for k, v in grouped.items()} or None
-        specs = (P(WORLD_AXES),) * (1 + len(arrays))
+        # the barrier executor is now just shard_map over the traceable
+        # program value; fused consumers embed tx.run in their own loops
+        tx = traceable_exchange(sp, codec=codec, verify=verify, faults=faults)
+        emit = tx.emit_checks
+        specs = (P(WORLD_AXES),) * (1 + len(tx.plan_arrays))
         out_specs = (P(WORLD_AXES), P(WORLD_AXES)) if emit else P(WORLD_AXES)
 
-        def run(local, *plan_arrays):
-            out, viols = _execute(
-                ops, topo, L, w_max, out_size, local, plan_arrays, codec,
-                verify=emit, fault_ops=fault_ops,
-            )
-            if emit:
-                return out, jnp.stack(viols)[None]
-            return out
+        if emit:
+
+            def run(local, *plan_arrays):
+                out, viols = tx.run_verified(local, *plan_arrays)
+                return out, viols[None]
+
+        else:
+            run = tx.run
 
         fn = jax.jit(
             shard_map(run, mesh=mesh, in_specs=specs, out_specs=out_specs)
         )
-        meta = _ExecMeta(emit_checks=emit, checks=checks, delay_s=delay_s)
-        return fn, tuple(jnp.asarray(a) for a in arrays), meta
+        meta = _ExecMeta(emit_checks=emit, checks=tx.checks, delay_s=tx.delay_s)
+        return fn, tx.plan_arrays, meta
 
     val, hit = _lru_get(_EXEC_CACHE, key, EXEC_CACHE_MAX, build, "exec_evictions")
     if hit:
@@ -839,8 +968,25 @@ class IrregularExchange:
         self._two_phase: Optional[tuple] = None
         self._variants: Dict[tuple, "IrregularExchange"] = {}
         self._calls = 0
+        self._traceable: Optional[TraceableExchange] = None
         #: RecoveryPath.key of the most recent recovered call, or None
         self.last_recovery: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    def traceable(self) -> TraceableExchange:
+        """This exchange as a traceable program value (built lazily, once).
+
+        The returned :class:`TraceableExchange` carries the same plan,
+        codec, verify and fault configuration as this instance, but as a
+        pure per-shard callable + plan-array pytree that callers can close
+        over inside their own jitted programs (the fused solver path).
+        """
+        if self._traceable is None:
+            self._traceable = traceable_exchange(
+                self.plan, codec=self.wire, verify=self.verify,
+                faults=self.faults,
+            )
+        return self._traceable
 
     # ------------------------------------------------------------------
     def __call__(self, local: jax.Array) -> jax.Array:

@@ -31,6 +31,7 @@ from repro.core.hardware import MachineParams, get_machine
 from repro.core.patterns import CommPattern
 from repro.core.perfmodel import (
     WIRE_MODELS,
+    LaunchModel,
     PatternStats,
     Strategy,
     Transport,
@@ -98,6 +99,8 @@ class _StrategyKey:
         base = f"{self.strategy.value}/{self.transport.value}"
         if self.overlap:
             base += "+overlap"
+        if getattr(self, "fused", False):
+            base += "+fused"
         if getattr(self, "wire", "none") != "none":
             base += f"+wire:{self.wire}"
         return base
@@ -290,7 +293,7 @@ def advise_routing(
 
 @dataclasses.dataclass(frozen=True)
 class SolverRecommendation(_StrategyKey):
-    """One (strategy, transport, overlap) variant of a whole solve."""
+    """One (strategy, transport, overlap, fused) variant of a whole solve."""
 
     strategy: Strategy
     transport: Transport
@@ -298,6 +301,12 @@ class SolverRecommendation(_StrategyKey):
     setup_time: float
     iter_time: float
     total_time: float
+    #: True when this entry models the fused whole-solve ``lax.while_loop``
+    #: front-end (one trace+launch up front, zero per-iteration dispatches);
+    #: False covers both the host-driven loop (with per-dispatch launch
+    #: overhead when ``fused=`` ranking is on) and the legacy launch-free
+    #: accounting (``advise_solver(fused=None)``).
+    fused: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -314,16 +323,21 @@ class SolverAdvice:
         return self.ranked[0]
 
     def time_for(
-        self, strategy: Strategy, transport: Transport, overlap: bool = False
+        self,
+        strategy: Strategy,
+        transport: Transport,
+        overlap: bool = False,
+        fused: bool = False,
     ) -> float:
         for r in self.ranked:
             if (
                 r.strategy is strategy
                 and r.transport is transport
                 and r.overlap == overlap
+                and r.fused == fused
             ):
                 return r.total_time
-        raise KeyError((strategy, transport, overlap))
+        raise KeyError((strategy, transport, overlap, fused))
 
     def table(self) -> str:
         w = max(len(r.key) for r in self.ranked)
@@ -344,6 +358,9 @@ def advise_solver(
     compute: Optional[ComputeProfile] = None,
     include_two_step_one: bool = False,
     exclude: Sequence[Tuple[Strategy, Transport]] = (),
+    fused: "bool | str | None" = None,
+    launch: Optional[LaunchModel] = None,
+    matvecs_per_iter: float = 1.0,
 ) -> SolverAdvice:
     """Rank strategies for a whole ``iters``-iteration Krylov solve.
 
@@ -366,6 +383,19 @@ def advise_solver(
       (``reductions_per_iter``: 2 for CG, 6 for BiCGStab --
       :data:`repro.solve.krylov.REDUCTIONS_PER_ITER`).
 
+    ``fused`` brings the execution front-end into the ranking via
+    :class:`~repro.core.perfmodel.LaunchModel` (``launch``, default
+    constants): ``None`` keeps the legacy launch-overhead-free accounting
+    byte-identical; ``False`` / ``True`` model the host-driven loop
+    (``t_launch`` per dispatch,
+    :func:`~repro.core.perfmodel.launches_per_iter` dispatches per
+    iteration) / the fused whole-solve ``lax.while_loop``
+    (:mod:`repro.solve.fused`: one ``t_trace + t_launch`` up front, zero
+    per-iteration dispatches); ``"auto"`` ranks both so short solves keep
+    the host loop and long solves flip to ``+fused`` once the trace cost
+    amortizes.  ``matvecs_per_iter`` follows
+    :data:`repro.solve.krylov.MATVECS_PER_ITER` (1 for CG, 2 for BiCGStab).
+
     Doctest (the amortization flip this function exists for)::
 
         >>> from repro.core import advise_solver, figure43_pattern
@@ -379,6 +409,16 @@ def advise_solver(
         stats = stats.stats()
     if iters < 1:
         raise ValueError(f"iters must be >= 1, got {iters}")
+    if fused is None:
+        fused_variants: Tuple[Optional[bool], ...] = (None,)
+    elif fused == "auto":
+        fused_variants = (False, True)
+    elif isinstance(fused, bool):
+        fused_variants = (fused,)
+    else:
+        raise ValueError(
+            f"fused= must be None, True, False or 'auto', got {fused!r}"
+        )
     m = get_machine(machine) if isinstance(machine, str) else machine
     wide = stats.widened(payload_width)
     recs = []
@@ -392,28 +432,33 @@ def advise_solver(
                 (True, compute.t_interior, compute.t_boundary),
             ]
         for overlap, t_int, t_bnd in variants:
-            setup, per_iter, total = predict_solver(
-                m,
-                strategy,
-                transport,
-                wide,
-                iters,
-                reductions_per_iter=reductions_per_iter,
-                t_interior=t_int,
-                t_boundary=t_bnd,
-                overlap=overlap,
-                setup_stats=stats,
-            )
-            recs.append(
-                SolverRecommendation(
-                    strategy=strategy,
-                    transport=transport,
+            for fv in fused_variants:
+                setup, per_iter, total = predict_solver(
+                    m,
+                    strategy,
+                    transport,
+                    wide,
+                    iters,
+                    reductions_per_iter=reductions_per_iter,
+                    t_interior=t_int,
+                    t_boundary=t_bnd,
                     overlap=overlap,
-                    setup_time=setup,
-                    iter_time=per_iter,
-                    total_time=total,
+                    setup_stats=stats,
+                    fused=fv,
+                    launch=launch,
+                    matvecs_per_iter=matvecs_per_iter,
                 )
-            )
+                recs.append(
+                    SolverRecommendation(
+                        strategy=strategy,
+                        transport=transport,
+                        overlap=overlap,
+                        setup_time=setup,
+                        iter_time=per_iter,
+                        total_time=total,
+                        fused=bool(fv),
+                    )
+                )
     ranked = tuple(sorted(recs, key=lambda r: r.total_time))
     return SolverAdvice(machine=m.name, stats=wide, iters=iters, ranked=ranked)
 

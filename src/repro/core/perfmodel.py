@@ -670,6 +670,50 @@ def predict_reduction(
     return on + off
 
 
+@dataclasses.dataclass(frozen=True)
+class LaunchModel:
+    """Host-side dispatch overheads of an iterative solve.
+
+    The host-driven Krylov loop (:mod:`repro.solve.krylov`) re-enters the
+    runtime several times per iteration -- one jitted dispatch per exchange
+    phase, matvec kernel, and scalar reduction -- and each re-entry costs a
+    fixed host round-trip ``t_launch`` regardless of payload (the classic
+    argument for triggered operations / on-NIC progress in the paper's
+    lineage: move control flow next to the data and the per-message host
+    wake-ups vanish).  The fused whole-solve program
+    (:mod:`repro.solve.fused`) pays instead ONE trace+compile ``t_trace`` at
+    first use plus a single ``t_launch``, after which every iteration runs
+    inside one ``lax.while_loop`` with zero host involvement.
+
+    Attributes:
+      t_launch: per-dispatch host overhead, seconds (Python -> runtime ->
+        device doorbell round-trip; ~tens of microseconds).
+      t_trace: one-time trace + XLA-compile cost of the fused whole-solve
+        program, seconds (amortized by the fused-program cache across
+        solves with the same (pattern, strategy, codec, dtype) key).
+    """
+
+    t_launch: float = 50e-6
+    t_trace: float = 25e-3
+
+
+def launches_per_iter(
+    matvecs_per_iter: float = 1.0,
+    reductions_per_iter: float = 2.0,
+    overlap: bool = False,
+) -> float:
+    """Host dispatches per host-driven solver iteration.
+
+    A barrier matvec is two dispatches (halo exchange program, then the
+    SpMV kernel); a split-phase matvec is five (remote-plan exchange,
+    local-plan exchange, interior SpMV, halo merge, boundary SpMV) -- the
+    overlap that hides wire time on device costs extra host launches.  Every
+    hierarchical dot product is one more jitted collective dispatch.
+    """
+    per_matvec = 5.0 if overlap else 2.0
+    return matvecs_per_iter * per_matvec + reductions_per_iter
+
+
 def predict_solver(
     machine: MachineParams,
     strategy: Strategy,
@@ -681,6 +725,9 @@ def predict_solver(
     t_boundary: float = 0.0,
     overlap: bool = False,
     setup_stats: Optional[PatternStats] = None,
+    fused: Optional[bool] = None,
+    launch: Optional[LaunchModel] = None,
+    matvecs_per_iter: float = 1.0,
 ) -> Tuple[float, float, float]:
     """(setup, per-iteration, total) time of an ``iters``-iteration solve.
 
@@ -689,6 +736,16 @@ def predict_solver(
     :func:`predict_overlapped` (split-phase), and ``setup`` is
     :func:`predict_setup` evaluated on ``setup_stats`` (defaults to
     ``stats``; pass the unwidened stats when ``stats`` is payload-widened).
+
+    ``fused`` selects the execution front-end modeled by ``launch`` (a
+    :class:`LaunchModel`): ``None`` (default) models communication and
+    compute only -- the paper's launch-overhead-free accounting, byte-
+    identical to the pre-fusion model; ``False`` charges the host-driven
+    loop ``t_launch`` per dispatch, :func:`launches_per_iter` dispatches per
+    iteration; ``True`` charges the fused whole-solve program one
+    ``t_trace + t_launch`` up front and nothing per iteration.  The
+    crossover ``iters ~ t_trace / (launches * t_launch)`` is what
+    ``advise_solver(fused="auto")`` exposes.
     """
     if iters < 1:
         raise ValueError(f"iters must be >= 1, got {iters}")
@@ -700,6 +757,14 @@ def predict_solver(
     else:
         step = predict(machine, strategy, transport, stats) + t_interior + t_boundary
     per_iter = step + reductions_per_iter * predict_reduction(machine, stats)
+    if fused is not None:
+        lm = launch if launch is not None else LaunchModel()
+        if fused:
+            setup += lm.t_trace + lm.t_launch
+        else:
+            per_iter += lm.t_launch * launches_per_iter(
+                matvecs_per_iter, reductions_per_iter, overlap
+            )
     return setup, per_iter, setup + iters * per_iter
 
 

@@ -11,6 +11,7 @@ amortization over iterations -- lives in
 :func:`repro.core.advisor.advise_solver`.
 """
 
+from repro.solve.fused import fused_bicgstab, fused_cg
 from repro.solve.krylov import (
     MATVECS_PER_ITER,
     REDUCTIONS_PER_ITER,
@@ -18,12 +19,18 @@ from repro.solve.krylov import (
     bicgstab,
     cg,
 )
-from repro.solve.operator import NumpySpMV, build_numpy
+from repro.solve.operator import (
+    NumpySpMV,
+    TraceableOperator,
+    build_numpy,
+    traceable_operator,
+)
 from repro.solve.problems import shifted_system, spd_system
 from repro.solve.reductions import (
     DeviceReductions,
     NumpyReductions,
     default_reductions,
+    traceable_dot,
 )
 
 __all__ = [
@@ -32,11 +39,16 @@ __all__ = [
     "SolveResult",
     "bicgstab",
     "cg",
+    "fused_bicgstab",
+    "fused_cg",
     "NumpySpMV",
+    "TraceableOperator",
     "build_numpy",
+    "traceable_operator",
     "shifted_system",
     "spd_system",
     "DeviceReductions",
     "NumpyReductions",
     "default_reductions",
+    "traceable_dot",
 ]

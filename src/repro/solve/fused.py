@@ -1,0 +1,474 @@
+"""Whole-solve on-device Krylov: ONE jitted ``lax.while_loop`` per solve.
+
+The host loops in :mod:`repro.solve.krylov` dispatch every matvec, exchange
+and reduction from Python, so at production iteration counts the per-call
+host overhead (``T_launch`` in :mod:`repro.core.perfmodel`) bounds latency
+regardless of the communication strategy.  This module compiles the ENTIRE
+solve -- exchange stages, (masked, possibly split-phase) blocked-ELL SpMV,
+hierarchical dot products, convergence and breakdown control flow -- into a
+single jitted ``shard_map`` program whose iteration is a ``lax.while_loop``
+body: zero host round-trips between iterations, one launch per solve.  This
+is the jax analogue of pre-armed triggered-operation schedules (see
+``docs/paper_mapping.md``).
+
+Building blocks (all pure per-shard callables + operand pytrees):
+
+* :class:`repro.solve.operator.TraceableOperator` -- the matvec
+  (:func:`repro.solve.operator.traceable_operator` lowers either executor
+  flavor; overlap mode expresses the split-phase decomposition inside the
+  loop body);
+* :func:`repro.solve.reductions.traceable_dot` -- the hierarchical
+  reduction tree;
+* :class:`repro.comm.strategies.TraceableExchange` -- the exchange stages
+  (inside the operator).
+
+Semantics mirror the host solvers statement-for-statement -- same breakdown
+guards, stall window, best-iterate tracking and one-restart policy -- except
+that control flow is data: branches become ``jnp.where`` selects and the
+restart re-dispatches the SAME compiled program from the best iterate (the
+program's init section IS the host's true-residual recompute).  Residual
+histories are bitwise identical across strategies and barrier-vs-overlap
+execution on the fused path, and match the host oracle to float32 scalar
+precision (the host accumulates its scalars in float64).
+
+Compiled programs live in the module fused-program cache
+(``repro.comm.cache_stats().fused_*``), keyed by (pattern fingerprint,
+solver, strategy, codec, overlap, kernel flavor, dtype, maxiter, ...): a
+whole solve re-runs with zero plan work and zero retracing, and cache
+pressure behaves like every other compiled artifact
+(:func:`repro.comm.strategies.set_cache_limits`).
+
+``verify=True`` operators carry their wire-integrity checks through the
+loop: per-hop violations accumulate (elementwise max) in the loop carry and
+surface after the solve as the same structured
+:class:`repro.comm.faults.ExchangeIntegrityError` the host path raises.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.comm import strategies as comm_strategies
+from repro.solve.krylov import (
+    STALL_WINDOW,
+    SolveResult,
+    _finish_status,
+    _recovery_baseline,
+)
+from repro.solve.operator import traceable_operator
+from repro.solve.reductions import traceable_dot
+
+# status codes carried through the loop (mapped back to the host solvers'
+# status strings on exit)
+_CONV = 0
+_MAXITER = 1
+_INDEF = 2
+_NONFIN = 3
+_STAG = 4
+_RHO = 5
+_OMEGA = 6
+_DENOM = 7
+_TT = 8
+
+_STATUS_STR = {
+    _CONV: "converged",
+    _MAXITER: "maxiter",
+    _INDEF: "breakdown:indefinite",
+    _NONFIN: "breakdown:nonfinite",
+    _STAG: "stagnation",
+    _RHO: "breakdown:rho",
+    _OMEGA: "breakdown:omega",
+    _DENOM: "breakdown:denom",
+    _TT: "breakdown:tt",
+}
+
+#: statuses that trigger the one-restart-from-best-iterate policy (matching
+#: the host loops: CG restarts only on nonfinite/stagnation -- indefiniteness
+#: ends the solve -- while BiCGStab restarts on every breakdown flavor)
+_RESTART = {
+    "cg": frozenset({_NONFIN, _STAG}),
+    "bicgstab": frozenset({_NONFIN, _STAG, _RHO, _OMEGA, _DENOM, _TT}),
+}
+
+
+def _cg_body(mv, dot, tol, bnorm, hist_len):
+    """The CG iteration as a pure ``lax.while_loop`` body (where-selected
+    control flow; statement-for-statement twin of :func:`...krylov.cg`)."""
+    import jax.numpy as jnp
+
+    def body(c):
+        (x, r, p, rs, best, best_x, best_it, it, k, hist, status, done,
+         mvc, viols) = c
+        Ap, vv = mv(p)
+        mvc = mvc + 1
+        viols = jnp.maximum(viols, vv) if vv.size else viols
+        pAp = dot(p, Ap)
+        indef = pAp <= 0.0
+        alpha = rs / jnp.where(indef, jnp.ones_like(pAp), pAp)
+        x1 = x + alpha * p
+        r1 = r - alpha * Ap
+        rs_new = dot(r1, r1)
+        relres = jnp.sqrt(jnp.maximum(rs_new, 0.0)) / bnorm
+        it1 = jnp.where(indef, it, it + 1)
+        conv = (~indef) & (relres <= tol)
+        improved = (~indef) & (~conv) & (relres < best)
+        best1 = jnp.where(improved, relres, best)
+        best_x1 = jnp.where(improved, x1, best_x)
+        best_it1 = jnp.where(improved, it1, best_it)
+        nonfin = (~indef) & (~conv) & (~jnp.isfinite(relres))
+        stall = (~indef) & (~conv) & (~nonfin) & (
+            it1 - best_it1 >= STALL_WINDOW
+        )
+        done1 = indef | conv | nonfin | stall
+        status1 = jnp.where(
+            indef, _INDEF,
+            jnp.where(conv, _CONV,
+                      jnp.where(nonfin, _NONFIN,
+                                jnp.where(stall, _STAG, _MAXITER))),
+        ).astype(jnp.int32)
+        hist1 = jnp.where(indef, hist, hist.at[k].set(relres))
+        k1 = jnp.where(indef, k, k + 1)
+        x2 = jnp.where(indef, x, x1)
+        r2 = jnp.where(indef, r, r1)
+        # the search direction only matters on the continue path
+        cont = ~done1
+        p1 = jnp.where(cont, r1 + (rs_new / rs) * p, p)
+        rs1 = jnp.where(cont, rs_new, rs)
+        return (x2, r2, p1, rs1, best1, best_x1, best_it1, it1, k1, hist1,
+                status1, done1, mvc, viols)
+
+    return body
+
+
+def _bicgstab_body(mv, dot, tol, bnorm, rhat, rhat_nrm, eps, hist_len):
+    """The BiCGStab iteration as a pure loop body (twin of
+    :func:`...krylov.bicgstab`; ``rhat`` is fixed per dispatch, a restart is
+    a fresh dispatch)."""
+    import jax.numpy as jnp
+
+    def nz(a):
+        return jnp.where(a == 0, jnp.ones_like(a), a)
+
+    def body(c):
+        (x, r, p, v, rho, alpha, omega, relprev, best, best_x, best_it, it,
+         k, hist, status, done, mvc, viols) = c
+        rho_new = dot(rhat, r)
+        r_nrm = relprev * bnorm
+        bad_rho = jnp.abs(rho_new) <= eps * rhat_nrm * r_nrm
+        bad_omega = (~bad_rho) & (jnp.abs(omega) <= eps * jnp.abs(alpha))
+        ok1 = (~bad_rho) & (~bad_omega)
+        beta = (rho_new / nz(rho)) * (alpha / nz(omega))
+        p1 = jnp.where(ok1, r + beta * (p - omega * v), p)
+        v1m, vva = mv(p1)
+        v1 = jnp.where(ok1, v1m, v)
+        denom = dot(rhat, v1m)
+        bad_denom = ok1 & (jnp.abs(denom) <= eps * jnp.abs(rho_new))
+        ok2 = ok1 & (~bad_denom)
+        alpha1 = jnp.where(ok2, rho_new / nz(denom), alpha)
+        s = jnp.where(ok2, r - alpha1 * v1m, r)
+        it1 = jnp.where(ok2, it + 1, it)
+        snorm = jnp.sqrt(jnp.maximum(dot(s, s), 0.0))
+        rel_s = snorm / bnorm
+        s_conv = ok2 & (rel_s <= tol)
+        t1, vvb = mv(s)
+        tt = dot(t1, t1)
+        bad_tt = ok2 & (~s_conv) & (tt <= (eps * snorm) ** 2)
+        ok3 = ok2 & (~s_conv) & (~bad_tt)
+        omega1 = jnp.where(ok3, dot(t1, s) / nz(tt), omega)
+        x_sc = x + alpha1 * p1
+        x1 = x_sc + omega1 * s
+        r1 = s - omega1 * t1
+        relres = jnp.sqrt(jnp.maximum(dot(r1, r1), 0.0)) / bnorm
+        conv = ok3 & (relres <= tol)
+        improved = ok3 & (~conv) & (relres < best)
+        best1 = jnp.where(improved, relres, best)
+        best_x1 = jnp.where(improved, x1, best_x)
+        best_it1 = jnp.where(improved, it1, best_it)
+        nonfin = ok3 & (~conv) & (~jnp.isfinite(relres))
+        stall = ok3 & (~conv) & (~nonfin) & (it1 - best_it1 >= STALL_WINDOW)
+        done1 = (
+            bad_rho | bad_omega | bad_denom | s_conv | bad_tt | conv
+            | nonfin | stall
+        )
+        status1 = jnp.where(
+            bad_rho, _RHO,
+            jnp.where(bad_omega, _OMEGA,
+            jnp.where(bad_denom, _DENOM,
+            jnp.where(s_conv, _CONV,
+            jnp.where(bad_tt, _TT,
+            jnp.where(conv, _CONV,
+            jnp.where(nonfin, _NONFIN,
+            jnp.where(stall, _STAG, _MAXITER))))))),
+        ).astype(jnp.int32)
+        # a history entry lands only on the paths the host appends on: the
+        # half-step convergence exit and the full step (step 8)
+        wrote = s_conv | ok3
+        hist_val = jnp.where(s_conv, rel_s, relres)
+        hist1 = jnp.where(wrote, hist.at[k].set(hist_val), hist)
+        k1 = jnp.where(wrote, k + 1, k)
+        relprev1 = jnp.where(wrote, hist_val, relprev)
+        x2 = jnp.where(s_conv, x_sc, jnp.where(ok3, x1, x))
+        r2 = jnp.where(ok3, r1, r)
+        p2 = jnp.where(ok1, p1, p)
+        rho1 = jnp.where(ok3, rho_new, rho)
+        # matvec count matches the host's early-out structure per path
+        mvc = mvc + ok1.astype(jnp.int32) + (ok2 & ~s_conv).astype(jnp.int32)
+        vv = jnp.maximum(vva, vvb)
+        viols = jnp.maximum(viols, vv) if vv.size else viols
+        return (x2, r2, p2, v1, rho1, alpha1, omega1, relprev1, best1,
+                best_x1, best_it1, it1, k1, hist1, status1, done1, mvc,
+                viols)
+
+    return body
+
+
+def _build_fused(top, shard_dot, solver: str, hist_len: int, eps: float,
+                 nviol: int):
+    """Compile ONE jitted shard_map program: init + ``lax.while_loop``.
+
+    Signature (all device inputs ``[nranks, ...]`` under ``P(WORLD_AXES)``):
+    ``fn(b, x0, tol[g,1], max_it[g,1], *operands)``.  The iteration cap is a
+    TRACED scalar -- only the history buffer length is static -- so a restart
+    re-dispatch with the remaining budget reuses the same executable.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm.topology import WORLD_AXES
+    from repro.compat import shard_map
+
+    def program(b, x0, tolt, maxitt, *ops):
+        tol = tolt[0, 0]
+        max_it = maxitt[0, 0]
+        fdt = b.dtype
+
+        def mv(vec):
+            w, vv = top.matvec_verified(vec, *ops)
+            return w, vv
+
+        def dot(u, w):
+            return shard_dot(u, w)
+
+        one = jnp.asarray(1.0, fdt)
+        Ax, vv0 = mv(x0)
+        r = b - Ax
+        bnorm = jnp.sqrt(jnp.maximum(dot(b, b), 0.0))
+        rs = dot(r, r)
+        rel0 = jnp.sqrt(jnp.maximum(rs, 0.0)) / bnorm
+        hist = jnp.full((hist_len,), jnp.nan, fdt).at[0].set(rel0)
+        viols = jnp.zeros((nviol,), jnp.float32)
+        if vv0.size:
+            viols = jnp.maximum(viols, vv0)
+        done0 = rel0 <= tol
+        status0 = jnp.where(done0, _CONV, _MAXITER).astype(jnp.int32)
+        i0 = jnp.int32(0)
+        k0 = jnp.int32(1)
+        mv0 = jnp.int32(1)
+
+        if solver == "cg":
+            body = _cg_body(mv, dot, tol, bnorm, hist_len)
+            #        x,  r, p, rs, best, best_x, best_it, it, k
+            carry = (x0, r, r, rs, rel0, x0, i0, i0, k0, hist, status0,
+                     done0, mv0, viols)
+            best_x_idx, it_idx = 5, 7
+            k_idx, st_idx, done_idx, mv_idx, viol_idx = 8, 10, 11, 12, 13
+        else:
+            body = _bicgstab_body(
+                mv, dot, tol, bnorm, r, rel0 * bnorm,
+                jnp.asarray(eps, fdt), hist_len,
+            )
+            zero = jnp.zeros_like(b)
+            #        x,  r, p,    v,    rho, alpha, omega, relprev, best,
+            #        best_x, best_it, it, k
+            carry = (x0, r, zero, zero, one, one, one, rel0, rel0, x0, i0,
+                     i0, k0, hist, status0, done0, mv0, viols)
+            best_x_idx, it_idx = 9, 11
+            k_idx, st_idx, done_idx, mv_idx, viol_idx = 12, 14, 15, 16, 17
+
+        def cond(c):
+            return (~c[done_idx]) & (c[it_idx] < max_it)
+
+        out = jax.lax.while_loop(cond, body, carry)
+
+        def tile(a, dt):
+            return jnp.reshape(a.astype(dt), (1, 1))
+
+        return (
+            out[0],                                 # x        [1, L]
+            out[best_x_idx],                        # best_x   [1, L]
+            out[k_idx + 1][None],                   # hist     [1, hist_len]
+            tile(out[it_idx], jnp.int32),           # it       [1, 1]
+            tile(out[k_idx], jnp.int32),            # entries  [1, 1]
+            tile(out[st_idx], jnp.int32),           # status   [1, 1]
+            tile(out[mv_idx], jnp.int32),           # matvecs  [1, 1]
+            out[viol_idx][None],                    # viols    [1, nviol]
+        )
+
+    n_in = 4 + len(top.operands)
+    return jax.jit(
+        shard_map(
+            program,
+            mesh=top.mesh,
+            in_specs=(P(WORLD_AXES),) * n_in,
+            out_specs=(P(WORLD_AXES),) * 8,
+            check_vma=False,
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host wrapper: cache, dispatch, restart policy, SolveResult assembly
+# ---------------------------------------------------------------------------
+
+
+def _fused_entry(op, solver: str, maxiter: int, dtype, compressor):
+    """Fetch (or build) the compiled whole-solve program for ``op``.
+
+    The key is derived from the operator's configuration alone -- the
+    expensive lowering (:func:`traceable_operator`: device transfer of plan
+    arrays, blocks, masks) runs only on a miss.
+    """
+    faults = getattr(op, "faults", None)
+    mesh = getattr(op, "mesh", None)
+    mesh_key = comm_strategies._mesh_key(mesh) if mesh is not None else None
+    key = (
+        "fused", solver, op.partition.pattern.fingerprint(), op.strategy,
+        op.wire, bool(op.overlap), bool(getattr(op, "use_pallas", False)),
+        bool(getattr(op, "verify", False)),
+        faults.fingerprint() if faults is not None else None,
+        op.message_cap_bytes, mesh_key, int(maxiter), str(dtype),
+        None if compressor is None else str(compressor),
+    )
+
+    def build():
+        top = traceable_operator(op)
+        shard_dot = traceable_dot(compressor)
+        nviol = len(top.verifier.checks) if top.verifier is not None else 1
+        eps = float(np.finfo(dtype).eps)
+        hist_len = int(maxiter) + 1
+        fn = _build_fused(top, shard_dot, solver, hist_len, eps, nviol)
+        return fn, top
+
+    return comm_strategies.fused_cached(key, build)
+
+
+def _dispatch(fn, top, b_dev, x0_dev, tol: float, max_it: int, dtype):
+    import jax.numpy as jnp
+
+    g = top.topo.nranks
+    tolt = jnp.full((g, 1), tol, dtype)
+    maxitt = jnp.full((g, 1), max_it, jnp.int32)
+    outs = fn(b_dev, x0_dev, tolt, maxitt, *top.operands)
+    x, best_x, hist, it, k, status, mvc, viols = outs
+    if top.verifier is not None:
+        top.verifier.raise_viols(np.asarray(viols))
+    k = int(np.asarray(k)[0, 0])
+    return (
+        x,
+        best_x,
+        [float(h) for h in np.asarray(hist)[0, :k]],
+        int(np.asarray(it)[0, 0]),
+        int(np.asarray(status)[0, 0]),
+        int(np.asarray(mvc)[0, 0]),
+    )
+
+
+def _fused_solve(op, b, x0, tol: float, maxiter: int, reductions,
+                 solver: str) -> SolveResult:
+    import jax.numpy as jnp
+
+    compressor = getattr(reductions, "compressor", None)
+    b = np.asarray(b)
+    g, L = op.topo.nranks, op.rows_per_rank
+    if b.shape != (g, L):
+        raise ValueError(f"b must be [{g}, {L}], got {tuple(b.shape)}")
+    rc0 = _recovery_baseline(op)
+    if not np.any(b):
+        # mirror the host solvers' zero-rhs early return (same
+        # _finish_status routing)
+        return SolveResult(x=np.zeros_like(b), converged=True, iterations=0,
+                           residuals=(0.0,), matvecs=0,
+                           status=_finish_status("converged", 0, op, rc0))
+    dtype = b.dtype
+    fn, top = _fused_entry(op, solver, maxiter, dtype, compressor)
+    b_dev = jnp.asarray(b)
+    x0_arr = (
+        np.zeros_like(b) if x0 is None
+        else np.array(x0, dtype=dtype, copy=True)
+    )
+    # the program always runs the init matvec (for x0=0 it computes
+    # b - A@0 = b exactly); the host loops only count it when x0 is given
+    init_mv_adjust = 1 if x0 is None else 0
+
+    x, best_x, hist, it, status, mvc, = _dispatch(
+        fn, top, b_dev, jnp.asarray(x0_arr), tol, maxiter, dtype
+    )
+    restarts = 0
+    matvecs = mvc - init_mv_adjust
+    if status in _RESTART[solver]:
+        bad = _STATUS_STR[status]
+        restarts = 1
+        # one restart from the best iterate: the program's init section IS
+        # the host's true-residual recompute (r = b - A x_best), and its
+        # hist[0] is the host's restart history entry
+        x, _, hist2, it2, status2, mvc2 = _dispatch(
+            fn, top, b_dev, best_x, tol, maxiter - it, dtype
+        )
+        hist = hist + hist2
+        it = it + it2
+        matvecs += mvc2
+        if not np.isfinite(hist2[0]):
+            # the host checks the recomputed residual before re-entering
+            # the loop; keep the original breakdown reason
+            status_str, converged = bad, False
+        elif status2 == _CONV:
+            status_str, converged = "converged", True
+        elif status2 == _MAXITER:
+            status_str, converged = "maxiter", False
+        else:
+            # second trip ends the solve with the new reason (no re-restart)
+            status_str, converged = _STATUS_STR[status2], False
+    else:
+        status_str = _STATUS_STR[status]
+        converged = status == _CONV
+
+    return SolveResult(
+        x=np.asarray(x),
+        converged=converged,
+        iterations=it,
+        residuals=tuple(hist),
+        matvecs=matvecs,
+        status=_finish_status(status_str, restarts, op, rc0),
+        restarts=restarts,
+    )
+
+
+def fused_cg(op, b, x0=None, tol: float = 1e-6, maxiter: int = 500,
+             reductions=None) -> SolveResult:
+    """Whole-solve CG: one jitted ``lax.while_loop`` per solve.
+
+    Drop-in for :func:`repro.solve.krylov.cg` (same contract, same
+    ``SolveResult`` fields); ``op`` may be either executor flavor.  The
+    compiled program is cached per (pattern, strategy, codec, overlap,
+    kernel flavor, dtype, maxiter) -- see ``repro.comm.cache_stats()``.
+    ``reductions`` only contributes its inter-pod compressor (the
+    hierarchical tree itself is traced inline); pass the
+    :class:`~repro.solve.reductions.DeviceReductions` you would hand the
+    host loop.
+    """
+    return _fused_solve(op, b, x0, tol, maxiter, reductions, "cg")
+
+
+def fused_bicgstab(op, b, x0=None, tol: float = 1e-6, maxiter: int = 500,
+                   reductions=None) -> SolveResult:
+    """Whole-solve BiCGStab: one jitted ``lax.while_loop`` per solve.
+
+    Drop-in for :func:`repro.solve.krylov.bicgstab`; see :func:`fused_cg`.
+    """
+    return _fused_solve(op, b, x0, tol, maxiter, reductions, "bicgstab")
+
+
+FUSED_SOLVERS = {"cg": fused_cg, "bicgstab": fused_bicgstab}

@@ -132,8 +132,11 @@ def cg(
     red, b, x, bnorm = _prepare(op, b, x0, reductions)
     rc0 = _recovery_baseline(op)
     if bnorm == 0.0:
+        # route through _finish_status like every other exit path, so the
+        # recovery-suffix contract holds for trivial solves too
         return SolveResult(x=np.zeros_like(b), converged=True, iterations=0,
-                           residuals=(0.0,), matvecs=0)
+                           residuals=(0.0,), matvecs=0,
+                           status=_finish_status("converged", 0, op, rc0))
     matvecs = 0
     if x0 is None:
         r = b.copy()
@@ -228,8 +231,11 @@ def bicgstab(
     red, b, x, bnorm = _prepare(op, b, x0, reductions)
     rc0 = _recovery_baseline(op)
     if bnorm == 0.0:
+        # route through _finish_status like every other exit path, so the
+        # recovery-suffix contract holds for trivial solves too
         return SolveResult(x=np.zeros_like(b), converged=True, iterations=0,
-                           residuals=(0.0,), matvecs=0)
+                           residuals=(0.0,), matvecs=0,
+                           status=_finish_status("converged", 0, op, rc0))
     eps = float(np.finfo(b.dtype).eps)
     matvecs = 0
     if x0 is None:

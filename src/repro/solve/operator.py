@@ -210,3 +210,225 @@ def build_numpy(matrix, topo: PodTopology, strategy: str = "standard", **kw) -> 
     from repro.sparse.partition import partition_csr
 
     return NumpySpMV(partition_csr(matrix, topo), strategy=strategy, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Traceable operator (whole-solve fusion support)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class TraceableOperator:
+    """A distributed SpMV as a pure per-shard callable + operand pytree.
+
+    The matvec analogue of :class:`repro.comm.strategies.TraceableExchange`:
+    :attr:`operands` is a flat tuple of ``[nranks, ...]`` device arrays
+    (exchange plan arrays, split-phase merge maps, blocked-ELL data/cols,
+    overlap phase masks) that a caller threads through its own ``shard_map``
+    input specs, and :meth:`matvec` is the pure per-shard
+    ``v [1, L] -> w [1, L]`` program -- exchange stages, (masked) blocked-ELL
+    contraction and, under ``overlap``, the split-phase decomposition, all
+    expressed inline so the whole matvec can live inside a traced loop body
+    (:mod:`repro.solve.fused`).
+
+    Build with :func:`traceable_operator` from either executor flavor
+    (:class:`repro.sparse.spmv.DistributedSpMV` or :class:`NumpySpMV`).
+    """
+
+    topo: PodTopology
+    local_size: int
+    overlap: bool
+    use_pallas: bool
+    mesh: object
+    #: barrier path: the unsplit exchange (``None`` under ``overlap``)
+    exchange: Optional[object]
+    #: overlap path: inter-pod + on-pod sub-exchanges (``None`` otherwise)
+    remote: Optional[object]
+    local: Optional[object]
+    #: flat ``[nranks, ...]`` device arrays; feed each through a
+    #: ``P(WORLD_AXES)`` spec and pass the per-shard slices to :meth:`matvec`
+    operands: tuple
+    #: static operand layout: plan-array counts of the (remote) exchange and
+    #: the on-pod exchange (0 in barrier mode)
+    n_exchange_ops: int
+    n_local_ops: int
+
+    @property
+    def verifier(self):
+        """The exchange whose integrity checks guard this operator (the
+        unsplit plan in barrier mode, the inter-pod sub-plan under overlap),
+        or ``None`` when no DCI hop is checked."""
+        tx = self.exchange if not self.overlap else self.remote
+        return tx if (tx is not None and tx.emit_checks) else None
+
+    # -- per-shard kernels ---------------------------------------------
+    def _full(self, data, cols, x):
+        if self.use_pallas:
+            from repro.kernels.spmv_ell import spmv_ell
+
+            return spmv_ell(data, cols, x, interpret=True)
+        from repro.kernels import ref as kref
+
+        return kref.spmv_ell(data, cols, x)
+
+    def _masked(self, data, cols, x, tiles, rows):
+        if self.use_pallas:
+            from repro.kernels.spmv_ell import spmv_ell
+
+            return spmv_ell(data, cols, x, interpret=True, tile_mask=tiles)
+        from repro.kernels import ref as kref
+
+        return kref.spmv_ell_masked(data, cols, x, rows)
+
+    # ------------------------------------------------------------------
+    def matvec(self, v, *operands):
+        """Pure per-shard matvec: ``v [1, L] -> w [1, L]``."""
+        w, _ = self._apply(v, operands, verified=False)
+        return w
+
+    def matvec_verified(self, v, *operands):
+        """Like :meth:`matvec` but also returns the ``[n_checks]`` wire
+        integrity violation vector of the DCI-crossing exchange (empty when
+        nothing is checked); surface positives via
+        ``self.verifier.raise_viols``."""
+        return self._apply(v, operands, verified=True)
+
+    def _apply(self, v, operands, verified: bool):
+        import jax.numpy as jnp
+
+        k = self.n_exchange_ops
+        if not self.overlap:
+            pa, (dd, dc, od, oc) = operands[:k], operands[k:]
+            halo, viols = self._run_exchange(self.exchange, v, pa, verified)
+            w = self._full(dd[0], dc[0], v[0]) + self._full(od[0], oc[0], halo[0])
+            return w[None], viols
+        rpa = operands[:k]
+        lpa = operands[k : k + self.n_local_ops]
+        (
+            mask, valid, li, ri, dd, dc, od, oc,
+            all_tiles, all_rows, bnd_tiles, bnd_rows,
+        ) = operands[k + self.n_local_ops :]
+        # split-phase decomposition in-body: the inter-pod sub-exchange and
+        # the halo-independent diag pass carry no data dependency, so XLA is
+        # free to overlap them; the boundary-masked off pass waits on the
+        # merged halo exactly like the host pipeline's finish()
+        remote_out, viols = self._run_exchange(self.remote, v, rpa, verified)
+        local_out = self.local.run(v, *lpa)
+        halo = _merge_shard(mask, valid, li, ri, local_out, remote_out)
+        w = self._masked(dd[0], dc[0], v[0], all_tiles[0], all_rows[0])
+        w = w + self._masked(od[0], oc[0], halo[0], bnd_tiles[0], bnd_rows[0])
+        return w[None], viols
+
+    @staticmethod
+    def _run_exchange(tx, v, plan_arrays, verified: bool):
+        import jax.numpy as jnp
+
+        if verified and tx.emit_checks:
+            return tx.run_verified(v, *plan_arrays)
+        return tx.run(v, *plan_arrays), jnp.zeros((0,), jnp.float32)
+
+
+def _merge_shard(mask, valid, li, ri, local_out, remote_out):
+    """Per-shard split-phase merge -- the ``[1, H]``-sliced twin of
+    :func:`repro.comm.strategies._build_merge`'s jitted gather."""
+    import jax.numpy as jnp
+
+    nfeat = local_out.ndim - 2
+
+    def take(buf, idx):
+        idx = jnp.minimum(idx, buf.shape[1] - 1)
+        idx = idx.reshape(idx.shape + (1,) * nfeat)
+        idx = jnp.broadcast_to(idx, idx.shape[:2] + buf.shape[2:])
+        return jnp.take_along_axis(buf, idx, axis=1)
+
+    m = mask.reshape(mask.shape + (1,) * nfeat)
+    v = valid.reshape(valid.shape + (1,) * nfeat)
+    lo = take(local_out, li)
+    merged = jnp.where(m, lo, take(remote_out, ri))
+    return jnp.where(v, merged, jnp.zeros_like(lo))
+
+
+def traceable_operator(op) -> TraceableOperator:
+    """Lower either SpMV executor flavor to its traceable program value.
+
+    Accepts a :class:`repro.sparse.spmv.DistributedSpMV` (reusing its plans,
+    mesh, device blocks and kernel flavor) or a :class:`NumpySpMV` (blocks
+    are transferred, the jnp-oracle kernels are used, and the mesh is the
+    default exchange mesh).  Plans come from the same module caches as the
+    host executors, so lowering an already-constructed operator re-plans
+    nothing.
+    """
+    import jax.numpy as jnp
+
+    from repro.comm.strategies import _default_mesh, traceable_exchange
+    from repro.core.split_plan import split_rows
+    from repro.kernels.spmv_ell import TILE_R
+
+    part = op.partition
+    topo, L = part.topo, part.rows_per_rank
+    g = topo.nranks
+    is_device = hasattr(op, "use_pallas")
+    use_pallas = bool(getattr(op, "use_pallas", False))
+    mesh = getattr(op, "mesh", None) or _default_mesh(topo)
+    wire = op.wire
+    verify = getattr(op, "verify", False)
+    faults = getattr(op, "faults", None)
+
+    if is_device:
+        blocks = op._blocks
+    else:
+        blocks = tuple(
+            jnp.asarray(a)
+            for a in (op._diag_d, op._diag_c, op._off_d, op._off_c)
+        )
+
+    if not op.overlap:
+        if is_device:
+            tx = op.exchange.traceable()
+        else:
+            tx = traceable_exchange(op._plan, codec=wire, verify=verify,
+                                    faults=faults)
+        return TraceableOperator(
+            topo=topo, local_size=L, overlap=False, use_pallas=use_pallas,
+            mesh=mesh, exchange=tx, remote=None, local=None,
+            operands=tx.plan_arrays + blocks,
+            n_exchange_ops=len(tx.plan_arrays), n_local_ops=0,
+        )
+
+    sp, _ = comm_strategies._split_phase_cached(part.pattern)
+    remote_plan = comm_strategies.planned(
+        sp.remote, op.strategy, message_cap_bytes=op.message_cap_bytes,
+        fuse_program=getattr(op, "fuse_program", True),
+    )
+    local_plan = comm_strategies.planned(
+        sp.local, "local", fuse_program=getattr(op, "fuse_program", True)
+    )
+    tx_remote = traceable_exchange(remote_plan, codec=wire, verify=verify,
+                                   faults=faults)
+    tx_local = traceable_exchange(local_plan)
+    merge_ops = (
+        jnp.asarray(sp.from_local),
+        jnp.asarray(sp.valid),
+        jnp.asarray(sp.local_idx),
+        jnp.asarray(sp.remote_idx),
+    )
+    halo_dep = part.off_row_nnz.reshape(g, L) > 0
+    split = split_rows(halo_dep, TILE_R)
+    bnd = split.boundary_tiles
+    bnd_rows = np.repeat(bnd, split.tile_rows, axis=1)[:, :L]
+    masks = (
+        jnp.ones(bnd.shape, np.int32),
+        jnp.ones((g, L), bool),
+        jnp.asarray(bnd.astype(np.int32)),
+        jnp.asarray(bnd_rows),
+    )
+    return TraceableOperator(
+        topo=topo, local_size=L, overlap=True, use_pallas=use_pallas,
+        mesh=mesh, exchange=None, remote=tx_remote, local=tx_local,
+        operands=(
+            tx_remote.plan_arrays + tx_local.plan_arrays + merge_ops
+            + blocks + masks
+        ),
+        n_exchange_ops=len(tx_remote.plan_arrays),
+        n_local_ops=len(tx_local.plan_arrays),
+    )

@@ -51,6 +51,24 @@ class NumpyReductions:
         return float(np.sqrt(max(self.dot(x, x), 0.0)))
 
 
+def traceable_dot(compressor: Optional[compression.Compressor] = None):
+    """Per-shard hierarchical dot product for embedding in traced programs.
+
+    Returns a pure callable ``dot(x, y) -> scalar`` over per-shard ``[1, L]``
+    operands -- the exact reduction tree :class:`DeviceReductions` wraps in
+    its own ``shard_map`` (rank partial, on-pod ``psum``, one inter-pod hop,
+    optionally int8-compressed), but exposed raw so a fused solver can call
+    it inside a ``lax.while_loop`` body without leaving the trace.  The
+    result is replicated across shards.
+    """
+    from repro.comm.hierarchical import dot_hierarchical
+
+    def dot(x, y):
+        return dot_hierarchical(x[0], y[0], POD_AXIS, LOCAL_AXIS, compressor)
+
+    return dot
+
+
 class DeviceReductions:
     """Hierarchical dot products as a jitted ``shard_map`` collective.
 
@@ -74,17 +92,16 @@ class DeviceReductions:
         import jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
 
-        from repro.comm.hierarchical import dot_hierarchical
         from repro.comm.strategies import _default_mesh
         from repro.compat import shard_map
 
         self.topo = topo
         self.mesh = mesh if mesh is not None else _default_mesh(topo)
         self.compressor = compressor
+        shard_dot = traceable_dot(compressor)
 
         def body(x, y):
-            d = dot_hierarchical(x[0], y[0], POD_AXIS, LOCAL_AXIS, compressor)
-            return jnp.reshape(d, (1, 1))
+            return jnp.reshape(shard_dot(x, y), (1, 1))
 
         self._fn = jax.jit(
             shard_map(
@@ -102,6 +119,11 @@ class DeviceReductions:
 
     def norm(self, x) -> float:
         return float(np.sqrt(max(self.dot(x, x), 0.0)))
+
+    def traceable(self):
+        """This backend's reduction tree as a pure per-shard callable
+        (:func:`traceable_dot` with the same compressor)."""
+        return traceable_dot(self.compressor)
 
 
 def default_reductions(op) -> "NumpyReductions | DeviceReductions":

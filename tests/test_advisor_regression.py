@@ -389,6 +389,123 @@ def test_solver_overlap_advised_pinned(machine, scenario, mult, frac, iters, exp
     )
 
 
+# ---------------------------------------------------------------------------
+# Fused-front-end crossovers (whole-solve lax.while_loop, PR 9)
+# ---------------------------------------------------------------------------
+
+#: (machine, scenario, k, iters, reductions/iter, matvecs/iter) -> advised
+#: key with fused="auto".  The intended physics: the fused whole-solve
+#: program trades t_trace up front for zero per-iteration host dispatches,
+#: so short solves keep the host-driven loop and long solves flip to
+#: ``+fused`` around iters ~ t_trace / (launches_per_iter * t_launch)
+#: (~125 for CG's 4 dispatches/iter, earlier for BiCGStab's 10).  Recorded
+#: from the models at pin time; a change here is a deliberate model change,
+#: not noise.
+FUSED_PINS = [
+    # CG accounting (1 matvec, 2 reductions): host loop wins until the trace
+    # cost amortizes at a few hundred iterations.
+    ("lassen", (2048, 256, 16), 1, 5, 2.0, 1.0, "two_step/device_aware"),
+    ("lassen", (2048, 256, 16), 1, 100, 2.0, 1.0, "two_step/device_aware"),
+    ("lassen", (2048, 256, 16), 1, 400, 2.0, 1.0, "two_step/device_aware+fused"),
+    ("lassen", (2048, 256, 16), 1, 500, 2.0, 1.0, "two_step/device_aware+fused"),
+    # BiCGStab accounting (2 matvecs, 6 reductions): 10 dispatches/iter pull
+    # the crossover earlier.
+    ("lassen", (2048, 256, 16), 1, 50, 6.0, 2.0, "two_step/device_aware"),
+    ("lassen", (2048, 256, 16), 1, 100, 6.0, 2.0, "two_step/device_aware+fused"),
+    # tpu, widened rendezvous payload: the strategy flip (standard -> Split)
+    # and the front-end flip (host -> fused) happen at different horizons.
+    ("tpu_v5e_pod", (65536, 32, 4), 4, 10, 2.0, 1.0, "standard/staged_host"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, 100, 2.0, 1.0, "split_dd/staged_host"),
+    ("tpu_v5e_pod", (65536, 32, 4), 4, 500, 2.0, 1.0, "split_dd/staged_host+fused"),
+]
+
+
+@pytest.mark.parametrize("machine,scenario,k,iters,red,mvs,expected", FUSED_PINS)
+def test_fused_advised_strategy_pinned(machine, scenario, k, iters, red, mvs, expected):
+    pat = figure43_pattern(*scenario)
+    adv = advise_solver(
+        pat, iters, machine=machine, payload_width=k, fused="auto",
+        reductions_per_iter=red, matvecs_per_iter=mvs,
+    )
+    assert adv.best.key == expected, (
+        f"fused advisor drift for {machine}/{scenario}/k={k}/iters={iters}: "
+        f"got {adv.best.key}, pinned {expected}"
+    )
+
+
+def test_fused_pins_flip_with_iters():
+    """Each fused-pin scenario must flip to +fused as iters grows -- the
+    T_launch amortization the LaunchModel exists to capture."""
+    seen = {}
+    flips = 0
+    for machine, scenario, k, iters, red, mvs, expected in FUSED_PINS:
+        prev = seen.setdefault((machine, scenario, k, red), expected)
+        if prev != expected:
+            flips += 1
+    assert flips >= 3
+    assert any(p[6].endswith("+fused") for p in FUSED_PINS)
+    assert any(not p[6].endswith("+fused") for p in FUSED_PINS)
+
+
+def test_fused_none_keeps_legacy_ranking():
+    """advise_solver(fused=None) (the default) must stay byte-identical to
+    the pre-LaunchModel behavior: no +fused keys, fused flags all False,
+    and totals exactly matching predict_solver without launch terms."""
+    pat = figure43_pattern(2048, 256, 16)
+    adv = advise_solver(pat, 100, machine="lassen")
+    assert all(not r.fused for r in adv.ranked)
+    assert all("+fused" not in r.key for r in adv.ranked)
+    m = get_machine("lassen")
+    stats = pat.stats()
+    ref = predict_solver(m, Strategy.TWO_STEP, Transport.DEVICE_AWARE, stats, 100)
+    assert adv.time_for(Strategy.TWO_STEP, Transport.DEVICE_AWARE) == pytest.approx(
+        ref[2], rel=1e-12
+    )
+
+
+def test_fused_auto_ranks_both_front_ends():
+    """fused="auto" doubles the ranking: every (strategy, transport) pair
+    appears as host and +fused, the fused variant paying more setup and
+    strictly less per-iteration time."""
+    pat = figure43_pattern(2048, 256, 16)
+    base = advise_solver(pat, 100, machine="lassen")
+    adv = advise_solver(pat, 100, machine="lassen", fused="auto")
+    assert len(adv.ranked) == 2 * len(base.ranked)
+    host = {(r.strategy, r.transport): r for r in adv.ranked if not r.fused}
+    fused = {(r.strategy, r.transport): r for r in adv.ranked if r.fused}
+    assert set(host) == set(fused)
+    for pair, h in host.items():
+        f = fused[pair]
+        assert f.setup_time > h.setup_time
+        assert f.iter_time < h.iter_time
+        assert f.key == h.key + "+fused"
+
+
+def test_launch_model_terms():
+    """predict_solver's launch accounting: fused=False adds exactly
+    t_launch * launches_per_iter to per_iter; fused=True adds exactly
+    t_trace + t_launch to setup; fused=None adds nothing."""
+    from repro.core import LaunchModel, launches_per_iter
+
+    m = get_machine("lassen")
+    stats = figure43_pattern(2048, 256, 16).stats()
+    lm = LaunchModel(t_launch=1e-4, t_trace=1e-2)
+    args = (m, Strategy.TWO_STEP, Transport.DEVICE_AWARE, stats)
+    s0, p0, t0 = predict_solver(*args, iters=50)
+    sh, ph, th = predict_solver(*args, iters=50, fused=False, launch=lm)
+    sf, pf, tf = predict_solver(*args, iters=50, fused=True, launch=lm)
+    n = launches_per_iter(1.0, 2.0, False)
+    assert n == 4.0
+    assert launches_per_iter(1.0, 2.0, True) == 7.0
+    assert launches_per_iter(2.0, 6.0, False) == 10.0
+    assert sh == s0 and ph == pytest.approx(p0 + lm.t_launch * n, rel=1e-12)
+    assert pf == p0 and sf == pytest.approx(s0 + lm.t_trace + lm.t_launch, rel=1e-12)
+    assert th == pytest.approx(sh + 50 * ph, rel=1e-12)
+    assert tf == pytest.approx(sf + 50 * pf, rel=1e-12)
+    with pytest.raises(ValueError, match="fused="):
+        advise_solver(figure43_pattern(512, 64, 4), 10, fused="yes")
+
+
 def test_solver_pins_flip_with_iters():
     """At least one pinned scenario must flip winner as iters grows -- the
     amortization effect advise_solver exists to model."""

@@ -58,11 +58,17 @@ def test_record_never_written_by_failing_or_partial_runs(tmp_path):
     assert maybe_write_record(report, ["params"], every, path=path) is False
     assert not os.path.exists(path)
 
-    # full passing run: writes, with the wire counters attached
-    assert maybe_write_record(report, every, every, path=path) is True
+    # full passing run: writes, with the wire counters attached.  The
+    # fused-solve measurement needs an 8-device subprocess, so this
+    # hermetic test injects a synthetic record through the test seam.
+    fused = {"speedup": 2.5, "cache": {"plan_misses": 1, "fused_misses": 1,
+                                       "fused_hits": 1}}
+    assert maybe_write_record(report, every, every, path=path,
+                              fused_record=fused) is True
     with open(path) as f:
         written = json.load(f)
     assert written["failures"] == []
+    assert written["fused_solve"] == fused
     assert set(written["wire_bytes"]["codecs"]) == {
         "standard",
         "two_step",
@@ -105,6 +111,7 @@ def test_benchmarks_run_smoke():
         "solver/thermal_like/two_step/ov1",  # solver: CG workload sweep
         "solver/random_block/standard/ov0",
         "solver/audikw_like/advisor",
+        "solver/fused/two_step",  # solver: fused whole-solve vs host loop
         "wiremodel/tiny/k1",  # wire: model crossover sweep
         "wiremodel/big/k1",
         "wire/2p/standard/none",  # wire: measured codec sweep
@@ -149,6 +156,13 @@ def test_benchmarks_run_smoke():
     assert solver_rows, f"no solver rows\n{out[-2000:]}"
     for conv, relres in solver_rows:
         assert conv == "1" and float(relres) <= 1e-6, (conv, relres)
+
+    # the fused front-end's acceptance property in miniature: the fused
+    # whole-solve program beats the host-driven loop by >= 2x on the
+    # reference problem (maxiter=120), with identical trajectories
+    m = re.search(r"solver/fused/two_step,.*speedup=([0-9.]+)x parity=ok", out)
+    assert m, f"fused solver row unparsable\n{out[-2000:]}"
+    assert float(m.group(1)) >= 2.0, f"fused under 2x: {m.group(0)}"
 
     # the wire sweep's acceptance property in miniature: every measured
     # codec row passed its parity check, and the bf16 wire reports >= 1.8x
@@ -206,7 +220,7 @@ def test_benchmarks_run_smoke():
     # machine-readable record: schema, per-section timings, wire counters
     with open(BENCH_JSON) as f:
         report = json.load(f)
-    assert report["schema"] == 4
+    assert report["schema"] == 5
     assert report["smoke"] is True
     assert report["failures"] == []
     for name, sec in report["sections"].items():
@@ -266,3 +280,14 @@ def test_benchmarks_run_smoke():
     assert co["rejected"] == sq["rejected"] == 0
     assert co["p99_s"] < sq["p99_s"], serving
     assert co["mean_width"] > 4.0 and sq["mean_width"] == 1.0
+
+    # schema 5: the fused-solve record -- the measured >= 2x acceptance
+    # speedup at a >= 100-iteration horizon, identical host/fused
+    # trajectories, and the one-plan-miss / one-compile cache pins
+    fs = report["fused_solve"]
+    assert fs["speedup"] >= 2.0, fs
+    assert fs["problem"]["maxiter"] >= 100 and fs["problem"]["devices"] == 8
+    assert fs["host"]["iterations"] == fs["fused"]["iterations"] > 0, fs
+    assert fs["host"]["status"] == fs["fused"]["status"], fs
+    assert fs["fused"]["us_per_iter"] < fs["host"]["us_per_iter"], fs
+    assert fs["cache"] == {"plan_misses": 1, "fused_misses": 1, "fused_hits": 1}

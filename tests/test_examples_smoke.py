@@ -18,7 +18,7 @@ EXAMPLES = os.path.join(REPO, "examples")
 
 #: smoke-sized arguments per example (keep each file under ~1 minute)
 ARGS = {
-    "krylov_solve.py": [],
+    "krylov_solve.py": ["--fused"],
     "quickstart.py": [],
     "strategy_advisor.py": ["--messages", "32", "--nodes", "4", "--payload-width", "8"],
     "serve_lm.py": ["--arch", "deepseek-v2-lite-16b", "--batch", "1",
@@ -28,7 +28,7 @@ ARGS = {
 
 #: a line that must appear in stdout when the example succeeded
 EXPECT = {
-    "krylov_solve.py": "int8-compressed inter-pod reductions",
+    "krylov_solve.py": "fused whole-solve",
     "quickstart.py": "split",  # strategy table printed after execution
     "strategy_advisor.py": "best strategy",
     "serve_lm.py": "dispatch advice",

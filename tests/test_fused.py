@@ -1,0 +1,255 @@
+"""Fused whole-solve programs (repro.solve.fused): host-loop parity pins.
+
+The fused front-end compiles an entire CG/BiCGStab solve -- exchange stages,
+masked-tile SpMV, hierarchical dot products, convergence control flow -- into
+ONE jitted ``lax.while_loop``.  These tests pin its contract against the
+host-driven loop oracle (:mod:`repro.solve.krylov`):
+
+* identical iterations / status / matvec counts, residual histories within a
+  per-backend float32-vs-float64 scalar tolerance;
+* fused histories **bitwise identical** across all four strategies and the
+  barrier/overlap executors (the whole point of deterministic lowering);
+* exactly one plan miss and one fused-program compile per solve class;
+* wire-codec variants track the host loop at matched tolerance;
+* chaos: ``verify=True`` integrity errors surface from inside the compiled
+  loop with the same structured fields as the host executor raises;
+* the same early-return / breakdown / restart exits, routed through
+  ``_finish_status`` exactly like the host solvers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.comm.topology import PodTopology
+from repro.solve import build_numpy, fused_bicgstab, fused_cg, spd_system
+from repro.sparse import thermal_like
+
+TOPO = PodTopology(npods=2, ppn=4)
+
+
+def _system(n=256, seed=5):
+    rng = np.random.default_rng(seed)
+    A = spd_system(thermal_like(n, rng))
+    op = build_numpy(A, TOPO, strategy="two_step")
+    b = rng.standard_normal((TOPO.nranks, op.rows_per_rank)).astype(np.float32)
+    return op, b
+
+
+def test_fused_zero_rhs_early_return():
+    """The fused solvers mirror the host zero-rhs exit (satellite of the
+    ``_finish_status`` routing fix): trivially converged, no device dispatch,
+    no matvecs, clean status."""
+    op, _ = _system()
+    z = np.zeros((TOPO.nranks, op.rows_per_rank), dtype=np.float32)
+    for solver in (fused_cg, fused_bicgstab):
+        r = solver(op, z)
+        assert r.converged and r.iterations == 0 and r.matvecs == 0
+        assert r.residuals == (0.0,)
+        assert r.status == "converged" and r.restarts == 0
+
+
+def test_fused_shape_validation():
+    op, _ = _system()
+    with pytest.raises(ValueError, match="b must be"):
+        fused_cg(op, np.zeros((TOPO.nranks, op.rows_per_rank + 1)))
+
+
+@pytest.mark.slow
+def test_fused_matches_host_and_is_bitwise_across_strategies(subproc):
+    """The acceptance core: fused CG reproduces the host loop's iterations /
+    status / matvecs exactly (history within f32-scalar tolerance), its
+    residual histories are BITWISE identical across all 4 strategies x
+    barrier/overlap, and each solve class costs exactly one plan miss and
+    one fused-program compile."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import PodTopology, cache_stats, clear_caches
+from repro.sparse import thermal_like, build
+from repro.solve import DeviceReductions, bicgstab, cg, fused_bicgstab, fused_cg, shifted_system, spd_system
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+n = 256
+b = rng.standard_normal((topo.nranks, n // topo.nranks)).astype(np.float32)
+A = spd_system(thermal_like(n, rng))
+
+# --- cache accounting: one plan miss + one fused compile per solve class ---
+clear_caches()
+op = build(A, topo, strategy="two_step")
+red = DeviceReductions(topo, mesh=op.mesh)
+f = fused_cg(op, b, tol=1e-6, maxiter=200)
+s = cache_stats()
+assert s.plan_misses == 1, s
+assert s.fused_misses == 1 and s.fused_hits == 0, s
+# a second identical solve reuses the compiled program, no new misses
+f2 = fused_cg(op, b, tol=1e-6, maxiter=200)
+s = cache_stats()
+assert s.fused_misses == 1 and s.fused_hits == 1, s
+assert s.plan_misses == 1, s
+assert f2.residuals == f.residuals
+
+# --- host-loop parity (DeviceReductions host oracle, f32 dots) ---
+h = cg(op, b, tol=1e-6, maxiter=200, reductions=red)
+assert f.iterations == h.iterations, (f.iterations, h.iterations)
+assert f.status == h.status == "converged"
+assert f.matvecs == h.matvecs
+dr = max(abs(a - c) / max(abs(c), 1e-30) for a, c in zip(f.residuals, h.residuals))
+assert dr < 1e-5, dr  # f32 while-loop scalars vs f64 host scalars
+
+# BiCGStab parity on the nonsymmetric workload
+B = shifted_system(thermal_like(n, rng))
+opb = build(B, topo, strategy="two_step")
+hb = bicgstab(opb, b, tol=1e-6, maxiter=200,
+              reductions=DeviceReductions(topo, mesh=opb.mesh))
+fb = fused_bicgstab(opb, b, tol=1e-6, maxiter=200)
+assert fb.iterations == hb.iterations and fb.status == hb.status
+assert fb.matvecs == hb.matvecs
+drb = max(abs(a - c) / max(abs(c), 1e-30) for a, c in zip(fb.residuals, hb.residuals))
+assert drb < 1e-2, drb  # 6 f32 scalar recurrences/iter drift faster than CG's 2
+
+# --- bitwise identical across every strategy and both executors ---
+ref = None
+for strat in ("standard", "two_step", "three_step", "split"):
+    for ov in (False, True):
+        r = fused_cg(build(A, topo, strategy=strat, overlap=ov), b,
+                     tol=1e-6, maxiter=200)
+        if ref is None:
+            ref = r
+        assert r.residuals == ref.residuals, (strat, ov)
+        assert (r.iterations, r.status) == (ref.iterations, ref.status)
+print("FUSED PARITY OK", ref.iterations, "iters")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_fused_codec_parity_per_dtype_tolerance(subproc):
+    """Wire-codec fused solves track the host loop running the SAME codec:
+    fixed-horizon comparison (tol below reach, so both run exactly maxiter
+    iterations) with a per-codec tolerance matched to the wire's precision."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import PodTopology
+from repro.sparse import thermal_like, build
+from repro.solve import DeviceReductions, cg, fused_cg, spd_system
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+n = 256
+b = rng.standard_normal((topo.nranks, n // topo.nranks)).astype(np.float32)
+A = spd_system(thermal_like(n, rng))
+TOL = {"none": 1e-5, "bf16": 5e-2, "f16": 5e-2, "int8": 2e-1}
+for codec, tol in TOL.items():
+    op = build(A, topo, strategy="two_step", wire=codec)
+    red = DeviceReductions(topo, mesh=op.mesh)
+    h = cg(op, b, tol=1e-12, maxiter=12, reductions=red)
+    f = fused_cg(op, b, tol=1e-12, maxiter=12)
+    assert h.iterations == f.iterations == 12, (codec, h.iterations, f.iterations)
+    assert h.status == f.status == "maxiter", (codec, h.status, f.status)
+    dr = max(abs(a - c) / max(abs(c), 1e-30) for a, c in zip(f.residuals, h.residuals))
+    assert dr < tol, (codec, dr)
+    print("CODEC OK", codec, f"{dr:.2e}")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_fused_integrity_error_surfaces_from_loop(subproc):
+    """Chaos: with ``verify=True`` and a persistent inter-pod perturbation,
+    the fused loop's carried violation accumulator must surface the SAME
+    structured ``ExchangeIntegrityError`` fields the host executor raises
+    (strategy / codec / stage_kind / op_index / round_index / hop_class)."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import ExchangeIntegrityError, FaultPlan, FaultSpec, PodTopology
+from repro.sparse import thermal_like, partition_csr
+from repro.solve import NumpySpMV, cg, fused_cg, spd_system
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+A = spd_system(thermal_like(256, rng))
+part = partition_csr(A, topo)
+b = rng.standard_normal((topo.nranks, part.rows_per_rank)).astype(np.float32)
+fp = FaultPlan(seed=5, specs=(FaultSpec(kind="perturb", prob=1.0, frac=1.0),))
+
+def provoke(solver):
+    op = NumpySpMV(part, strategy="two_step", verify=True, faults=fp,
+                   max_retries=0, fallback=False)
+    try:
+        solver(op, b, tol=1e-6, maxiter=10)
+    except ExchangeIntegrityError as e:
+        return e
+    raise SystemExit(f"{solver.__name__} did not raise")
+
+host_err = provoke(cg)
+fused_err = provoke(fused_cg)
+for field in ("strategy", "codec", "stage_kind", "op_index", "round_index",
+              "hop_class"):
+    hv, fv = getattr(host_err, field), getattr(fused_err, field)
+    assert hv == fv, (field, hv, fv)
+assert fused_err.violation > 0
+print("CHAOS OK", fused_err.stage_kind, fused_err.hop_class)
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_fused_exit_paths_match_host(subproc):
+    """Breakdown / restart / warm-start parity: CG on an indefinite matrix
+    breaks down at the same iteration with the same status; CG on a
+    nonsymmetric system stagnates, restarts once from the best iterate and
+    reports the same suffixed status; a warm start from the solution exits
+    after the single true-residual matvec."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import PodTopology
+from repro.sparse import thermal_like, partition_csr
+from repro.solve import (NumpySpMV, bicgstab, cg, fused_bicgstab, fused_cg,
+                         shifted_system, spd_system)
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+
+# stagnation + restart: CG on a nonsymmetric (diagonally dominant) matrix
+A = shifted_system(thermal_like(256, rng))
+part = partition_csr(A, topo)
+b = rng.standard_normal((topo.nranks, part.rows_per_rank)).astype(np.float32)
+op = NumpySpMV(part, strategy="standard")
+h = cg(op, b, tol=1e-10, maxiter=400)
+f = fused_cg(op, b, tol=1e-10, maxiter=400)
+assert h.status == f.status == "stagnation+restart", (h.status, f.status)
+assert (f.iterations, f.restarts, f.matvecs) == (h.iterations, h.restarts, h.matvecs)
+assert len(f.residuals) == len(h.residuals) == f.iterations + 2
+
+# indefinite breakdown: flip half the diagonal of an SPD system
+S = spd_system(thermal_like(256, rng))
+rows = np.repeat(np.arange(S.n), np.diff(S.indptr))
+S.data[np.flatnonzero((rows == S.indices) & (rows % 2 == 0))] *= -1.0
+parti = partition_csr(S, topo)
+bi = rng.standard_normal((topo.nranks, parti.rows_per_rank)).astype(np.float32)
+hi = cg(NumpySpMV(parti), bi, tol=1e-8, maxiter=50)
+fi = fused_cg(NumpySpMV(parti), bi, tol=1e-8, maxiter=50)
+assert fi.status == hi.status == "breakdown:indefinite"
+assert (fi.iterations, fi.matvecs) == (hi.iterations, hi.matvecs)
+assert np.isfinite(fi.x).all()
+
+# warm start from the exact solution: iterations==0, one matvec
+G = spd_system(thermal_like(256, rng))
+partg = partition_csr(G, topo)
+opg = NumpySpMV(partg, strategy="two_step")
+bg = rng.standard_normal((topo.nranks, partg.rows_per_rank)).astype(np.float32)
+for hs, fs in ((cg, fused_cg), (bicgstab, fused_bicgstab)):
+    exact = hs(opg, bg, tol=1e-6, maxiter=200)
+    warm = fs(opg, bg, x0=exact.x, tol=1e-6, maxiter=200)
+    assert warm.converged and warm.iterations == 0 and warm.matvecs == 1, warm
+print("EXIT PATHS OK", h.iterations, "stall iters")
+""",
+        devices=8,
+    )

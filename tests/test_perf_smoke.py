@@ -321,6 +321,45 @@ def test_compute_cache_pressure_under_skewed_stream(monkeypatch):
     assert stats.compute_evictions == 0 and stats.plan_evictions == 0
 
 
+def test_fused_cache_pressure_under_skewed_stream():
+    """The fused whole-solve program cache under the same Zipf-skewed
+    stream: PR 8's cache-pressure machinery must govern fused programs too
+    -- hot solve classes stay resident, ``cache_sizes()`` reports the live
+    count, ``set_cache_limits(fused=...)`` trims LRU-first immediately, and
+    the eviction counters keep ``evictions == misses - live``."""
+    from repro.testing import make_trace
+
+    comm_strategies.clear_caches()
+    old = comm_strategies.FUSED_CACHE_MAX
+    try:
+        comm_strategies.set_cache_limits(fused=4)
+        trace = make_trace(7, 200, [f"fp{i}" for i in range(10)], skew=1.5)
+        for req in trace:
+            comm_strategies.fused_cached(("fused", "cg", req.fp), object)
+        stats = comm_strategies.cache_stats()
+        live = comm_strategies.cache_sizes()
+        assert live["fused"] == 4  # pinned at capacity, not unbounded
+        assert stats.fused_hits + stats.fused_misses == 200
+        assert stats.fused_hits / 200 >= 0.5, "hot solves not staying resident"
+        assert stats.fused_evictions > 0  # the tail really churned
+        assert stats.fused_evictions == stats.fused_misses - live["fused"]
+        # shrinking the cap mid-flight evicts LRU-first right away and the
+        # counters record the trim without breaking the invariant
+        caps = comm_strategies.set_cache_limits(fused=2)
+        assert caps["fused"] == 2
+        assert comm_strategies.cache_sizes()["fused"] == 2
+        stats2 = comm_strategies.cache_stats()
+        assert stats2.fused_evictions == stats.fused_evictions + 2
+        assert stats2.fused_evictions == stats2.fused_misses - 2
+        with pytest.raises(ValueError):
+            comm_strategies.set_cache_limits(fused=0)
+    finally:
+        comm_strategies.set_cache_limits(fused=old)
+        comm_strategies.clear_caches()
+    stats = comm_strategies.cache_stats()
+    assert stats.fused_evictions == 0 and stats.fused_misses == 0
+
+
 def test_set_cache_limits_trims_immediately():
     """Shrinking a cap mid-flight evicts LRU-first right away (the serving
     memory-budget hook), and the eviction counters record the trim."""

@@ -232,6 +232,48 @@ def test_solver_edge_cases():
         NumpySpMV(op.partition, strategy="bogus")
 
 
+def test_early_returns_route_through_finish_status(monkeypatch):
+    """Regression: the zero-rhs and warm-start exits must report through
+    ``_finish_status`` like every other exit path -- the recovery-suffix
+    contract (``+exchange:<strategy>`` when the operator healed mid-solve)
+    holds for trivial solves too.  Pins every early-return path for both
+    solvers and proves the routing by counting ``_finish_status`` calls."""
+    import repro.solve.krylov as K
+
+    rng = np.random.default_rng(5)
+    A = spd_system(thermal_like(64, rng))
+    op = build_numpy(A, TOPO, strategy="two_step")
+    L = op.rows_per_rank
+    z = np.zeros((TOPO.nranks, L))
+    b = _rhs(op.partition, rng)
+
+    calls = []
+    orig = K._finish_status
+
+    def spy(status, restarts, op_, rc0):
+        calls.append(status)
+        return orig(status, restarts, op_, rc0)
+
+    monkeypatch.setattr(K, "_finish_status", spy)
+    for solver in (cg, bicgstab):
+        # zero rhs: trivially converged, no matvecs, clean status
+        calls.clear()
+        r = solver(op, z)
+        assert calls == ["converged"], f"{solver.__name__} bypassed _finish_status"
+        assert r.status == "converged" and r.restarts == 0
+        assert r.converged and r.iterations == 0 and r.matvecs == 0
+        assert r.residuals == (0.0,)
+        # warm start from the exact solution: one true-residual matvec, no
+        # iterations, same routing
+        exact = solver(op, b, tol=1e-10, maxiter=2000)
+        calls.clear()
+        warm = solver(op, b, x0=exact.x, tol=1e-6)
+        assert calls == ["converged"]
+        assert warm.status == "converged" and warm.restarts == 0
+        assert warm.converged and warm.iterations == 0 and warm.matvecs == 1
+        assert len(warm.residuals) == 1
+
+
 def test_numpy_reductions_hierarchical_order():
     red = NumpyReductions(TOPO)
     rng = np.random.default_rng(0)
