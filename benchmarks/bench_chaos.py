@@ -1,6 +1,7 @@
 """Chaos sweep: recovery rate + verify-mode overhead per strategy x codec.
 
-Two views of the fault-hardening layer (ISSUE 6's acceptance numbers):
+Three views of the fault-hardening layer (ISSUE 6 + ISSUE 10 acceptance
+numbers):
 
 * **recovery rate** (deterministic, jax-free) -- for each (strategy, codec)
   a bank of seeded :class:`repro.comm.faults.FaultPlan` scenarios (transient
@@ -9,6 +10,11 @@ Two views of the fault-hardening layer (ISSUE 6's acceptance numbers):
   ladder on the numpy executor.  ``recovered=N/N`` is the acceptance
   metric: every scenario must end in a correct halo buffer, and the row
   records which rung cured what (``retry=/demote=/readvise=``).
+* **serving chaos** (deterministic, jax-free) -- the traffic simulator
+  drains a seeded burst trace through the executor recovery ladder under a
+  :class:`~repro.comm.faults.FaultPlan` storm (:func:`serving_chaos`);
+  the row records completion / recovery / shed / probe / deadline-miss
+  counts and the trace hash.
 * **verify overhead** (numpy timings) -- median wall time per exchange with
   ``verify=False`` vs ``verify=True``.  Host numpy timings bound the check
   arithmetic's cost, not DCI wire time; the acceptance property is that the
@@ -107,6 +113,67 @@ def chaos_outcomes(strategies, codecs, seeds=(7,)) -> dict:
     return out
 
 
+def serving_chaos(n_requests: int = 96, seed: int = 11) -> dict:
+    """Serving front-end under a seeded fault storm (deterministic,
+    jax-free): the traffic simulator drains a Zipf burst trace through the
+    executor recovery ladder with a :class:`FaultPlan` attached.  Returns
+    the acceptance numbers run.py records in ``BENCH_exchange.json``:
+    recovery / shed / deadline-miss rates, breaker probe outcomes, and the
+    trace hash (equal hashes = bit-identical fault handling)."""
+    from repro.comm.exchange import random_pattern
+    from repro.comm.faults import FaultPlan, FaultSpec
+    from repro.comm.topology import PodTopology
+    from repro.serving import SimConfig, WorkloadClass, simulate
+    from repro.testing import make_trace
+
+    topo = PodTopology(npods=2, ppn=4)
+    classes = {}
+    for i in range(3):
+        pat = random_pattern(
+            np.random.default_rng(300 + i), topo, local_size=32, max_elems=4
+        )
+        classes[f"s{i}"] = WorkloadClass.from_pattern(pat, fp=f"s{i}")
+    trace = make_trace(seed, n_requests, sorted(classes), pattern="burst",
+                       rate=4000.0)
+    plan = FaultPlan(
+        seed=seed,
+        specs=(
+            # a degraded inter-pod link under the pinned strategy: retries
+            # may refire, but the re-advise rung moves off two_step and
+            # reliably cures it, so the ladder saves nearly every batch
+            FaultSpec(kind="perturb", prob=0.35, frac=0.1,
+                      strategies=("two_step",)),
+            FaultSpec(kind="slow", prob=0.1, delay_s=1e-3),
+        ),
+    )
+    res = simulate(
+        classes, trace,
+        SimConfig(chaos=plan, deadline_s=0.25, max_width=8,
+                  strategy="two_step"),
+    )
+    admitted = res.completed + res.shed
+    return {
+        "n_requests": n_requests,
+        "admitted": admitted,
+        "completed": res.completed,
+        "completion_rate": res.completed / admitted if admitted else 1.0,
+        "fault_events": res.fault_events,
+        "recoveries": res.recoveries,
+        "recovery_rate": (
+            res.recoveries / res.fault_events if res.fault_events else 1.0
+        ),
+        "shed": res.shed,
+        "shed_rate": res.shed / admitted if admitted else 0.0,
+        "probes": res.probes,
+        "probe_recoveries": res.probe_recoveries,
+        "deadline_misses": res.deadline_misses,
+        "deadline_miss_rate": (
+            res.deadline_misses / res.completed if res.completed else 0.0
+        ),
+        "trace_hash": res.trace_hash,
+    }
+
+
 def _med_us(fn, iters: int) -> float:
     fn()
     ts = []
@@ -137,6 +204,17 @@ def main(smoke: bool = False) -> None:
             f"retry={o['retry']} demote={o['demote']} "
             f"readvise={o['readvise']} clean={o['clean_pass']}"
         )
+
+    storm = serving_chaos()
+    print(
+        f"chaosserve/storm,0.000,"
+        f"completed={storm['completed']}/{storm['admitted']} "
+        f"faults={storm['fault_events']} recoveries={storm['recoveries']} "
+        f"shed={storm['shed']} probes={storm['probes']} "
+        f"probe_recoveries={storm['probe_recoveries']} "
+        f"deadline_misses={storm['deadline_misses']} "
+        f"trace={storm['trace_hash'][:12]}"
+    )
 
     pat, local = _reference()
     for strategy in strategies:

@@ -44,7 +44,11 @@ deterministic simulator's trace hash) and the fused-solve record
 (schema 5: host-driven CG loop vs the fused whole-solve
 ``lax.while_loop`` program on the 8-device reference problem at
 ``maxiter=120``, with the >= 2x acceptance speedup and the
-one-plan-miss / one-compile cache pins) -- so the perf trajectory is
+one-plan-miss / one-compile cache pins) and the serving-chaos record
+(schema 6: the traffic simulator draining a seeded burst trace through
+the executor recovery ladder under a fault storm -- completion /
+recovery / shed / deadline-miss rates, breaker probe outcomes, and the
+deterministic trace hash) -- so the perf trajectory is
 trackable across PRs; schema pinned by ``tests/test_benchmarks_smoke.py``.
 """
 
@@ -57,7 +61,7 @@ import time
 import traceback
 
 #: bump when the JSON layout changes (tests pin it)
-BENCH_SCHEMA = 5
+BENCH_SCHEMA = 6
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_exchange.json")
 
 
@@ -236,6 +240,22 @@ print("FUSED_RECORD," + json.dumps(rec))
 """
 
 
+def _serving_chaos_record() -> dict:
+    """Serving-chaos acceptance record (schema 6).
+
+    Deterministic and jax-free (:func:`benchmarks.bench_chaos.
+    serving_chaos`): the traffic simulator drains a seeded burst trace
+    through the executor recovery ladder under a fault storm.  The
+    committed record pins the completion / recovery / shed /
+    deadline-miss rates, the breaker probe outcomes, and the trace hash,
+    so a regression in fault handling shows up as a diff before any test
+    names it.
+    """
+    from benchmarks.bench_chaos import serving_chaos
+
+    return serving_chaos()
+
+
 def _fused_solve_record() -> dict:
     """Fused whole-solve acceptance record (schema 5).
 
@@ -281,6 +301,7 @@ def maybe_write_record(report: dict, wanted, section_names, path: str = BENCH_JS
     report["moe_dispatch"] = _moe_dispatch_counters()
     report["serving"] = _serving_counters()
     report["fused_solve"] = _fused_solve_record() if fused_record is None else fused_record
+    report["serving_chaos"] = _serving_chaos_record()
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -461,6 +461,18 @@ class HealthTracker:
     ``repro.core.advisor.advise(..., health=...)`` applies to a degraded
     pair's predicted time, which is what steers the re-advise step of the
     ladder away from the offending hop.
+
+    Degradation is a circuit breaker, not a permanent sentence.  A pair
+    that crosses ``degrade_after`` failures opens its breaker and, after a
+    deterministic call-count cooldown, moves to half-open: the next ladder
+    entry on that pair runs as a probe.  A successful probe closes the
+    breaker (failure count and penalty reset); a failed probe re-opens it
+    with the cooldown doubled.  The clock is :meth:`record_call` ticks --
+    one per ladder entry -- so recovery is reproducible under replay.
+
+    ``events`` is a ring buffer capped at ``max_events`` entries; overflow
+    increments ``dropped`` instead of leaking memory on long-running
+    serves.
     """
 
     degrade_after: int = 1
@@ -469,18 +481,88 @@ class HealthTracker:
     events: List[dict] = dataclasses.field(default_factory=list)
     recovery_count: int = 0
     last_recovery: Optional[str] = None
+    max_events: int = 256
+    dropped: int = 0
+    cooldown: int = 8
+    cooldown_growth: float = 2.0
+    calls: int = 0
+    probes: int = 0
+    probe_recoveries: int = 0
+    _opened_at: Dict[Tuple[str, str], int] = dataclasses.field(default_factory=dict)
+    _cooldowns: Dict[Tuple[str, str], int] = dataclasses.field(default_factory=dict)
+
+    def _push_event(self, ev: dict) -> None:
+        self.events.append(ev)
+        over = len(self.events) - self.max_events
+        if over > 0:
+            del self.events[:over]
+            self.dropped += over
+
+    def record_call(self) -> None:
+        """Advance the breaker clock by one ladder entry."""
+        self.calls += 1
+
+    def breaker_state(self, strategy: str, wire: str) -> str:
+        """``"closed"`` (healthy), ``"open"`` (priced out), or
+        ``"half_open"`` (cooldown elapsed -- next call probes)."""
+        key = (strategy, wire)
+        if self.failures.get(key, 0) < self.degrade_after:
+            return "closed"
+        opened = self._opened_at.get(key)
+        if opened is None:
+            # degraded without breaker bookkeeping (e.g. failures set
+            # directly by a test or imported from a prior run): stay open
+            return "open"
+        wait = self._cooldowns.get(key, self.cooldown)
+        return "half_open" if self.calls - opened >= wait else "open"
 
     def record_failure(self, err: ExchangeIntegrityError) -> None:
         key = (err.strategy, err.codec)
+        was = self.breaker_state(*key)
         self.failures[key] = self.failures.get(key, 0) + 1
-        self.events.append({"kind": "integrity_failure", **err.diagnostics()})
+        if self.failures[key] >= self.degrade_after:
+            if was == "closed":
+                self._opened_at[key] = self.calls
+                self._cooldowns.setdefault(key, max(1, self.cooldown))
+            elif was == "half_open":
+                # failed probe: re-open with doubled cooldown
+                old = self._cooldowns.get(key, self.cooldown)
+                self._opened_at[key] = self.calls
+                self._cooldowns[key] = max(1, int(old * self.cooldown_growth))
+            # was == "open": a ladder-rung failure while already open does
+            # not extend the cooldown clock
+        self._push_event({"kind": "integrity_failure", **err.diagnostics()})
         if self.watchdog is not None:
             self.watchdog.record_external("exchange_integrity", err.diagnostics())
+
+    def record_success(self, strategy: str, wire: str) -> bool:
+        """Close a half-open breaker after a clean probe exchange.
+
+        No-op unless ``(strategy, wire)`` is half-open; returns whether the
+        breaker closed.  Closing resets the pair's failure count (so
+        :meth:`penalty` returns 1.0 again and ``advise(health=...)``
+        rankings recover) and its cooldown back to the base value.
+        """
+        key = (strategy, wire)
+        if self.breaker_state(strategy, wire) != "half_open":
+            return False
+        self.failures.pop(key, None)
+        self._opened_at.pop(key, None)
+        self._cooldowns.pop(key, None)
+        self.probe_recoveries += 1
+        self._push_event(
+            {"kind": "probe_recovery", "strategy": strategy, "wire": wire}
+        )
+        return True
+
+    def note_probe(self, strategy: str, wire: str) -> None:
+        self.probes += 1
+        self._push_event({"kind": "probe", "strategy": strategy, "wire": wire})
 
     def record_recovery(self, action: str, strategy: str, wire: str) -> None:
         self.recovery_count += 1
         self.last_recovery = f"{action}:{strategy}/{wire}"
-        self.events.append(
+        self._push_event(
             {"kind": "recovery", "action": action, "strategy": strategy, "wire": wire}
         )
 
@@ -540,8 +622,17 @@ def run_ladder(
     recorded in ``health`` before the next rung runs, so the re-advise rung
     sees the demotion failure too.  Raises the last integrity error when
     the ladder is exhausted (or ``fallback`` is off).
+
+    Each entry also advances the health tracker's breaker clock: a pair
+    whose breaker has cooled to half-open runs its first attempt as a
+    probe, and any clean attempt on a half-open pair closes that breaker
+    (:meth:`HealthTracker.record_success`) so the advisor's penalties
+    recover once the link heals.
     """
     health = health if health is not None else HealthTracker()
+    health.record_call()
+    if health.breaker_state(strategy, wire) == "half_open":
+        health.note_probe(strategy, wire)
     last: Optional[ExchangeIntegrityError] = None
     for i in range(1 + max(0, max_retries)):
         try:
@@ -550,6 +641,7 @@ def run_ladder(
             last = e
             health.record_failure(e)
             continue
+        health.record_success(strategy, wire)
         if i == 0:
             return out, None
         health.record_recovery("retry", strategy, wire)
@@ -561,6 +653,7 @@ def run_ladder(
             last = e
             health.record_failure(e)
         else:
+            health.record_success(strategy, "none")
             health.record_recovery("demote", strategy, "none")
             return out, RecoveryPath("demote", strategy, "none")
     if fallback and choose_alternative is not None:
@@ -571,6 +664,7 @@ def run_ladder(
             except ExchangeIntegrityError as e:
                 health.record_failure(e)
                 raise
+            health.record_success(alt, "none")
             health.record_recovery("readvise", alt, "none")
             return out, RecoveryPath("readvise", alt, "none")
     assert last is not None

@@ -153,6 +153,31 @@ class Advice:
         return "\n".join(lines)
 
 
+def healthy_alternatives(ranked, health, current=None):
+    """Executable strategy names from a ranking, best-first, breaker-aware.
+
+    Yields each distinct executable strategy in ranking order, skipping
+    ``current`` and any strategy whose :class:`~repro.comm.faults.
+    HealthTracker` breaker is OPEN.  A HALF-OPEN pair is yielded -- its
+    cooldown has elapsed and it has earned exactly one probe -- which is
+    how a re-advised chooser routes the probe through a healing link: if
+    the probe succeeds, ``record_success`` closes the breaker, the penalty
+    disappears, and subsequent :func:`advise` rankings recover the pair's
+    clean position.  With ``health=None`` every strategy passes.
+    """
+    seen = set()
+    for rec in ranked:
+        name = EXECUTABLE_STRATEGY[rec.strategy]
+        if name == current or name in seen:
+            continue
+        seen.add(name)
+        if health is not None and health.is_degraded(name):
+            state_of = getattr(health, "breaker_state", None)
+            if state_of is None or state_of(name, rec.wire) != "half_open":
+                continue
+        yield name
+
+
 def _wire_codecs(wire) -> Tuple[str, ...]:
     """Normalize the ``wire`` argument of :func:`advise` to codec names.
 
@@ -216,7 +241,11 @@ def advise_stats(
     its ``penalty(strategy, wire)`` contract) multiplies each prediction by
     the tracker's degradation penalty for the executable (strategy, codec)
     pair, so variants that failed integrity checks sink in the ranking while
-    a ``None`` tracker leaves the paper's rankings untouched.
+    a ``None`` tracker leaves the paper's rankings untouched.  The penalty
+    is not permanent: once the tracker's circuit breaker half-opens and a
+    probe succeeds (``record_success``), the pair's failure count clears and
+    the next ``advise`` call restores its clean position -- rankings recover
+    when a link heals (see :func:`healthy_alternatives`).
     """
     m = get_machine(machine) if isinstance(machine, str) else machine
     stats = stats.widened(payload_width)
@@ -234,18 +263,27 @@ def advise_stats(
             pen = 1.0
             if health is not None:
                 pen = health.penalty(EXECUTABLE_STRATEGY[strategy], codec)
-            t = pen * predict(m, strategy, transport, stats_eff, wire=wm)
+            # the penalty orders the ranking but is not wall time, so each
+            # entry carries (sort key, physical prediction): a degraded
+            # pair sinks without its Recommendation.predicted_time -- what
+            # schedulers charge as service time -- leaving the model
+            t = predict(m, strategy, transport, stats_eff, wire=wm)
             if compute is None:
-                preds[(strategy, transport, False, codec)] = t
+                preds[(strategy, transport, False, codec)] = (pen * t, t)
             else:
-                preds[(strategy, transport, False, codec)] = t + compute.total
-                preds[(strategy, transport, True, codec)] = pen * predict_overlapped(
+                preds[(strategy, transport, False, codec)] = (
+                    pen * t + compute.total, t + compute.total
+                )
+                t_ov = predict_overlapped(
                     m, strategy, transport, stats_eff,
                     compute.t_interior, compute.t_boundary, wire=wm,
                 )
+                preds[(strategy, transport, True, codec)] = (pen * t_ov, t_ov)
     ranked = tuple(
         Recommendation(s, tr, t, overlap=ov, wire=cd)
-        for (s, tr, ov, cd), t in sorted(preds.items(), key=lambda kv: kv[1])
+        for (s, tr, ov, cd), (_, t) in sorted(
+            preds.items(), key=lambda kv: kv[1][0]
+        )
     )
     return Advice(machine=m.name, stats=stats, ranked=ranked)
 

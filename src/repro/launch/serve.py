@@ -93,6 +93,11 @@ def main() -> None:
                          "requests of the measured routing pattern through the "
                          "continuous-batching simulator (repro.serving) and "
                          "report coalesced vs sequential p50/p99/throughput")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="with --simulate-serving: re-run the simulation under "
+                         "a seeded fault storm (FaultPlan(SEED)) and report the "
+                         "recovery-ladder outcome: faults, recoveries, sheds, "
+                         "breaker probes, deadline misses, trace hash")
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -161,6 +166,30 @@ def main() -> None:
                   f"coalesced p50={co['p50_s']*1e3:.2f}ms p99={co['p99_s']*1e3:.2f}ms "
                   f"{co['throughput_rps']:.0f} rps | sequential "
                   f"{sq['throughput_rps']:.0f} rps | speedup {rep['speedup']:.2f}x")
+            if args.chaos is not None:
+                from repro.comm.faults import FaultPlan, FaultSpec
+                from repro.serving import simulate
+
+                plan = FaultPlan(
+                    seed=args.chaos,
+                    specs=(
+                        FaultSpec(kind="perturb", prob=0.25, frac=0.1),
+                        FaultSpec(kind="slow", prob=0.1, delay_s=2e-3),
+                    ),
+                )
+                storm = simulate(
+                    {"moe": cls}, trace,
+                    SimConfig(max_width=8, chaos=plan, deadline_s=0.05),
+                )
+                total = storm.completed + storm.shed
+                rate = storm.completed / total if total else 1.0
+                print(f"chaos storm (seed {args.chaos}): "
+                      f"{storm.fault_events} faults, "
+                      f"{storm.recoveries} ladder recoveries, "
+                      f"{storm.shed} shed, {storm.probes} probes "
+                      f"({storm.probe_recoveries} closed breakers), "
+                      f"{storm.deadline_misses} deadline misses | "
+                      f"completion {rate:.1%} | trace {storm.trace_hash[:12]}")
 
 
 if __name__ == "__main__":

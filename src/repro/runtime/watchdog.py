@@ -94,6 +94,7 @@ class AdmissionController:
 
     admitted: int = 0
     rejected: int = 0
+    shed: int = 0
     escalations: int = 0
     _consecutive_rejects: int = 0
 
@@ -124,3 +125,16 @@ class AdmissionController:
         self._consecutive_rejects = 0
         self.admitted += 1
         return True
+
+    def record_shed(self, n_requests: int, info: Optional[dict] = None) -> None:
+        """Count ``n_requests`` shed by an exhausted executor ladder.
+
+        Fault-pressure sheds share the overload escalation budget: each
+        shed batch is one external event against the watchdog, so a fault
+        storm and a queue overload reach the trainer's restart policy
+        through the same counter (``escalations``).
+        """
+        self.shed += int(n_requests)
+        if self.watchdog is not None:
+            if self.watchdog.record_external("batch_shed", info or {}):
+                self.escalations += 1

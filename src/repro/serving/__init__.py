@@ -12,7 +12,7 @@ bit-reproducible for tier-1 tests and benchmarks.
 """
 
 from .batcher import Batch, ContinuousBatcher
-from .executor import BatchExecutor, measure_spmv_replay
+from .executor import BatchExecutor, BatchOutcome, measure_spmv_replay
 from .queue import RequestQueue
 from .request import Request, WorkloadClass
 from .sim import SimConfig, SimResult, sequential_baseline, serving_report, simulate
@@ -20,6 +20,7 @@ from .sim import SimConfig, SimResult, sequential_baseline, serving_report, simu
 __all__ = [
     "Batch",
     "BatchExecutor",
+    "BatchOutcome",
     "ContinuousBatcher",
     "Request",
     "RequestQueue",

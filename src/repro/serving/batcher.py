@@ -137,6 +137,14 @@ class ContinuousBatcher:
         self._advice[key] = adv
         return adv
 
+    def readvise(self, fp: str, n_requests: int) -> Advice:
+        """Recompute a lane's advice under the CURRENT health penalties and
+        overwrite the memo -- the executor's re-advise rung calls this after
+        an integrity failure so subsequent batches of the class inherit the
+        re-ranked (strategy, codec) instead of the pre-fault choice."""
+        self._advice.pop((fp, n_requests), None)
+        return self.advise(fp, n_requests)
+
     def next_deadline(self, now: float) -> Optional[float]:
         """Earliest instant at which some queued lane becomes ripe, or None
         if the queue is empty.  Lanes already ripe return ``now``."""

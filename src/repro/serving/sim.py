@@ -18,6 +18,19 @@ Event tuples, in emission order (ties: arrivals, then dispatch+completion):
 * ``("dispatch", t, fp, width, key, rids)`` -- batch started; ``key`` is the
   advisor's strategy/codec key, ``rids`` the coalesced request ids
 * ``("complete", t, fp, rids)`` -- batch finished at virtual ``t``
+
+Under a seeded chaos schedule (``SimConfig.chaos``) a dispatch may also
+emit, between its ``dispatch`` and ``complete``/``shed``:
+
+* ``("fault", t, fp, "strategy/wire")`` -- one seeded integrity failure
+* ``("probe", t, fp, "strategy/wire")`` -- a half-open breaker probing
+* ``("recover", t, fp, "action:strategy/wire")`` -- ladder rung that saved
+  the batch
+* ``("shed", t, fp, rids)`` -- ladder exhausted; the batch's requests shed
+
+All chaos decisions are pure functions of (plan seed, ladder-attempt
+index, spec ordinal), so ``trace_hash`` covers fault handling too; with
+``chaos=None`` the event trace is byte-identical to pre-chaos simulators.
 """
 
 from __future__ import annotations
@@ -26,6 +39,14 @@ import dataclasses
 import hashlib
 from typing import Dict, Optional, Sequence, Tuple
 
+import numpy as np
+
+from repro.comm.faults import (
+    ExchangeIntegrityError,
+    FaultPlan,
+    HealthTracker,
+    run_ladder,
+)
 from repro.runtime import AdmissionController, StragglerWatchdog
 
 from .batcher import ContinuousBatcher
@@ -48,6 +69,14 @@ class SimConfig:
     #: This is the term coalescing amortizes even when byte terms dominate.
     host_overhead_s: float = 50e-6
     max_queue_depth: int = 4096
+    #: seeded fault schedule: each ladder attempt draws one deterministic
+    #: firing decision per spec (None = fault-free, trace unchanged)
+    chaos: Optional[FaultPlan] = None
+    #: ladder retries per faulted dispatch before codec demote / re-advise
+    chaos_retries: int = 1
+    #: per-request latency SLO; completions past it count as deadline
+    #: misses (ladder attempts charge service time, so faults can miss it)
+    deadline_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.host_overhead_s <= 0:
@@ -72,6 +101,12 @@ class SimResult:
     batches: int
     mean_width: float
     escalations: int  # watchdog escalations from admission overload
+    shed: int = 0  # requests lost to exhausted recovery ladders
+    fault_events: int = 0  # seeded integrity failures injected
+    recoveries: int = 0  # batches saved by a ladder rung below the first
+    probes: int = 0  # half-open breaker probe attempts
+    probe_recoveries: int = 0  # probes that closed a breaker
+    deadline_misses: int = 0  # completions past config.deadline_s
 
     @property
     def trace_hash(self) -> str:
@@ -110,12 +145,17 @@ def simulate(
     compute at a time, matching the host-side dispatch loop of the real
     front-end.  Service time for a batch is the advisor's predicted
     exchange time at the coalesced payload width plus
-    ``config.host_overhead_s``.
+    ``config.host_overhead_s``; under chaos, every extra ladder attempt
+    charges another full service quantum (and ``"slow"`` specs their
+    ``delay_s``), so faults degrade latency even when they recover.
     """
     watchdog = StragglerWatchdog()
     admission = AdmissionController(
         max_queue_depth=config.max_queue_depth, watchdog=watchdog
     )
+    # faults and overload share ONE escalation budget: the health tracker's
+    # integrity failures land on the same watchdog as admission rejections
+    health = HealthTracker(watchdog=watchdog) if config.chaos is not None else None
     batcher = ContinuousBatcher(
         classes,
         RequestQueue(admission),
@@ -124,6 +164,7 @@ def simulate(
         memory_budget=config.memory_budget,
         machine=config.machine,
         wire=config.wire,
+        health=health,
         strategy=config.strategy,
     )
     order = sorted(trace)  # (arrival, rid): generator interleaving is irrelevant
@@ -135,6 +176,10 @@ def simulate(
     n = len(order)
     last_complete = 0.0
     widths = []
+    attempt_clock = [0]  # global ladder-attempt index (the chaos seed axis)
+    fault_events = 0
+    shed_requests = 0
+    recoveries = 0
     # Generous stall guard: every loop iteration either consumes an arrival,
     # dispatches a batch, or advances the clock to a strictly later event.
     for _ in range(8 * n + 64):
@@ -147,12 +192,28 @@ def simulate(
             batch = batcher.next_batch(now)
             if batch is not None:
                 rids = tuple(r.rid for r in batch.requests)
-                service = batch.predicted_time + config.host_overhead_s
-                done = now + service
+                quantum = batch.predicted_time + config.host_overhead_s
                 events.append(("dispatch", now, batch.fp, batch.width, batch.key, rids))
-                events.append(("complete", done, batch.fp, rids))
-                for r in batch.requests:
-                    latencies[r.rid] = done - r.arrival
+                ok, service, nfaults, path = True, quantum, 0, None
+                if config.chaos is not None:
+                    ok, service, nfaults, path = _chaos_dispatch(
+                        config, batch, health, attempt_clock, events, now, quantum
+                    )
+                    fault_events += nfaults
+                done = now + service
+                if ok:
+                    if path is not None:
+                        recoveries += 1
+                        events.append(("recover", now, batch.fp, path.key))
+                    events.append(("complete", done, batch.fp, rids))
+                    for r in batch.requests:
+                        latencies[r.rid] = done - r.arrival
+                else:
+                    shed_requests += len(rids)
+                    admission.record_shed(
+                        len(rids), {"fp": batch.fp, "requests": len(rids)}
+                    )
+                    events.append(("shed", done, batch.fp, rids))
                 widths.append(batch.width)
                 busy_until = done
                 last_complete = done
@@ -178,6 +239,11 @@ def simulate(
     t0 = order[0].arrival if order else 0.0
     makespan = max(last_complete - t0, 0.0)
     completed = len(latencies)
+    deadline_misses = (
+        0
+        if config.deadline_s is None
+        else sum(1 for v in lat_sorted if v > config.deadline_s)
+    )
     return SimResult(
         events=tuple(events),
         latencies=tuple(sorted(latencies.items())),
@@ -190,7 +256,89 @@ def simulate(
         batches=batcher.batches,
         mean_width=sum(widths) / len(widths) if widths else 0.0,
         escalations=admission.escalations,
+        shed=shed_requests,
+        fault_events=fault_events,
+        recoveries=recoveries,
+        probes=0 if health is None else health.probes,
+        probe_recoveries=0 if health is None else health.probe_recoveries,
+        deadline_misses=deadline_misses,
     )
+
+
+def _chaos_dispatch(
+    config: SimConfig,
+    batch,
+    health: HealthTracker,
+    attempt_clock,
+    events,
+    now: float,
+    quantum: float,
+):
+    """One batch through the REAL recovery ladder under the seeded schedule.
+
+    Each ladder attempt consumes one tick of the global attempt clock; a
+    spec fires iff ``plan.active(tick)``, it matches the attempted
+    (strategy, wire), and its seeded coin (``rng([seed, tick, spec])``)
+    lands under ``prob`` -- so the full fault/recovery history is a pure
+    function of (plan, trace) and lands in ``trace_hash``.  Returns
+    ``(ok, service_s, n_faults, recovery_path)``.
+    """
+    plan = config.chaos
+    state = {"attempts": 0, "faults": 0, "delay": 0.0}
+
+    def attempt(strategy: str, wire: str):
+        tick = attempt_clock[0]
+        attempt_clock[0] += 1
+        state["attempts"] += 1
+        for si, spec in enumerate(plan.specs):
+            if not plan.active(tick) or not spec.matches(strategy, wire):
+                continue
+            coin = np.random.default_rng([plan.seed, tick, si]).random()
+            if coin >= spec.prob:
+                continue
+            if spec.kind == "slow":
+                state["delay"] += spec.delay_s
+                continue
+            state["faults"] += 1
+            events.append(("fault", now, batch.fp, f"{strategy}/{wire}"))
+            raise ExchangeIntegrityError(
+                strategy=strategy,
+                codec=wire,
+                stage_kind="a2a_pod",
+                op_index=0,
+                violation=1.0,
+            )
+        return True
+
+    probes_before = health.probes
+    try:
+        _, path = run_ladder(
+            attempt,
+            strategy=batch.strategy,
+            wire=batch.wire,
+            health=health,
+            max_retries=config.chaos_retries,
+            choose_alternative=_fixed_preference,
+        )
+    except ExchangeIntegrityError:
+        ok, path = False, None
+    else:
+        ok = True
+    if health.probes > probes_before:
+        events.append(("probe", now, batch.fp, f"{batch.strategy}/{batch.wire}"))
+    service = state["attempts"] * quantum + state["delay"]
+    return ok, service, state["faults"], path
+
+
+def _fixed_preference(health: HealthTracker, current: str):
+    """The simulator's re-advise chooser: deterministic fixed preference
+    order over the executable strategies, skipping degraded ones (the real
+    executor re-ranks via the advisor; the sim keeps the decision cheap
+    and trace-stable)."""
+    for name in ("two_step", "three_step", "split", "standard"):
+        if name != current and not health.is_degraded(name):
+            return name
+    return None
 
 
 def sequential_baseline(

@@ -46,11 +46,18 @@ surface after the solve as the same structured
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import NamedTuple, Optional
 
 import numpy as np
 
 from repro.comm import strategies as comm_strategies
+from repro.comm.faults import (
+    ExchangeIntegrityError,
+    HealthTracker,
+    advise_alternative,
+    run_ladder,
+)
 from repro.solve.krylov import (
     STALL_WINDOW,
     SolveResult,
@@ -101,7 +108,7 @@ def _cg_body(mv, dot, tol, bnorm, hist_len):
     def body(c):
         (x, r, p, rs, best, best_x, best_it, it, k, hist, status, done,
          mvc, viols) = c
-        Ap, vv = mv(p)
+        Ap, vv = mv(p, mvc)
         mvc = mvc + 1
         viols = jnp.maximum(viols, vv) if vv.size else viols
         pAp = dot(p, Ap)
@@ -161,7 +168,7 @@ def _bicgstab_body(mv, dot, tol, bnorm, rhat, rhat_nrm, eps, hist_len):
         ok1 = (~bad_rho) & (~bad_omega)
         beta = (rho_new / nz(rho)) * (alpha / nz(omega))
         p1 = jnp.where(ok1, r + beta * (p - omega * v), p)
-        v1m, vva = mv(p1)
+        v1m, vva = mv(p1, mvc)
         v1 = jnp.where(ok1, v1m, v)
         denom = dot(rhat, v1m)
         bad_denom = ok1 & (jnp.abs(denom) <= eps * jnp.abs(rho_new))
@@ -172,7 +179,7 @@ def _bicgstab_body(mv, dot, tol, bnorm, rhat, rhat_nrm, eps, hist_len):
         snorm = jnp.sqrt(jnp.maximum(dot(s, s), 0.0))
         rel_s = snorm / bnorm
         s_conv = ok2 & (rel_s <= tol)
-        t1, vvb = mv(s)
+        t1, vvb = mv(s, mvc + ok1.astype(jnp.int32))
         tt = dot(t1, t1)
         bad_tt = ok2 & (~s_conv) & (tt <= (eps * snorm) ** 2)
         ok3 = ok2 & (~s_conv) & (~bad_tt)
@@ -225,13 +232,28 @@ def _bicgstab_body(mv, dot, tol, bnorm, rhat, rhat_nrm, eps, hist_len):
 
 
 def _build_fused(top, shard_dot, solver: str, hist_len: int, eps: float,
-                 nviol: int):
+                 nviol: int, checkpoint_every: Optional[int] = None,
+                 gate=None, resume: bool = False):
     """Compile ONE jitted shard_map program: init + ``lax.while_loop``.
 
     Signature (all device inputs ``[nranks, ...]`` under ``P(WORLD_AXES)``):
     ``fn(b, x0, tol[g,1], max_it[g,1], *operands)``.  The iteration cap is a
     TRACED scalar -- only the history buffer length is static -- so a restart
     re-dispatch with the remaining budget reuses the same executable.
+
+    ``checkpoint_every=N`` carries a solver-state snapshot in the loop
+    carry, refreshed every N clean iterations (zero extra dispatches), and
+    appends it to the outputs as four packed arrays -- the fuel for
+    host-side resume after an integrity failure.  ``resume=True`` builds the
+    companion entry point ``fn(b, ck_vec, ck_f, ck_i, ck_hist, tol,
+    max_it, *operands)`` that reconstructs the carry from a checkpoint and
+    enters the SAME loop body: no init matvec, history/iteration/matvec
+    counters continue exactly where the snapshot left them, so a resumed
+    trajectory is bitwise the clean run's continuation.  ``gate`` --
+    ``(top_clean, active_calls)`` -- selects per matvec call index between
+    the faulted and clean lowerings of the operator, which is what lets a
+    ``FaultPlan.active_calls`` schedule interrupt a fused solve mid-loop.
+    With all three off, the trace is unchanged from the pre-resume program.
     """
     import jax
     import jax.numpy as jnp
@@ -240,63 +262,120 @@ def _build_fused(top, shard_dot, solver: str, hist_len: int, eps: float,
     from repro.comm.topology import WORLD_AXES
     from repro.compat import shard_map
 
-    def program(b, x0, tolt, maxitt, *ops):
-        tol = tolt[0, 0]
-        max_it = maxitt[0, 0]
-        fdt = b.dtype
+    ce = checkpoint_every
 
-        def mv(vec):
-            w, vv = top.matvec_verified(vec, *ops)
-            return w, vv
-
-        def dot(u, w):
-            return shard_dot(u, w)
-
-        one = jnp.asarray(1.0, fdt)
-        Ax, vv0 = mv(x0)
-        r = b - Ax
-        bnorm = jnp.sqrt(jnp.maximum(dot(b, b), 0.0))
-        rs = dot(r, r)
-        rel0 = jnp.sqrt(jnp.maximum(rs, 0.0)) / bnorm
-        hist = jnp.full((hist_len,), jnp.nan, fdt).at[0].set(rel0)
-        viols = jnp.zeros((nviol,), jnp.float32)
-        if vv0.size:
-            viols = jnp.maximum(viols, vv0)
-        done0 = rel0 <= tol
-        status0 = jnp.where(done0, _CONV, _MAXITER).astype(jnp.int32)
-        i0 = jnp.int32(0)
-        k0 = jnp.int32(1)
-        mv0 = jnp.int32(1)
-
-        if solver == "cg":
-            body = _cg_body(mv, dot, tol, bnorm, hist_len)
-            #        x,  r, p, rs, best, best_x, best_it, it, k
-            carry = (x0, r, r, rs, rel0, x0, i0, i0, k0, hist, status0,
-                     done0, mv0, viols)
-            best_x_idx, it_idx = 5, 7
-            k_idx, st_idx, done_idx, mv_idx, viol_idx = 8, 10, 11, 12, 13
+    def make_mv(ops):
+        if gate is None:
+            def mv(vec, call_idx):
+                return top.matvec_verified(vec, *ops)
         else:
-            body = _bicgstab_body(
-                mv, dot, tol, bnorm, r, rel0 * bnorm,
-                jnp.asarray(eps, fdt), hist_len,
-            )
-            zero = jnp.zeros_like(b)
-            #        x,  r, p,    v,    rho, alpha, omega, relprev, best,
-            #        best_x, best_it, it, k
-            carry = (x0, r, zero, zero, one, one, one, rel0, rel0, x0, i0,
-                     i0, k0, hist, status0, done0, mv0, viols)
-            best_x_idx, it_idx = 9, 11
-            k_idx, st_idx, done_idx, mv_idx, viol_idx = 12, 14, 15, 16, 17
+            top_clean, active = gate
+
+            def mv(vec, call_idx):
+                wf, vf = top.matvec_verified(vec, *ops)
+                wc, vc = top_clean.matvec_verified(vec, *ops)
+                use = jnp.zeros((), bool)
+                for c in active:
+                    use = use | (call_idx == jnp.int32(c))
+                w = jnp.where(use, wf, wc)
+                vv = jnp.where(use, vf, vc) if vf.size else vf
+                return w, vv
+
+        return mv
+
+    def global_clean(jnp_mod, viols):
+        """True iff NO shard has recorded a violation.  ``viols`` is the one
+        per-shard carry component (each chip verifies its own halo), so any
+        checkpoint decision derived from it must be all-reduced -- otherwise
+        shards that did not see the corrupted halo keep snapshotting
+        post-fault state and the harvested checkpoint mixes iterations."""
+        return jax.lax.pmax(jnp_mod.max(viols), WORLD_AXES) == 0.0
+
+    def run_loop(jnp_mod, carry, body, it_idx, done_idx, viol_idx, max_it,
+                 snapshot):
+        """The while_loop, optionally wrapped with the checkpoint carry."""
 
         def cond(c):
             return (~c[done_idx]) & (c[it_idx] < max_it)
 
-        out = jax.lax.while_loop(cond, body, carry)
+        if ce is None:
+            return jax.lax.while_loop(cond, body, carry), None
+
+        ck0 = snapshot(carry)
+
+        def body_ck(cc):
+            inner, ck = cc
+            prev_it = inner[it_idx]
+            out = body(inner)
+            take = (
+                (~out[done_idx])
+                & (out[it_idx] % jnp_mod.int32(ce) == 0)
+                & (out[it_idx] > prev_it)
+                & global_clean(jnp_mod, out[viol_idx])
+            )
+            fresh = snapshot(out)
+            new_ck = tuple(
+                jnp_mod.where(take, a, b) for a, b in zip(fresh, ck)
+            )
+            return out, new_ck
+
+        def cond_ck(cc):
+            return cond(cc[0])
+
+        return jax.lax.while_loop(cond_ck, body_ck, (carry, ck0))
+
+    def solve_from(b, carry_parts, tolt, maxitt, ops):
+        """Shared tail: build the body, run the loop, pack the outputs."""
+        tol = tolt[0, 0]
+        max_it = maxitt[0, 0]
+        mv = make_mv(ops)
+
+        def dot(u, w):
+            return shard_dot(u, w)
+
+        (carry, bnorm, rhat, rhat_nrm, fdt) = carry_parts(mv, dot, tol)
+
+        if solver == "cg":
+            body = _cg_body(mv, dot, tol, bnorm, hist_len)
+            best_x_idx, it_idx = 5, 7
+            k_idx, st_idx, done_idx, mv_idx, viol_idx = 8, 10, 11, 12, 13
+
+            def snapshot(c):
+                flag = global_clean(jnp, c[viol_idx]).astype(jnp.int32)
+                ck_vec = jnp.stack([c[0], c[1], c[2], c[best_x_idx]], axis=1)
+                ck_f = jnp.stack([c[3], c[4]])[None].astype(fdt)
+                ck_i = jnp.stack(
+                    [c[it_idx], c[k_idx], c[6], c[mv_idx], flag]
+                )[None].astype(jnp.int32)
+                return ck_vec, ck_f, ck_i, c[9][None]
+        else:
+            body = _bicgstab_body(
+                mv, dot, tol, bnorm, rhat, rhat_nrm,
+                jnp.asarray(eps, fdt), hist_len,
+            )
+            best_x_idx, it_idx = 9, 11
+            k_idx, st_idx, done_idx, mv_idx, viol_idx = 12, 14, 15, 16, 17
+
+            def snapshot(c):
+                flag = global_clean(jnp, c[viol_idx]).astype(jnp.int32)
+                ck_vec = jnp.stack(
+                    [c[0], c[1], c[2], c[3], c[best_x_idx], rhat], axis=1
+                )
+                ck_f = jnp.stack(
+                    [c[4], c[5], c[6], c[7], c[8], rhat_nrm]
+                )[None].astype(fdt)
+                ck_i = jnp.stack(
+                    [c[it_idx], c[k_idx], c[10], c[mv_idx], flag]
+                )[None].astype(jnp.int32)
+                return ck_vec, ck_f, ck_i, c[13][None]
+
+        out, ck = run_loop(jnp, carry, body, it_idx, done_idx, viol_idx,
+                           max_it, snapshot)
 
         def tile(a, dt):
             return jnp.reshape(a.astype(dt), (1, 1))
 
-        return (
+        packed = (
             out[0],                                 # x        [1, L]
             out[best_x_idx],                        # best_x   [1, L]
             out[k_idx + 1][None],                   # hist     [1, hist_len]
@@ -306,14 +385,81 @@ def _build_fused(top, shard_dot, solver: str, hist_len: int, eps: float,
             tile(out[mv_idx], jnp.int32),           # matvecs  [1, 1]
             out[viol_idx][None],                    # viols    [1, nviol]
         )
+        if ce is not None:
+            packed = packed + tuple(ck)
+        return packed
 
-    n_in = 4 + len(top.operands)
+    def program(b, x0, tolt, maxitt, *ops):
+        fdt = b.dtype
+
+        def carry_parts(mv, dot, tol):
+            one = jnp.asarray(1.0, fdt)
+            Ax, vv0 = mv(x0, jnp.int32(0))
+            r = b - Ax
+            bnorm = jnp.sqrt(jnp.maximum(dot(b, b), 0.0))
+            rs = dot(r, r)
+            rel0 = jnp.sqrt(jnp.maximum(rs, 0.0)) / bnorm
+            hist = jnp.full((hist_len,), jnp.nan, fdt).at[0].set(rel0)
+            viols = jnp.zeros((nviol,), jnp.float32)
+            if vv0.size:
+                viols = jnp.maximum(viols, vv0)
+            done0 = rel0 <= tol
+            status0 = jnp.where(done0, _CONV, _MAXITER).astype(jnp.int32)
+            i0 = jnp.int32(0)
+            k0 = jnp.int32(1)
+            mv0 = jnp.int32(1)
+            if solver == "cg":
+                #        x,  r, p, rs, best, best_x, best_it, it, k
+                carry = (x0, r, r, rs, rel0, x0, i0, i0, k0, hist, status0,
+                         done0, mv0, viols)
+                return carry, bnorm, None, None, fdt
+            zero = jnp.zeros_like(b)
+            #        x,  r, p,    v,    rho, alpha, omega, relprev, best,
+            #        best_x, best_it, it, k
+            carry = (x0, r, zero, zero, one, one, one, rel0, rel0, x0, i0,
+                     i0, k0, hist, status0, done0, mv0, viols)
+            return carry, bnorm, r, rel0 * bnorm, fdt
+
+        return solve_from(b, carry_parts, tolt, maxitt, ops)
+
+    def program_resume(b, ckv, ckf, cki, ckh, tolt, maxitt, *ops):
+        fdt = b.dtype
+
+        def carry_parts(mv, dot, tol):
+            bnorm = jnp.sqrt(jnp.maximum(dot(b, b), 0.0))
+            it = cki[0, 0]
+            k = cki[0, 1]
+            best_it = cki[0, 2]
+            mvc = cki[0, 3]
+            hist = ckh[0]
+            viols = jnp.zeros((nviol,), jnp.float32)
+            done0 = jnp.zeros((), bool)
+            status0 = jnp.asarray(_MAXITER, jnp.int32)
+            x, r, p = ckv[:, 0], ckv[:, 1], ckv[:, 2]
+            if solver == "cg":
+                rs, best = ckf[0, 0], ckf[0, 1]
+                best_x = ckv[:, 3]
+                carry = (x, r, p, rs, best, best_x, best_it, it, k, hist,
+                         status0, done0, mvc, viols)
+                return carry, bnorm, None, None, fdt
+            rho, alpha, omega = ckf[0, 0], ckf[0, 1], ckf[0, 2]
+            relprev, best = ckf[0, 3], ckf[0, 4]
+            v, best_x, rhat = ckv[:, 3], ckv[:, 4], ckv[:, 5]
+            carry = (x, r, p, v, rho, alpha, omega, relprev, best, best_x,
+                     best_it, it, k, hist, status0, done0, mvc, viols)
+            return carry, bnorm, rhat, ckf[0, 5], fdt
+
+        return solve_from(b, carry_parts, tolt, maxitt, ops)
+
+    fn = program_resume if resume else program
+    n_in = (7 if resume else 4) + len(top.operands)
+    n_out = 8 if ce is None else 12
     return jax.jit(
         shard_map(
-            program,
+            fn,
             mesh=top.mesh,
             in_specs=(P(WORLD_AXES),) * n_in,
-            out_specs=(P(WORLD_AXES),) * 8,
+            out_specs=(P(WORLD_AXES),) * n_out,
             check_vma=False,
         )
     )
@@ -324,12 +470,17 @@ def _build_fused(top, shard_dot, solver: str, hist_len: int, eps: float,
 # ---------------------------------------------------------------------------
 
 
-def _fused_entry(op, solver: str, maxiter: int, dtype, compressor):
+def _fused_entry(op, solver: str, maxiter: int, dtype, compressor,
+                 checkpoint_every: Optional[int] = None,
+                 resume: bool = False):
     """Fetch (or build) the compiled whole-solve program for ``op``.
 
     The key is derived from the operator's configuration alone -- the
     expensive lowering (:func:`traceable_operator`: device transfer of plan
-    arrays, blocks, masks) runs only on a miss.
+    arrays, blocks, masks) runs only on a miss.  ``resume=True`` fetches
+    the checkpoint-resume companion entry point (requires
+    ``checkpoint_every``); the two share a key prefix but compile
+    separately.
     """
     faults = getattr(op, "faults", None)
     mesh = getattr(op, "mesh", None)
@@ -341,15 +492,26 @@ def _fused_entry(op, solver: str, maxiter: int, dtype, compressor):
         faults.fingerprint() if faults is not None else None,
         op.message_cap_bytes, mesh_key, int(maxiter), str(dtype),
         None if compressor is None else str(compressor),
+        checkpoint_every, "resume" if resume else "fwd",
     )
 
     def build():
         top = traceable_operator(op)
+        gate = None
+        if faults is not None and faults.active_calls is not None:
+            # call-indexed fault schedule: trace BOTH lowerings and select
+            # per matvec call, so a transient plan can interrupt the loop
+            # mid-solve (operand layouts are identical -- fault masks are
+            # trace constants and plan arrays ignore faults)
+            top_clean = traceable_operator(dataclasses.replace(op, faults=None))
+            gate = (top_clean, faults.active_calls)
         shard_dot = traceable_dot(compressor)
         nviol = len(top.verifier.checks) if top.verifier is not None else 1
         eps = float(np.finfo(dtype).eps)
         hist_len = int(maxiter) + 1
-        fn = _build_fused(top, shard_dot, solver, hist_len, eps, nviol)
+        fn = _build_fused(top, shard_dot, solver, hist_len, eps, nviol,
+                          checkpoint_every=checkpoint_every, gate=gate,
+                          resume=resume)
         return fn, top
 
     return comm_strategies.fused_cached(key, build)
@@ -362,7 +524,7 @@ def _dispatch(fn, top, b_dev, x0_dev, tol: float, max_it: int, dtype):
     tolt = jnp.full((g, 1), tol, dtype)
     maxitt = jnp.full((g, 1), max_it, jnp.int32)
     outs = fn(b_dev, x0_dev, tolt, maxitt, *top.operands)
-    x, best_x, hist, it, k, status, mvc, viols = outs
+    x, best_x, hist, it, k, status, mvc, viols = outs[:8]
     if top.verifier is not None:
         top.verifier.raise_viols(np.asarray(viols))
     k = int(np.asarray(k)[0, 0])
@@ -376,8 +538,77 @@ def _dispatch(fn, top, b_dev, x0_dev, tol: float, max_it: int, dtype):
     )
 
 
+class _Checkpoint(NamedTuple):
+    """Harvested solver-state snapshot (device arrays + host counters)."""
+
+    vec: object  # [g, nvec, L]
+    f: object    # [g, nf]
+    i: object    # [g, 5] int32: it, k, best_it, mvc, valid
+    hist: object  # [g, hist_len]
+    it: int
+    k: int
+    mvc: int
+
+
+def _harvest(prev: Optional[_Checkpoint], outs) -> Optional[_Checkpoint]:
+    """Keep the newest VALID checkpoint across dispatches (a failed resume
+    attempt may still have advanced past the one it started from)."""
+    ckv, ckf, cki, ckh = outs[8:12]
+    i_np = np.asarray(cki)
+    if int(i_np[0, 4]) != 1:
+        return prev
+    it = int(i_np[0, 0])
+    if prev is not None and prev.it >= it:
+        return prev
+    return _Checkpoint(ckv, ckf, cki, ckh, it=it, k=int(i_np[0, 1]),
+                       mvc=int(i_np[0, 3]))
+
+
+def _raw_forward(fn, top, b_dev, x0_dev, tol: float, max_it: int, dtype):
+    import jax.numpy as jnp
+
+    g = top.topo.nranks
+    tolt = jnp.full((g, 1), tol, dtype)
+    maxitt = jnp.full((g, 1), max_it, jnp.int32)
+    return fn(b_dev, x0_dev, tolt, maxitt, *top.operands)
+
+
+def _raw_resume(fn, top, b_dev, ck: _Checkpoint, tol: float, max_it: int,
+                dtype):
+    import jax.numpy as jnp
+
+    g = top.topo.nranks
+    tolt = jnp.full((g, 1), tol, dtype)
+    maxitt = jnp.full((g, 1), max_it, jnp.int32)
+    return fn(b_dev, ck.vec, ck.f, ck.i, ck.hist, tolt, maxitt, *top.operands)
+
+
+def _viol_error(top, viols_np):
+    """The structured error a violation vector encodes, or None if clean."""
+    if top.verifier is None:
+        return None
+    try:
+        top.verifier.raise_viols(viols_np)
+    except ExchangeIntegrityError as e:
+        return e
+    return None
+
+
+def _unpack(outs):
+    hist_k = int(np.asarray(outs[4])[0, 0])
+    return (
+        outs[0],
+        outs[1],
+        [float(h) for h in np.asarray(outs[2])[0, :hist_k]],
+        int(np.asarray(outs[3])[0, 0]),
+        int(np.asarray(outs[5])[0, 0]),
+        int(np.asarray(outs[6])[0, 0]),
+    )
+
+
 def _fused_solve(op, b, x0, tol: float, maxiter: int, reductions,
-                 solver: str) -> SolveResult:
+                 solver: str, checkpoint_every: Optional[int] = None
+                 ) -> SolveResult:
     import jax.numpy as jnp
 
     compressor = getattr(reductions, "compressor", None)
@@ -385,6 +616,10 @@ def _fused_solve(op, b, x0, tol: float, maxiter: int, reductions,
     g, L = op.topo.nranks, op.rows_per_rank
     if b.shape != (g, L):
         raise ValueError(f"b must be [{g}, {L}], got {tuple(b.shape)}")
+    if checkpoint_every is not None and checkpoint_every < 1:
+        raise ValueError(
+            f"checkpoint_every must be >= 1, got {checkpoint_every}"
+        )
     rc0 = _recovery_baseline(op)
     if not np.any(b):
         # mirror the host solvers' zero-rhs early return (same
@@ -393,7 +628,6 @@ def _fused_solve(op, b, x0, tol: float, maxiter: int, reductions,
                            residuals=(0.0,), matvecs=0,
                            status=_finish_status("converged", 0, op, rc0))
     dtype = b.dtype
-    fn, top = _fused_entry(op, solver, maxiter, dtype, compressor)
     b_dev = jnp.asarray(b)
     x0_arr = (
         np.zeros_like(b) if x0 is None
@@ -402,6 +636,12 @@ def _fused_solve(op, b, x0, tol: float, maxiter: int, reductions,
     # the program always runs the init matvec (for x0=0 it computes
     # b - A@0 = b exactly); the host loops only count it when x0 is given
     init_mv_adjust = 1 if x0 is None else 0
+    if checkpoint_every is not None:
+        return _fused_solve_resumable(
+            op, b, b_dev, x0_arr, tol, maxiter, dtype, compressor, solver,
+            checkpoint_every, rc0, init_mv_adjust,
+        )
+    fn, top = _fused_entry(op, solver, maxiter, dtype, compressor)
 
     x, best_x, hist, it, status, mvc, = _dispatch(
         fn, top, b_dev, jnp.asarray(x0_arr), tol, maxiter, dtype
@@ -446,8 +686,148 @@ def _fused_solve(op, b, x0, tol: float, maxiter: int, reductions,
     )
 
 
+def _fused_solve_resumable(op, b, b_dev, x0_arr, tol: float, maxiter: int,
+                           dtype, compressor, solver: str, ce: int, rc0,
+                           init_mv_adjust: int) -> SolveResult:
+    """The checkpoint/resume host wrapper around the fused program.
+
+    A clean dispatch behaves exactly like the legacy path (the checkpoint
+    rides the loop carry -- zero extra dispatches).  On an integrity
+    failure the wrapper harvests the newest pre-fault checkpoint and runs
+    the recovery ladder where each attempt RESUMES the fused program --
+    first on the same (strategy, codec), then demoted, then re-advised --
+    so recovery loses at most ``checkpoint_every`` iterations.  If the
+    ladder is exhausted it falls back to the host loop (which carries its
+    own per-halo ladder) from the same checkpoint.  ``SolveResult.status``
+    records ``+resume:<n>``.
+    """
+    import jax.numpy as jnp
+
+    fn, top = _fused_entry(op, solver, maxiter, dtype, compressor, ce)
+    outs = _raw_forward(fn, top, b_dev, jnp.asarray(x0_arr), tol, maxiter,
+                        dtype)
+    state = {"ck": _harvest(None, outs), "used": False}
+    err = _viol_error(top, np.asarray(outs[7]))
+    resumes = 0
+    final_op = op
+    if err is not None:
+        health = getattr(op, "health", None)
+        if health is None:
+            health = HealthTracker()
+        health.record_failure(err)
+
+        def attempt(s: str, w: str):
+            vop = (
+                op if (s == op.strategy and w == op.wire)
+                else dataclasses.replace(op, strategy=s, wire=w)
+            )
+            cur = state["ck"]
+            if cur is not None:
+                fnv, topv = _fused_entry(vop, solver, maxiter, dtype,
+                                         compressor, ce, resume=True)
+                o = _raw_resume(fnv, topv, b_dev, cur, tol, maxiter, dtype)
+            else:
+                fnv, topv = _fused_entry(vop, solver, maxiter, dtype,
+                                         compressor, ce)
+                o = _raw_forward(fnv, topv, b_dev, jnp.asarray(x0_arr), tol,
+                                 maxiter, dtype)
+            state["ck"] = _harvest(state["ck"], o)
+            e = _viol_error(topv, np.asarray(o[7]))
+            if e is not None:
+                raise e
+            state["used"] = cur is not None
+            return o, vop
+
+        try:
+            (outs, final_op), _path = run_ladder(
+                attempt,
+                strategy=op.strategy,
+                wire=op.wire,
+                health=health,
+                max_retries=getattr(op, "max_retries", 1),
+                fallback=getattr(op, "fallback", True),
+                choose_alternative=advise_alternative(op.partition.pattern),
+            )
+        except ExchangeIntegrityError:
+            return _host_resume_fallback(op, b, tol, maxiter, solver,
+                                         state["ck"], rc0, init_mv_adjust)
+        resumes = 1 if state["used"] else 0
+
+    x, best_x, hist, it, status, mvc = _unpack(outs)
+    restarts = 0
+    matvecs = mvc - init_mv_adjust
+    if status in _RESTART[solver]:
+        bad = _STATUS_STR[status]
+        restarts = 1
+        fnf, topf = _fused_entry(final_op, solver, maxiter, dtype,
+                                 compressor, ce)
+        o2 = _raw_forward(fnf, topf, b_dev, best_x, tol, maxiter - it, dtype)
+        e2 = _viol_error(topf, np.asarray(o2[7]))
+        if e2 is not None:
+            raise e2
+        x, _, hist2, it2, status2, mvc2 = _unpack(o2)
+        hist = hist + hist2
+        it = it + it2
+        matvecs += mvc2
+        if not np.isfinite(hist2[0]):
+            status_str, converged = bad, False
+        elif status2 == _CONV:
+            status_str, converged = "converged", True
+        elif status2 == _MAXITER:
+            status_str, converged = "maxiter", False
+        else:
+            status_str, converged = _STATUS_STR[status2], False
+    else:
+        status_str = _STATUS_STR[status]
+        converged = status == _CONV
+
+    if resumes:
+        status_str += f"+resume:{resumes}"
+    return SolveResult(
+        x=np.asarray(x),
+        converged=converged,
+        iterations=it,
+        residuals=tuple(hist),
+        matvecs=matvecs,
+        status=_finish_status(status_str, restarts, op, rc0),
+        restarts=restarts,
+    )
+
+
+def _host_resume_fallback(op, b, tol: float, maxiter: int, solver: str,
+                          ck: Optional[_Checkpoint], rc0,
+                          init_mv_adjust: int) -> SolveResult:
+    """Ladder-exhausted last resort: continue on the host loop (whose
+    ``halo`` carries its own per-exchange ladder) from the checkpoint,
+    stitching the fused history prefix onto the host continuation."""
+    from repro.solve import krylov
+
+    host = krylov.cg if solver == "cg" else krylov.bicgstab
+    if ck is None:
+        res = host(op, b, tol=tol, maxiter=maxiter)
+        base = res.status.split("+")[0]
+        return dataclasses.replace(
+            res, status=_finish_status(base + "+resume:0", res.restarts, op,
+                                       rc0),
+        )
+    x0h = np.asarray(ck.vec)[:, 0, :]
+    prefix = [float(h) for h in np.asarray(ck.hist)[0, :ck.k]]
+    res = host(op, b, x0=x0h, tol=tol, maxiter=maxiter - ck.it)
+    base = res.status.split("+")[0]
+    return SolveResult(
+        x=np.asarray(res.x),
+        converged=res.converged,
+        iterations=ck.it + res.iterations,
+        residuals=tuple(prefix + list(res.residuals[1:])),
+        matvecs=ck.mvc - init_mv_adjust + res.matvecs,
+        status=_finish_status(base + "+resume:1", res.restarts, op, rc0),
+        restarts=res.restarts,
+    )
+
+
 def fused_cg(op, b, x0=None, tol: float = 1e-6, maxiter: int = 500,
-             reductions=None) -> SolveResult:
+             reductions=None,
+             checkpoint_every: Optional[int] = None) -> SolveResult:
     """Whole-solve CG: one jitted ``lax.while_loop`` per solve.
 
     Drop-in for :func:`repro.solve.krylov.cg` (same contract, same
@@ -458,17 +838,29 @@ def fused_cg(op, b, x0=None, tol: float = 1e-6, maxiter: int = 500,
     hierarchical tree itself is traced inline); pass the
     :class:`~repro.solve.reductions.DeviceReductions` you would hand the
     host loop.
+
+    ``checkpoint_every=N`` arms fault tolerance: the loop carries a
+    solver-state snapshot refreshed every N clean iterations, and an
+    ``ExchangeIntegrityError`` surfaced by a ``verify=True`` operator is
+    recovered host-side -- the ladder re-runs the fused program from the
+    checkpoint on a healthy (strategy, codec), falling back to the host
+    loop -- losing at most N iterations (``status`` gains ``+resume:<n>``).
+    Fault-free solves behave identically either way.
     """
-    return _fused_solve(op, b, x0, tol, maxiter, reductions, "cg")
+    return _fused_solve(op, b, x0, tol, maxiter, reductions, "cg",
+                        checkpoint_every)
 
 
 def fused_bicgstab(op, b, x0=None, tol: float = 1e-6, maxiter: int = 500,
-                   reductions=None) -> SolveResult:
+                   reductions=None,
+                   checkpoint_every: Optional[int] = None) -> SolveResult:
     """Whole-solve BiCGStab: one jitted ``lax.while_loop`` per solve.
 
-    Drop-in for :func:`repro.solve.krylov.bicgstab`; see :func:`fused_cg`.
+    Drop-in for :func:`repro.solve.krylov.bicgstab`; see :func:`fused_cg`
+    (including ``checkpoint_every`` checkpoint/resume fault tolerance).
     """
-    return _fused_solve(op, b, x0, tol, maxiter, reductions, "bicgstab")
+    return _fused_solve(op, b, x0, tol, maxiter, reductions, "bicgstab",
+                        checkpoint_every)
 
 
 FUSED_SOLVERS = {"cg": fused_cg, "bicgstab": fused_bicgstab}

@@ -65,6 +65,13 @@ class SolveResult:
     ``"+exchange:<action>:<strategy>/<codec>"`` suffix when the operator's
     exchange recovered through the fault ladder
     (:func:`repro.comm.faults.run_ladder`) during the solve.
+
+    The fused whole-solve path (:func:`repro.solve.fused.fused_cg` /
+    :func:`repro.solve.fused.fused_bicgstab` with ``checkpoint_every``)
+    additionally appends ``"+resume:<n>"`` when an integrity failure
+    interrupted the on-device loop and the solve continued from its
+    in-carry checkpoint, losing at most ``checkpoint_every`` iterations;
+    suffix order is ``base[+resume][+restart][+exchange]``.
     """
 
     x: np.ndarray

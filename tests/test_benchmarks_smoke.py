@@ -79,6 +79,8 @@ def test_record_never_written_by_failing_or_partial_runs(tmp_path):
     # schema 4: the serving acceptance record rides every full write
     assert written["serving"]["speedup"] >= 3.0
     assert len(written["serving"]["trace_hash"]) == 40
+    # schema 6: so does the serving-chaos record (jax-free, deterministic)
+    assert written["serving_chaos"]["completion_rate"] >= 0.99
 
 
 @pytest.mark.slow
@@ -122,6 +124,7 @@ def test_benchmarks_run_smoke():
         "kernel/spmm_ell/interpret/k4",  # kernels
         "chaos/two_step/bf16",  # chaos: recovery ladder sweep
         "chaos/split/bf16",
+        "chaosserve/storm",  # chaos: serving executor under a fault storm
         "chaosverify/two_step/bf16",  # chaos: verify-mode overhead
         "moestats/8r/uniform",  # moe_dispatch: routing economics
         "moe/8r/uniform/all_to_all/none",  # moe_dispatch: baseline column
@@ -186,6 +189,15 @@ def test_benchmarks_run_smoke():
         assert got == want and int(want) > 0, (strat, codec, got, want)
     assert re.search(r"chaosverify/\w+/\w+,.*parity=ok", out)
 
+    # the serving-chaos storm's acceptance property in miniature: the
+    # executor ladder completes >= 99% of admitted requests under the
+    # seeded fault storm (the ISSUE 10 bar), with every injected fault
+    # either recovered or accounted for as a shed
+    m = re.search(r"chaosserve/storm,.*completed=(\d+)/(\d+)", out)
+    assert m, f"chaosserve row unparsable\n{out[-2000:]}"
+    done, admitted = int(m.group(1)), int(m.group(2))
+    assert admitted > 0 and done / admitted >= 0.99, m.group(0)
+
     # the MoE dispatch sweep's acceptance properties in miniature: every
     # measured (strategy, codec) row passed its parity check against the
     # all-to-all baseline, and the jittering skewed load held the plan
@@ -220,7 +232,7 @@ def test_benchmarks_run_smoke():
     # machine-readable record: schema, per-section timings, wire counters
     with open(BENCH_JSON) as f:
         report = json.load(f)
-    assert report["schema"] == 5
+    assert report["schema"] == 6
     assert report["smoke"] is True
     assert report["failures"] == []
     for name, sec in report["sections"].items():
@@ -291,3 +303,16 @@ def test_benchmarks_run_smoke():
     assert fs["host"]["status"] == fs["fused"]["status"], fs
     assert fs["fused"]["us_per_iter"] < fs["host"]["us_per_iter"], fs
     assert fs["cache"] == {"plan_misses": 1, "fused_misses": 1, "fused_hits": 1}
+
+    # schema 6: the serving-chaos record -- the executor recovery ladder
+    # holds the >= 99% completion acceptance bar under the seeded storm,
+    # the tallies are internally consistent, and the deterministic trace
+    # hash is committed (a diff = different fault-handling decisions)
+    sc = report["serving_chaos"]
+    assert sc["admitted"] == sc["completed"] + sc["shed"] > 0, sc
+    assert sc["completion_rate"] >= 0.99, sc
+    assert sc["fault_events"] >= sc["recoveries"] >= 0, sc
+    assert sc["probes"] >= sc["probe_recoveries"] >= 0, sc
+    assert 0.0 <= sc["shed_rate"] <= 1.0 - sc["completion_rate"] + 1e-9, sc
+    assert 0.0 <= sc["deadline_miss_rate"] <= 1.0, sc
+    assert len(sc["trace_hash"]) == 40

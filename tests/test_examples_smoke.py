@@ -18,6 +18,7 @@ EXAMPLES = os.path.join(REPO, "examples")
 
 #: smoke-sized arguments per example (keep each file under ~1 minute)
 ARGS = {
+    "chaos_serving.py": [],
     "krylov_solve.py": ["--fused"],
     "quickstart.py": [],
     "strategy_advisor.py": ["--messages", "32", "--nodes", "4", "--payload-width", "8"],
@@ -28,6 +29,7 @@ ARGS = {
 
 #: a line that must appear in stdout when the example succeeded
 EXPECT = {
+    "chaos_serving.py": "chaos serving",
     "krylov_solve.py": "fused whole-solve",
     "quickstart.py": "split",  # strategy table printed after execution
     "strategy_advisor.py": "best strategy",

@@ -1,0 +1,556 @@
+"""Serving-grade fault tolerance (ISSUE 10).
+
+Four layers under test, all deterministic:
+
+* the :class:`repro.comm.faults.HealthTracker` circuit breaker
+  (closed -> open -> half-open, call-count cooldown, doubled cooldown on a
+  failed probe) and its capped event ring buffer;
+* the resilient executor drain (:meth:`BatchExecutor.execute_resilient` /
+  :meth:`run_schedule`): structured :class:`BatchOutcome` per batch,
+  per-batch deadline, bounded backoff, shed bookkeeping feeding the shared
+  admission/watchdog escalation budget;
+* chaos in the traffic simulator (``SimConfig(chaos=FaultPlan(...))``) and
+  the ISSUE 10 acceptance storm: >= 99% of admitted requests complete with
+  results numerically equal to a fault-free run;
+* fused-solve checkpoint/resume (slow, 8 forced host devices): a solve
+  interrupted mid-flight resumes losing at most ``checkpoint_every``
+  iterations with residual history bitwise equal to the clean run, and the
+  fault-free armed program stays bitwise identical to the unarmed one.
+"""
+
+import numpy as np
+import pytest
+
+from repro.comm import faults as F
+from repro.comm.exchange import execute_numpy, plan, random_pattern
+from repro.comm.topology import PodTopology
+from repro.core import advise, figure43_pattern
+from repro.core.advisor import healthy_alternatives
+from repro.runtime.watchdog import AdmissionController, StragglerWatchdog
+from repro.serving import BatchExecutor, SimConfig, WorkloadClass, simulate
+from repro.serving.batcher import Batch
+from repro.serving.request import Request
+from repro.testing import make_trace
+
+
+def _err(strategy="two_step", codec="bf16"):
+    return F.ExchangeIntegrityError(
+        strategy=strategy, codec=codec, stage_kind="a2a_pod",
+        op_index=0, round_index=0, violation=1.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreaker:
+    def test_full_cycle_closed_open_half_open_closed(self):
+        h = F.HealthTracker(cooldown=3)
+        key = ("two_step", "bf16")
+        assert h.breaker_state(*key) == "closed"
+        h.record_call()
+        h.record_failure(_err())
+        assert h.breaker_state(*key) == "open"
+        assert h.penalty(*key) == F.DEGRADED_PENALTY
+        for _ in range(2):
+            h.record_call()
+            assert h.breaker_state(*key) == "open"
+        h.record_call()  # cooldown elapsed: one probe earned
+        assert h.breaker_state(*key) == "half_open"
+        assert h.record_success(*key) is True
+        assert h.breaker_state(*key) == "closed"
+        assert h.failures == {} and h.penalty(*key) == 1.0
+        assert h.probe_recoveries == 1
+        # cooldown is back at base after a heal: a fresh trip waits 3 again
+        h.record_call()
+        h.record_failure(_err())
+        for _ in range(3):
+            h.record_call()
+        assert h.breaker_state(*key) == "half_open"
+
+    def test_failed_probe_doubles_cooldown(self):
+        h = F.HealthTracker(cooldown=2, cooldown_growth=2.0)
+        key = ("two_step", "bf16")
+        h.record_call()
+        h.record_failure(_err())
+        h.record_call()
+        h.record_call()
+        assert h.breaker_state(*key) == "half_open"
+        h.record_failure(_err())  # the probe itself fails
+        assert h.breaker_state(*key) == "open"
+        for _ in range(3):  # old cooldown (2) is no longer enough
+            h.record_call()
+            assert h.breaker_state(*key) == "open"
+        h.record_call()  # doubled cooldown (4) elapsed
+        assert h.breaker_state(*key) == "half_open"
+
+    def test_directly_set_failures_never_half_open(self):
+        h = F.HealthTracker(cooldown=1)
+        h.failures[("split", "none")] = 5  # imported degradation, no clock
+        for _ in range(10):
+            h.record_call()
+        assert h.breaker_state("split", "none") == "open"
+        assert h.record_success("split", "none") is False
+
+    def test_record_success_noop_unless_half_open(self):
+        h = F.HealthTracker(cooldown=4)
+        assert h.record_success("two_step", "bf16") is False  # closed
+        h.record_call()
+        h.record_failure(_err())
+        assert h.record_success("two_step", "bf16") is False  # open
+        assert h.failures[("two_step", "bf16")] == 1
+        assert h.probe_recoveries == 0
+
+    def test_advise_ranking_recovers_after_heal(self):
+        pat = figure43_pattern(2048, 256, 16)
+        h = F.HealthTracker(cooldown=1)
+        baseline = advise(pat, machine="lassen", health=h)
+        from repro.core.advisor import EXECUTABLE_STRATEGY
+
+        best = EXECUTABLE_STRATEGY[baseline.best.strategy]
+        h.record_call()
+        h.record_failure(_err(strategy=best, codec="none"))
+        sunk = advise(pat, machine="lassen", health=h)
+        assert EXECUTABLE_STRATEGY[sunk.best.strategy] != best
+        # the penalty is ranking-only: the sunk ranking still reports the
+        # physical model time, not the 1e6x-penalized sort key
+        assert sunk.best.predicted_time < 1.0
+        h.record_call()
+        assert h.breaker_state(best, "none") == "half_open"
+        assert h.record_success(best, "none")
+        healed = advise(pat, machine="lassen", health=h)
+        assert healed.best.key == baseline.best.key
+
+    def test_healthy_alternatives_breaker_aware(self):
+        ranked = advise(figure43_pattern(2048, 256, 16), machine="lassen").ranked
+        names = list(healthy_alternatives(ranked, None))
+        assert names[0] == "two_step" and len(names) == len(set(names))
+        # open: skipped entirely
+        h = F.HealthTracker()
+        h.failures[("two_step", "none")] = 1
+        assert "two_step" not in list(healthy_alternatives(ranked, h))
+        # half-open: yielded (it has earned exactly one probe)
+        hb = F.HealthTracker(cooldown=1)
+        hb.record_call()
+        hb.record_failure(_err(strategy="two_step", codec="none"))
+        hb.record_call()
+        assert hb.breaker_state("two_step", "none") == "half_open"
+        assert next(healthy_alternatives(ranked, hb)) == "two_step"
+        # current is always skipped
+        assert "two_step" not in list(
+            healthy_alternatives(ranked, None, current="two_step")
+        )
+
+
+class TestEventRingBuffer:
+    def test_cap_and_dropped_counter(self):
+        h = F.HealthTracker(max_events=8)
+        for i in range(30):
+            h.record_failure(_err(codec=f"c{i}"))
+        assert len(h.events) == 8
+        assert h.dropped == 22
+        # newest events survive, oldest were dropped
+        assert h.events[-1]["codec"] == "c29"
+        assert h.events[0]["codec"] == "c22"
+
+    def test_degraded_and_penalty_unaffected_by_eviction(self):
+        h = F.HealthTracker(max_events=4)
+        for i in range(20):
+            h.record_failure(_err(codec=f"c{i}"))
+        # every failed pair is still degraded/penalized even though its
+        # event left the ring buffer long ago
+        assert len(h.degraded()) == 20
+        assert h.penalty("two_step", "c0") == F.DEGRADED_PENALTY
+        assert h.is_degraded("two_step", "c0")
+
+
+# ---------------------------------------------------------------------------
+# resilient executor drain (jax-free: numpy exchange handlers)
+# ---------------------------------------------------------------------------
+
+
+def _exchange_fixture():
+    topo = PodTopology(npods=2, ppn=4)
+    rng = np.random.default_rng(0)
+    pats = {
+        f"t{i}": random_pattern(
+            np.random.default_rng(40 + i), topo, local_size=16, max_elems=4
+        )
+        for i in range(3)
+    }
+    x = rng.normal(size=(topo.nranks, 16)).astype(np.float32)
+    refs = {k: execute_numpy(plan("standard", p), x) for k, p in pats.items()}
+    return pats, x, refs
+
+
+def _batch(fp, rids=(0,), strategy="two_step", wire="none"):
+    return Batch(
+        fp=fp,
+        requests=tuple(Request(arrival=0.0, rid=r, fp=fp) for r in rids),
+        payload_width=len(rids),
+        resident_bytes=1024,
+        strategy=strategy,
+        wire=wire,
+        key=f"{strategy}/device_aware",
+        predicted_time=1e-4,
+        kind="spmv",
+    )
+
+
+def _family(pat, faults=None):
+    # one fault-call clock per handler family: retries and demotions see
+    # fresh call indices, exactly like the real exchange attempt sequence
+    counter = {"n": 0}
+
+    def make(strategy, wire):
+        def handler(payload):
+            idx = counter["n"]
+            counter["n"] += 1
+            return execute_numpy(
+                plan(strategy, pat), payload, wire=wire,
+                faults=faults, fault_call=idx, verify=True,
+            )
+
+        return handler
+
+    return make
+
+
+class TestResilientDrain:
+    def test_run_schedule_preserves_completed_work_on_keyerror(self):
+        pats, x, refs = _exchange_fixture()
+        ex = BatchExecutor()
+        ex.register_variants("t0", _family(pats["t0"]))
+        ex.register_variants("t2", _family(pats["t2"]))
+        batches = [_batch("t0", (0,)), _batch("ghost", (1, 2)), _batch("t2", (3,))]
+        outcomes = ex.run_schedule(batches, [x, x, x])
+        assert [o.ok for o in outcomes] == [True, False, True]
+        assert np.array_equal(outcomes[0].value, refs["t0"])
+        assert np.array_equal(outcomes[2].value, refs["t2"])
+        bad = outcomes[1]
+        assert isinstance(bad.error, KeyError)
+        assert bad.shed_rids == (1, 2)
+        assert ex.shed_batches == 1 and ex.shed_requests == 2
+
+    def test_run_schedule_survives_non_integrity_handler_bug(self):
+        pats, x, refs = _exchange_fixture()
+        ex = BatchExecutor()
+        ex.register_variants("t0", _family(pats["t0"]))
+
+        def buggy(payload):
+            raise ValueError("handler bug, not an integrity failure")
+
+        ex.register("t1", buggy)
+        outcomes = ex.run_schedule([_batch("t1", (0,)), _batch("t0", (1,))], [x, x])
+        assert not outcomes[0].ok and isinstance(outcomes[0].error, ValueError)
+        assert outcomes[1].ok and np.array_equal(outcomes[1].value, refs["t0"])
+
+    def test_ladder_recovery_and_outcome_fields(self):
+        pats, x, refs = _exchange_fixture()
+        storm = F.FaultPlan(
+            seed=5,
+            specs=(F.FaultSpec(kind="perturb", prob=1.0, frac=0.25,
+                               strategies=("two_step",)),),
+        )
+        ex = BatchExecutor(health=F.HealthTracker())
+        ex.register_variants("t0", _family(pats["t0"], faults=storm))
+        o = ex.execute_resilient(_batch("t0"), x)
+        assert o.ok and o.recovery is not None
+        assert o.recovery.startswith(("demote:", "readvise:"))
+        assert o.attempts >= 2
+        assert np.array_equal(o.value, refs["t0"])
+        assert ex.recovered_batches == 1
+
+    def test_transient_fault_cured_by_retry(self):
+        pats, x, refs = _exchange_fixture()
+        transient = F.FaultPlan(
+            seed=7, specs=(F.FaultSpec(kind="corrupt"),), active_calls=(0,)
+        )
+        ex = BatchExecutor()
+        ex.register_variants("t1", _family(pats["t1"], faults=transient))
+        o = ex.execute_resilient(_batch("t1", strategy="two_step", wire="none"), x)
+        assert o.ok and o.recovery == "retry:two_step/none"
+        assert o.attempts == 2
+        assert np.array_equal(o.value, refs["t1"])
+
+    def test_deadline_sheds_with_injectable_clock(self):
+        pats, x, _ = _exchange_fixture()
+        always = F.FaultPlan(seed=3, specs=(F.FaultSpec(kind="corrupt"),))
+        t = {"now": 0.0}
+
+        def clock():
+            t["now"] += 10.0  # every clock read burns 10 virtual seconds
+            return t["now"]
+
+        wd = StragglerWatchdog(budget=1)
+        adm = AdmissionController(watchdog=wd)
+        ex = BatchExecutor(
+            deadline_s=5.0, clock=clock, sleep=lambda s: None,
+            watchdog=wd, admission=adm,
+        )
+        ex.register_variants("t0", _family(pats["t0"], faults=always))
+        o = ex.execute_resilient(_batch("t0", rids=(7, 8)), x)
+        assert not o.ok and o.deadline_missed
+        assert o.shed_rids == (7, 8)
+        assert ex.deadline_misses == 1
+        # shed pressure reaches the shared escalation budget
+        assert adm.shed == 2 and adm.escalations == 1
+        assert any(e.get("kind") == "batch_shed" for e in wd.events)
+
+    def test_backoff_is_exponential_and_capped(self):
+        pats, x, _ = _exchange_fixture()
+        always = F.FaultPlan(seed=3, specs=(F.FaultSpec(kind="corrupt"),))
+        pauses = []
+        ex = BatchExecutor(
+            max_retries=3,
+            fallback=False,
+            backoff_base_s=0.1,
+            backoff_max_s=0.25,
+            clock=lambda: 0.0,
+            sleep=pauses.append,
+        )
+        ex.register_variants("t0", _family(pats["t0"], faults=always))
+        o = ex.execute_resilient(_batch("t0"), x)
+        assert not o.ok
+        assert pauses == [0.2, 0.25, 0.25]  # base * 2**failures, capped
+        assert o.backoff_s == pytest.approx(sum(pauses))
+
+    def test_fault_free_drain_matches_plain_execute_bitwise(self):
+        pats, x, refs = _exchange_fixture()
+        ex = BatchExecutor()
+        ex.register_variants("t0", _family(pats["t0"]))
+        b = _batch("t0")
+        o = ex.execute_resilient(b, x)
+        assert o.ok and o.recovery is None and o.attempts == 1
+        assert np.array_equal(o.value, ex.execute(b, x))
+        assert np.array_equal(o.value, refs["t0"])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: seeded fault storm through the serving layer
+# ---------------------------------------------------------------------------
+
+
+class TestFaultStormAcceptance:
+    def test_executor_storm_completes_all_with_fault_free_results(self):
+        """ISSUE 10 acceptance: >= 99% of admitted requests complete and
+        every completed result is numerically equal to a fault-free run."""
+        pats, x, refs = _exchange_fixture()
+        storm = F.FaultPlan(
+            seed=11,
+            specs=(
+                F.FaultSpec(kind="perturb", prob=0.4, frac=0.2,
+                            strategies=("two_step",)),
+                F.FaultSpec(kind="corrupt", prob=0.15, codecs=("lossy",)),
+            ),
+        )
+        ex = BatchExecutor(health=F.HealthTracker())
+        for k, p in pats.items():
+            ex.register_variants(k, _family(p, faults=storm))
+        names = sorted(pats)
+        batches = [
+            _batch(names[i % 3], rids=(i,), strategy="two_step")
+            for i in range(48)
+        ]
+        outcomes = ex.run_schedule(batches, [x] * len(batches))
+        admitted = sum(len(o.batch.requests) for o in outcomes)
+        done = sum(len(o.batch.requests) for o in outcomes if o.ok)
+        assert admitted == 48
+        assert done / admitted >= 0.99
+        for o in outcomes:
+            if o.ok:
+                assert np.array_equal(o.value, refs[o.batch.fp]), o.batch.fp
+        assert any(o.recovery for o in outcomes)  # the storm actually fired
+
+    def test_sim_storm_deterministic_and_covered_by_trace_hash(self):
+        topo = PodTopology(npods=2, ppn=4)
+        classes = {
+            f"s{i}": WorkloadClass.from_pattern(
+                random_pattern(np.random.default_rng(300 + i), topo,
+                               local_size=32, max_elems=4),
+                fp=f"s{i}",
+            )
+            for i in range(3)
+        }
+        trace = make_trace(11, 96, sorted(classes), pattern="burst", rate=4000.0)
+        storm = F.FaultPlan(
+            seed=11,
+            specs=(
+                F.FaultSpec(kind="perturb", prob=0.35, frac=0.1,
+                            strategies=("two_step",)),
+                F.FaultSpec(kind="slow", prob=0.1, delay_s=1e-3),
+            ),
+        )
+        cfg = SimConfig(chaos=storm, deadline_s=0.25, max_width=8,
+                        strategy="two_step")
+        clean = simulate(classes, trace,
+                         SimConfig(max_width=8, strategy="two_step"))
+        a = simulate(classes, trace, cfg)
+        b = simulate(classes, trace, cfg)
+        assert a.trace_hash == b.trace_hash  # chaos is deterministic
+        assert a.trace_hash != clean.trace_hash  # ...and covered by the hash
+        admitted = a.completed + a.shed
+        assert admitted == clean.completed == 96
+        assert a.completed / admitted >= 0.99
+        assert a.fault_events > 0 and a.recoveries > 0
+
+    def test_chaos_none_leaves_trace_unchanged(self):
+        topo = PodTopology(npods=2, ppn=4)
+        cls = WorkloadClass.from_pattern(
+            random_pattern(np.random.default_rng(100), topo,
+                           local_size=32, max_elems=4),
+            fp="a",
+        )
+        trace = make_trace(7, 32, ["a"], pattern="burst", rate=4000.0)
+        base = simulate({"a": cls}, trace, SimConfig(max_width=8))
+        off = simulate({"a": cls}, trace, SimConfig(max_width=8, chaos=None))
+        assert base.trace_hash == off.trace_hash
+
+
+# ---------------------------------------------------------------------------
+# slow: split-phase ladder coverage + fused checkpoint/resume (8 devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_split_phase_ladder_in_executor_drain(subproc):
+    """Recovery ladder through the overlap path: seeded faults fire inside
+    ``IrregularExchange.start()``/``finish()`` (the inter-pod phase of a
+    split-phase exchange) while the *executor's* ladder -- not the
+    exchange's own -- does the recovering via a variant handler family."""
+    subproc(
+        """
+import numpy as np
+from repro.comm.exchange import random_pattern, PodTopology
+from repro.comm.strategies import IrregularExchange
+from repro.comm import faults as F
+from repro.serving import BatchExecutor
+from repro.serving.batcher import Batch
+from repro.serving.request import Request
+
+topo = PodTopology(npods=4, ppn=2)
+pat = random_pattern(np.random.default_rng(3), topo, local_size=24)
+x = np.random.default_rng(0).standard_normal(
+    (topo.nranks, pat.local_size)).astype(np.float32)
+ref = np.asarray(IrregularExchange(pat, "standard", message_cap_bytes=256)(x))
+
+# persistent per-strategy fault; every variant exchange has its own ladder
+# DISABLED (max_retries=0, fallback=False) so recovery can only come from
+# the executor's run_ladder around the split-phase handler
+fp = F.FaultPlan(seed=7, specs=(F.FaultSpec(strategies=("two_step",)),))
+
+def family(strategy, wire):
+    ex = IrregularExchange(pat, strategy, message_cap_bytes=256, wire=wire,
+                           faults=fp, verify=True,
+                           max_retries=0, fallback=False)
+    def handler(payload):
+        h = ex.start(payload)           # inter-pod phase dispatches here
+        return np.asarray(h.finish())   # ...and merges here
+    return handler
+
+bex = BatchExecutor(health=F.HealthTracker())
+bex.register_variants("split-phase", family)
+batch = Batch(fp="split-phase",
+              requests=(Request(arrival=0.0, rid=0, fp="split-phase"),),
+              payload_width=1, resident_bytes=x.nbytes,
+              strategy="two_step", wire="bf16",
+              key="two_step/device_aware+wire:bf16",
+              predicted_time=1e-4, kind="spmv")
+o = bex.execute_resilient(batch, x)
+assert o.ok, o.error
+assert o.recovery is not None and o.recovery.startswith("readvise:"), o.recovery
+assert o.recovery.split(":")[1].split("/")[0] != "two_step"
+assert np.array_equal(o.value, ref)
+assert bex.health.is_degraded("two_step")
+
+# fault-free split-phase drain through the same machinery stays clean
+def family_clean(strategy, wire):
+    ex = IrregularExchange(pat, strategy, message_cap_bytes=256, wire=wire)
+    def handler(payload):
+        h = ex.start(payload)
+        return np.asarray(h.finish())
+    return handler
+
+bex2 = BatchExecutor()
+bex2.register_variants("split-phase", family_clean)
+clean_batch = Batch(fp="split-phase",
+                    requests=(Request(arrival=0.0, rid=0, fp="split-phase"),),
+                    payload_width=1, resident_bytes=x.nbytes,
+                    strategy="two_step", wire="none",
+                    key="two_step/device_aware",
+                    predicted_time=1e-4, kind="spmv")
+o2 = bex2.execute_resilient(clean_batch, x)
+assert o2.ok and o2.recovery is None and o2.attempts == 1
+assert np.array_equal(o2.value, ref)
+print("SPLIT-PHASE LADDER OK")
+""",
+        devices=8,
+    )
+
+
+@pytest.mark.slow
+def test_fused_checkpoint_resume_acceptance(subproc):
+    """ISSUE 10 acceptance: a fused solve interrupted mid-solve resumes
+    from its in-carry checkpoint, losing at most ``checkpoint_every``
+    iterations, with ``+resume`` in the status and residual history /
+    solution bitwise equal to the fault-free run -- and an armed but
+    fault-free program stays bitwise identical to the unarmed one."""
+    subproc(
+        """
+import numpy as np
+from repro.comm import faults as F
+from repro.comm.topology import PodTopology
+from repro.sparse import thermal_like, partition_csr
+from repro.solve import NumpySpMV, fused_bicgstab, fused_cg, spd_system
+
+rng = np.random.default_rng(0)
+topo = PodTopology(npods=2, ppn=4)
+A = spd_system(thermal_like(256, rng))
+part = partition_csr(A, topo)
+b = rng.standard_normal((topo.nranks, part.rows_per_rank)).astype(np.float32)
+
+clean = fused_cg(NumpySpMV(part, strategy="two_step", verify=True), b,
+                 tol=1e-6, maxiter=200)
+assert clean.status == "converged", clean.status
+
+# fault-free bitwise pin: arming the checkpoint slots must not perturb
+# the solver trajectory in any way
+armed = fused_cg(NumpySpMV(part, strategy="two_step", verify=True), b,
+                 tol=1e-6, maxiter=200, checkpoint_every=4)
+assert armed.status == clean.status
+assert armed.iterations == clean.iterations
+assert armed.residuals == clean.residuals
+assert armed.x.tobytes() == clean.x.tobytes()
+
+# storm: corrupt every DCI hop of call 7, mid-solve
+fp = F.FaultPlan(seed=5, specs=(F.FaultSpec(
+    kind="perturb", prob=1.0, frac=1.0, strategies=("two_step",)),),
+    active_calls=(7,))
+op = NumpySpMV(part, strategy="two_step", verify=True, faults=fp)
+res = fused_cg(op, b, tol=1e-6, maxiter=200, checkpoint_every=4)
+assert res.status.startswith("converged+resume:1"), res.status
+assert res.iterations == clean.iterations
+assert res.residuals == clean.residuals        # bitwise clean continuation
+assert res.x.tobytes() == clean.x.tobytes()
+# losing <= checkpoint_every iterations: the resume re-ran at most the
+# iterations since the last snapshot, visible in the matvec count
+assert res.matvecs <= clean.matvecs + 4 + 1, (res.matvecs, clean.matvecs)
+
+# same contract for BiCGStab
+clean_b = fused_bicgstab(NumpySpMV(part, strategy="two_step", verify=True),
+                         b, tol=1e-6, maxiter=200)
+fpb = F.FaultPlan(seed=5, specs=(F.FaultSpec(
+    kind="perturb", prob=1.0, frac=1.0, strategies=("two_step",)),),
+    active_calls=(9,))
+opb = NumpySpMV(part, strategy="two_step", verify=True, faults=fpb)
+res_b = fused_bicgstab(opb, b, tol=1e-6, maxiter=200, checkpoint_every=4)
+assert res_b.status.startswith(clean_b.status + "+resume:1"), res_b.status
+assert res_b.iterations == clean_b.iterations
+assert res_b.residuals == clean_b.residuals
+assert res_b.x.tobytes() == clean_b.x.tobytes()
+print("FUSED RESUME OK")
+""",
+        devices=8,
+    )
